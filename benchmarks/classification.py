@@ -1,0 +1,82 @@
+"""Fig. 9 analog: multi-label-style node classification. Real labeled
+graphs (Flickr/Youtube) are not bundled; we plant communities (SBM) and
+classify membership from embeddings with one-vs-rest logistic regression
+(numpy implementation — no sklearn in the container)."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from benchmarks.common import save
+from repro.core.api import EmbedConfig, embed_graph
+from repro.graph.csr import build_csr
+
+
+def sbm_graph(n_per: int, k: int, p_in: float, p_out: float, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    n = n_per * k
+    labels = np.repeat(np.arange(k), n_per)
+    rows, cols = [], []
+    for i in range(k):
+        for j in range(i, k):
+            p = p_in if i == j else p_out
+            a = np.arange(i * n_per, (i + 1) * n_per)
+            b = np.arange(j * n_per, (j + 1) * n_per)
+            mask = rng.random((n_per, n_per)) < p
+            if i == j:
+                mask = np.triu(mask, 1)
+            r, c = np.nonzero(mask)
+            rows.append(a[r]); cols.append(b[c])
+    src = np.concatenate(rows); dst = np.concatenate(cols)
+    edges = np.stack([src, dst], 1)
+    return build_csr(edges, n, undirected=True), labels
+
+
+def _logreg_ovr(x, y, k, epochs=200, lr=0.5):
+    """Tiny one-vs-rest logistic regression (full-batch GD)."""
+    n, d = x.shape
+    w = np.zeros((k, d)); b = np.zeros(k)
+    y1 = np.eye(k)[y]
+    for _ in range(epochs):
+        z = x @ w.T + b
+        p = 1 / (1 + np.exp(-z))
+        g = (p - y1) / n
+        w -= lr * (g.T @ x)
+        b -= lr * g.sum(0)
+    return w, b
+
+
+def _f1_scores(y_true, y_pred, k):
+    micro_tp = (y_pred == y_true).sum()
+    micro = micro_tp / len(y_true)          # accuracy == micro-F1 (single label)
+    f1s = []
+    for c in range(k):
+        tp = ((y_pred == c) & (y_true == c)).sum()
+        fp = ((y_pred == c) & (y_true != c)).sum()
+        fn = ((y_pred != c) & (y_true == c)).sum()
+        prec = tp / max(tp + fp, 1)
+        rec = tp / max(tp + fn, 1)
+        f1s.append(2 * prec * rec / max(prec + rec, 1e-9))
+    return float(micro), float(np.mean(f1s))
+
+
+def run(quick: bool = True) -> Dict:
+    g, labels = sbm_graph(128 if quick else 512, 4, 0.08, 0.005, seed=8)
+    cfg = EmbedConfig(dim=32, epochs=1, lr=0.05, delta=1e-4,
+                      max_len=40, min_len=10)
+    phi, _ = embed_graph(g, cfg)
+    rng = np.random.default_rng(0)
+    rec: Dict = {"ratios": {}}
+    n = len(labels)
+    for ratio in (0.1, 0.5, 0.9):
+        idx = rng.permutation(n)
+        n_tr = max(int(ratio * n), 8)
+        tr, te = idx[:n_tr], idx[n_tr:]
+        w, b = _logreg_ovr(phi[tr], labels[tr], 4)
+        pred = np.argmax(phi[te] @ w.T + b, -1)
+        micro, macro = _f1_scores(labels[te], pred, 4)
+        rec["ratios"][ratio] = {"micro_f1": micro, "macro_f1": macro}
+    save("classification", rec)
+    return rec

@@ -1,0 +1,31 @@
+"""Shared helpers for the benchmark harness."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from contextlib import contextmanager
+from typing import Any, Dict
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+@contextmanager
+def timer():
+    t = {}
+    t0 = time.perf_counter()
+    yield t
+    t["seconds"] = time.perf_counter() - t0
+
+
+def save(name: str, record: Dict[str, Any]) -> None:
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    path = os.path.join(ARTIFACTS, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1, default=float)
+
+
+def block(x):
+    import jax
+    return jax.block_until_ready(x)

@@ -1,0 +1,52 @@
+"""Fig. 5 analog: end-to-end embedding time — DistGER vs HuGE-D (full-path)
+vs routine walks (KnightKing-style), at CPU-container scale.
+
+The paper's headline: DistGER 6.56x over HuGE-D and 9.25x over KnightKing
+on an 8-machine cluster. Here the same three pipelines run on one host
+(partition -> sample -> train); the RELATIVE ordering is the claim under
+test: incremental computing must beat full-path recompute, and the
+info-terminated corpus must out-train the routine corpus per second.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import numpy as np
+
+from benchmarks.common import save, timer
+from repro.core.api import EmbedConfig, embed_graph
+from repro.core.corpus import generate_corpus
+from repro.core.huge_d import distger_spec, huge_d_spec, routine_spec
+from repro.core.transition import make_policy
+from repro.graph.generators import rmat_graph
+
+
+def run(quick: bool = True) -> Dict:
+    n = 1024 if quick else 8192
+    g = rmat_graph(n, 10, seed=0).with_edge_cm()
+    policy = make_policy("huge")
+    rec: Dict = {"nodes": n, "edges": g.num_edges}
+
+    # --- sampling phase: three walk engines over the same graph ----------
+    for name, spec in (("distger_incom", distger_spec()),
+                       ("huge_d_fullpath", huge_d_spec()),
+                       ("routine_L80", routine_spec())):
+        with timer() as t:
+            corpus = generate_corpus(g, policy=policy, spec=spec, seed=0,
+                                     delta=1e-3, min_rounds=2, max_rounds=6)
+        rec[f"sample_{name}_s"] = t["seconds"]
+        rec[f"sample_{name}_tokens"] = int(corpus.total_tokens)
+
+    # --- end-to-end: DistGER full pipeline --------------------------------
+    cfg = EmbedConfig(dim=64, epochs=1, lr=0.05, delta=1e-4,
+                      max_len=40, min_len=10)
+    with timer() as t:
+        embed_graph(g, cfg, num_shards=2)
+    rec["e2e_distger_s"] = t["seconds"]
+
+    rec["speedup_incom_vs_fullpath"] = (
+        rec["sample_huge_d_fullpath_s"] / rec["sample_distger_incom_s"])
+    save("e2e", rec)
+    return rec

@@ -1,0 +1,62 @@
+"""Fig. 12: generality — DeepWalk / node2vec / HuGE(+) on the same engine,
+with routine vs information-centric termination; walk time + corpus size +
+downstream AUC ratio."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from benchmarks.common import save, timer
+from repro.core.api import EmbedConfig, embed_graph, sample_corpus
+from repro.graph.generators import rmat_graph
+
+
+def _auc(graph, phi, seed=0):
+    rng = np.random.default_rng(seed)
+    indptr = np.asarray(graph.indptr)
+    indices = np.asarray(graph.indices)
+    n = graph.num_nodes
+    src = np.repeat(np.arange(n), np.diff(indptr))
+    k = min(1000, len(src))
+    pos_idx = rng.choice(len(src), size=k, replace=False)
+    pos = np.stack([src[pos_idx], indices[pos_idx]], 1)
+    adj = set(zip(src.tolist(), indices.tolist()))
+    neg = []
+    while len(neg) < k:
+        a, b = rng.integers(0, n, 2)
+        if a != b and (int(a), int(b)) not in adj:
+            neg.append((a, b))
+    neg = np.asarray(neg)
+    sp = (phi[pos[:, 0]] * phi[pos[:, 1]]).sum(-1)
+    sn = (phi[neg[:, 0]] * phi[neg[:, 1]]).sum(-1)
+    d = sp[:, None] - sn[None, :]
+    return float((d > 0).mean() + 0.5 * (d == 0).mean())
+
+
+def run(quick: bool = True) -> Dict:
+    g = rmat_graph(1024 if quick else 4096, 10, seed=7)
+    rec: Dict = {}
+    for method in ("deepwalk", "node2vec", "huge"):
+        for info in (True, False):
+            tag = f"{method}_{'info' if info else 'routine'}"
+            cfg = EmbedConfig(method=method, info_termination=info,
+                              dim=32, epochs=1, lr=0.05, delta=1e-4,
+                              max_len=40, min_len=10, fixed_len=40,
+                              fixed_rounds=6, p=2.0, q=0.5)
+            with timer() as t:
+                corpus = sample_corpus(g, cfg)
+            with timer() as t2:
+                phi, _ = embed_graph(g, cfg)
+            rec[tag] = {
+                "sample_s": t["seconds"],
+                "e2e_s": t2["seconds"],
+                "corpus_tokens": int(corpus.total_tokens),
+                "auc": _auc(g, phi),
+            }
+    for method in ("deepwalk", "node2vec"):
+        rec[f"auc_ratio_{method}_info_vs_routine"] = (
+            rec[f"{method}_info"]["auc"] / rec[f"{method}_routine"]["auc"])
+    save("generality", rec)
+    return rec

@@ -1,0 +1,66 @@
+"""§3.1 microbenchmark: the InCoM update itself — O(1) incremental update
+vs O(L) full-path recompute, isolated from the walk engine; plus the
+message-size model (Example 1)."""
+
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save
+from repro.core import incom
+from repro.core.walker import _fullpath_entropy, _fullpath_r2
+
+
+def run(quick: bool = True) -> Dict:
+    b = 1024
+    rec: Dict = {"incr_step_s": {}, "full_recompute_s": {}, "msg_bytes": {}}
+    key = jax.random.PRNGKey(0)
+
+    @jax.jit
+    def incr(s, path, v):
+        return incom.accept_update(s, path, v)
+
+    for max_len in (64, 128, 256) if quick else (64, 128, 256, 512, 1024):
+        path = jax.random.randint(key, (b, max_len), 0, 64, jnp.int32)
+        s = incom.InfoState.init(b)
+        s = incom.stats_step(s, jnp.zeros(b), jnp.full((b,), float(max_len)))
+        v = jax.random.randint(jax.random.fold_in(key, 1), (b,), 0, 64)
+        out = incr(s, path, v)
+        jax.block_until_ready(out[0].H)
+        t0 = time.perf_counter()
+        for _ in range(10):
+            out = incr(s, path, v)
+        jax.block_until_ready(out[0].H)
+        rec["incr_step_s"][max_len] = (time.perf_counter() - t0) / 10
+
+        @jax.jit
+        def full(path, length):
+            h = _fullpath_entropy(path, length)
+            hs = jnp.broadcast_to(h[:, None], (b, max_len))
+            return h, _fullpath_r2(hs, length)
+
+        length = jnp.full((b,), max_len, jnp.int32)
+        out2 = full(path, length)
+        jax.block_until_ready(out2[0])
+        t0 = time.perf_counter()
+        for _ in range(10):
+            out2 = full(path, length)
+        jax.block_until_ready(out2[0])
+        rec["full_recompute_s"][max_len] = (time.perf_counter() - t0) / 10
+
+        rec["msg_bytes"][max_len] = {
+            "incom": incom.MSG_BYTES,
+            "fullpath": int(24 + 8 * max_len),
+        }
+
+    lens = sorted(rec["incr_step_s"])
+    rec["growth_incr"] = rec["incr_step_s"][lens[-1]] / rec["incr_step_s"][lens[0]]
+    rec["growth_full"] = (rec["full_recompute_s"][lens[-1]]
+                          / rec["full_recompute_s"][lens[0]])
+    save("incom", rec)
+    return rec

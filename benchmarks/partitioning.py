@@ -1,0 +1,74 @@
+"""Fig. 10(c,d) + Table 5 + Fig. 11: partition quality and cost.
+
+* cross-machine messages during identical walks under MPGP vs
+  balanced-only vs hash partitioning (the paper's 45% reduction claim);
+* partition wall time per scheme;
+* streaming-order comparison (random / bfs / dfs / +degree) for sequential
+  and segment-parallel MPGP.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import save, timer
+from repro.core.mpgp import (
+    balanced_only_partition, hash_partition, mpgp_partition,
+    mpgp_partition_parallel,
+)
+from repro.core.transition import make_policy
+from repro.core.walker import WalkSpec, run_walk_batch
+from repro.graph.generators import rmat_graph
+
+
+def _walk_messages(graph, part, n=256, seed=0) -> int:
+    spec = WalkSpec(max_len=40, min_len=8, mu=0.995, info_mode="incom",
+                    reg_start=16)
+    sources = jnp.arange(n, dtype=jnp.int32) % graph.num_nodes
+    st = run_walk_batch(graph, sources, jax.random.PRNGKey(seed),
+                        make_policy("huge"), spec, jnp.asarray(part))
+    return int(st.msg_count)
+
+
+def run(quick: bool = True) -> Dict:
+    n = 2048 if quick else 16384
+    g = rmat_graph(n, 10, seed=5).with_edge_cm()
+    m = 4
+    rec: Dict = {"nodes": n, "machines": m, "partition_s": {},
+                 "cross_messages": {}, "orders": {}}
+
+    schemes = {
+        "mpgp": lambda: mpgp_partition(g, m, gamma=2.0),
+        "balanced_only": lambda: balanced_only_partition(g, m),
+        "hash": lambda: hash_partition(g, m),
+    }
+    for name, fn in schemes.items():
+        with timer() as t:
+            res = fn()
+        rec["partition_s"][name] = t["seconds"]
+        rec["cross_messages"][name] = _walk_messages(g, res.assignment)
+
+    base = rec["cross_messages"]["balanced_only"]
+    rec["message_reduction_vs_balanced_pct"] = 100.0 * (
+        1 - rec["cross_messages"]["mpgp"] / max(base, 1))
+
+    # streaming orders (Fig. 11) — sequential MPGP
+    for order in ("random", "bfs", "dfs", "bfs+degree", "dfs+degree"):
+        with timer() as t:
+            res = mpgp_partition(g, m, gamma=2.0, order=order)
+        rec["orders"][order] = {
+            "partition_s": t["seconds"],
+            "cross_messages": _walk_messages(g, res.assignment),
+        }
+
+    # parallel MPGP (Table 5b)
+    with timer() as t:
+        res_p = mpgp_partition_parallel(g, m, num_segments=4, gamma=2.0)
+    rec["parallel_mpgp_s"] = t["seconds"]
+    rec["parallel_mpgp_messages"] = _walk_messages(g, res_p.assignment)
+
+    save("partitioning", rec)
+    return rec

@@ -1,0 +1,64 @@
+"""Benchmark harness entry point: one benchmark per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+
+Writes per-benchmark JSON artifacts under benchmarks/artifacts/ and prints
+a summary line per benchmark. The dry-run/roofline artifacts (launch.dryrun)
+live in benchmarks/artifacts/dryrun/.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+from benchmarks import (
+    classification, e2e, generality, incom_bench, partitioning, scaling,
+    sync_bytes, train_efficiency, walk_efficiency,
+)
+
+BENCHES = {
+    "e2e": e2e.run,                           # Fig. 5
+    "scaling": scaling.run,                   # Fig. 6/7
+    "walk_efficiency": walk_efficiency.run,   # Fig. 10(a)
+    "train_efficiency": train_efficiency.run, # Fig. 10(b)
+    "partitioning": partitioning.run,         # Fig. 10(c,d), Table 5, Fig. 11
+    "incom": incom_bench.run,                 # §3.1 O(1) vs O(L)
+    "sync_bytes": sync_bytes.run,             # §4.2-III
+    "generality": generality.run,             # Fig. 12
+    "classification": classification.run,     # Fig. 9
+}
+
+
+def main() -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--full", action="store_true",
+                   help="larger graphs (slower)")
+    p.add_argument("--only", default=None)
+    args = p.parse_args()
+
+    names = [args.only] if args.only else list(BENCHES)
+    failures = 0
+    for name in names:
+        t0 = time.time()
+        print(f"=== benchmark: {name} ===", flush=True)
+        try:
+            rec = BENCHES[name](quick=not args.full)
+            dt = time.time() - t0
+            summary = {k: v for k, v in rec.items()
+                       if isinstance(v, (int, float, str))}
+            print(f"    done in {dt:.1f}s :: "
+                  f"{json.dumps(summary, default=float)[:300]}", flush=True)
+        except Exception as e:
+            failures += 1
+            print(f"    FAILED: {type(e).__name__}: {e}", flush=True)
+            traceback.print_exc()
+    print(f"\n{len(names) - failures}/{len(names)} benchmarks succeeded")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,30 @@
+"""Fig. 6/7 analog: scalability — shard count sweep on a fixed graph, and
+graph-size sweep (R-MAT, fixed degree 10, the paper's §6.3 synthetic setup)."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+from benchmarks.common import save, timer
+from repro.core.api import EmbedConfig, embed_graph
+from repro.graph.generators import rmat_graph
+
+
+def run(quick: bool = True) -> Dict:
+    rec: Dict = {"shards": {}, "sizes": {}}
+    cfg = EmbedConfig(dim=32, epochs=1, max_len=30, min_len=8)
+
+    g = rmat_graph(2048 if quick else 16384, 10, seed=1)
+    for m in (1, 2, 4):
+        with timer() as t:
+            embed_graph(g, cfg, num_shards=m)
+        rec["shards"][m] = t["seconds"]
+
+    for n in ((512, 2048, 8192) if quick else (4096, 16384, 65536, 262144)):
+        g = rmat_graph(n, 10, seed=2)
+        with timer() as t:
+            embed_graph(g, cfg, num_shards=2)
+        rec["sizes"][n] = t["seconds"]
+
+    save("scaling", rec)
+    return rec

@@ -1,0 +1,34 @@
+"""§4.2-III: hotness-block vs full synchronization byte volume across
+vocabulary sizes (the O(ocn_max d m) vs O(|V| d m) claim), using real
+occurrence distributions from sampled corpora."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from benchmarks.common import save
+from repro.core.api import EmbedConfig, sample_corpus
+from repro.core.corpus import FrequencyOrder
+from repro.core.sync import sync_cost_model
+from repro.graph.generators import rmat_graph
+
+
+def run(quick: bool = True) -> Dict:
+    rec: Dict = {"per_graph": {}}
+    d, m = 128, 8
+    for n in (1024, 4096) if quick else (1024, 4096, 16384, 65536):
+        g = rmat_graph(n, 10, seed=6)
+        corpus = sample_corpus(g, EmbedConfig(max_len=30, min_len=8))
+        order = FrequencyOrder.from_ocn(corpus.ocn)
+        starts, _ = order.hotness_blocks()
+        hot, full = sync_cost_model(n, d, m, len(starts))
+        rec["per_graph"][n] = {
+            "blocks": int(len(starts)),
+            "hotness_bytes_per_period": hot,
+            "full_bytes_per_period": full,
+            "reduction_x": full / max(hot, 1),
+        }
+    save("sync_bytes", rec)
+    return rec

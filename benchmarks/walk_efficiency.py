@@ -1,0 +1,68 @@
+"""Fig. 10(a) + §3.1 complexity claim: per-superstep cost of the walk engine
+must be O(1) in walk length for InCoM and grow for the full-path baseline.
+
+We time the jitted engine at increasing path-buffer lengths; the full-path
+mode recomputes H (O(L^2) lane-work) and R over the H-series each step,
+InCoM does constant work. Also reports adaptive walk-length stats (the
+-63% L / -18% r corpus reduction of §6.5)."""
+
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save
+from repro.core.transition import make_policy
+from repro.core.walker import WalkSpec, run_walk_batch
+from repro.graph.generators import rmat_graph
+
+
+def _time_mode(graph, mode: str, max_len: int, n_walkers: int = 256,
+               reps: int = 3) -> float:
+    spec = WalkSpec(max_len=max_len, min_len=8, mu=-1.0, info_mode=mode,
+                    fixed_len=max_len, reg_start=16)
+    sources = jnp.arange(n_walkers, dtype=jnp.int32) % graph.num_nodes
+    policy = make_policy("huge")
+    st = run_walk_batch(graph, sources, jax.random.PRNGKey(0), policy, spec)
+    jax.block_until_ready(st.path)              # compile + warm
+    best = float("inf")
+    for r in range(reps):
+        t0 = time.perf_counter()
+        st = run_walk_batch(graph, sources, jax.random.PRNGKey(r + 1),
+                            policy, spec)
+        jax.block_until_ready(st.path)
+        best = min(best, time.perf_counter() - t0)
+    supersteps = int(st.supersteps)
+    return best / max(supersteps, 1)
+
+
+def run(quick: bool = True) -> Dict:
+    g = rmat_graph(2048, 10, seed=3).with_edge_cm()
+    lens = (32, 64, 128) if quick else (32, 64, 128, 256, 512)
+    rec: Dict = {"per_superstep_s": {}}
+    for mode in ("incom", "fullpath"):
+        rec["per_superstep_s"][mode] = {
+            L: _time_mode(g, mode, L) for L in lens
+        }
+    # O(1) vs O(L): cost growth ratio from the shortest to longest buffer
+    inc = rec["per_superstep_s"]["incom"]
+    ful = rec["per_superstep_s"]["fullpath"]
+    rec["growth_incom"] = inc[lens[-1]] / inc[lens[0]]
+    rec["growth_fullpath"] = ful[lens[-1]] / ful[lens[0]]
+
+    # adaptive-length stats (info termination vs routine L=80)
+    spec = WalkSpec(max_len=80, min_len=8, mu=0.995, info_mode="incom",
+                    reg_start=16)
+    sources = jnp.arange(512, dtype=jnp.int32) % g.num_nodes
+    st = run_walk_batch(g, sources, jax.random.PRNGKey(9),
+                        make_policy("huge"), spec)
+    lengths = np.asarray(st.info.L)
+    rec["adaptive_mean_len"] = float(lengths.mean())
+    rec["routine_len"] = 80
+    rec["len_reduction_pct"] = 100.0 * (1 - lengths.mean() / 80.0)
+    save("walk_efficiency", rec)
+    return rec

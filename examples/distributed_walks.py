@@ -1,0 +1,45 @@
+"""Distributed information-centric walks: MPGP vs hash partitioning.
+
+Shows the two §3 claims live: constant-size InCoM messages, and the
+cross-shard message reduction from proximity-aware partitioning.
+
+  PYTHONPATH=src python examples/distributed_walks.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mpgp import hash_partition, mpgp_partition
+from repro.core.transition import make_policy
+from repro.core.walker import WalkSpec, batch_stats, run_walk_batch
+from repro.graph.generators import rmat_graph
+
+
+def main() -> None:
+    graph = rmat_graph(4096, 10, seed=1).with_edge_cm()
+    machines = 4
+    spec = WalkSpec(max_len=60, min_len=10, mu=0.995, info_mode="incom",
+                    reg_start=16)
+    sources = jnp.arange(1024, dtype=jnp.int32) % graph.num_nodes
+    policy = make_policy("huge")
+
+    for name, part in (
+        ("MPGP (proximity-aware)", mpgp_partition(graph, machines,
+                                                  gamma=2.0).assignment),
+        ("hash (locality-blind)", hash_partition(graph, machines).assignment),
+    ):
+        st = run_walk_batch(graph, sources, jax.random.PRNGKey(0), policy,
+                            spec, jnp.asarray(part))
+        stats = batch_stats(st)
+        per_msg = stats["msg_bytes"] / max(stats["msg_count"], 1)
+        print(f"{name:24s} crossings={stats['msg_count']:6d}  "
+              f"bytes/msg={per_msg:5.1f}  mean_len={stats['mean_len']:.1f}")
+
+    print("\nInCoM message = 80 B constant (walker_id, steps, node, H, L, "
+          "E(H), E(L), E(HL), E(H^2), E(L^2))")
+    print("full-path message at L=60 would be 24 + 8*60 = 504 B")
+
+
+if __name__ == "__main__":
+    main()

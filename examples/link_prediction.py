@@ -1,0 +1,73 @@
+"""End-to-end driver (paper §6.4 protocol): link prediction.
+
+Uniformly remove 50% of edges as positive test pairs, train DistGER
+embeddings on the remaining graph (a few hundred DSGL steps), score pairs
+by phi(u)·phi(v), report AUC against equal-sized non-edge negatives.
+
+  PYTHONPATH=src python examples/link_prediction.py [--nodes 4096]
+"""
+
+import argparse
+
+import numpy as np
+
+from repro.core.api import EmbedConfig, embed_graph
+from repro.graph.csr import build_csr
+from repro.graph.generators import rmat_edges
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nodes", type=int, default=2048)
+    ap.add_argument("--degree", type=int, default=10)
+    ap.add_argument("--dim", type=int, default=64)
+    ap.add_argument("--shards", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    rng = np.random.default_rng(args.seed)
+    edges = rmat_edges(args.nodes, args.nodes * args.degree // 2,
+                       seed=args.seed)
+    edges = edges[edges[:, 0] != edges[:, 1]]
+    edges = np.unique(np.sort(edges, axis=1), axis=0)
+
+    # --- 50/50 train/test edge split (paper protocol) ----------------------
+    perm = rng.permutation(len(edges))
+    half = len(edges) // 2
+    test_pos = edges[perm[:half]]
+    train_edges = edges[perm[half:]]
+    graph = build_csr(train_edges, args.nodes, undirected=True)
+    print(f"|V|={args.nodes}  train |E|={len(train_edges)}  "
+          f"test pairs={len(test_pos)}")
+
+    # --- train -------------------------------------------------------------
+    cfg = EmbedConfig(dim=args.dim, epochs=1, lr=0.05, delta=1e-4,
+                      max_len=40, min_len=10, window=8, negatives=5,
+                      seed=args.seed)
+    phi_in, phi_out = embed_graph(graph, cfg, num_shards=args.shards)
+
+    # --- evaluate ------------------------------------------------------------
+    adj = set(map(tuple, np.sort(edges, axis=1).tolist()))
+    neg = []
+    while len(neg) < len(test_pos):
+        a, b = rng.integers(0, args.nodes, 2)
+        if a != b and (min(a, b), max(a, b)) not in adj:
+            neg.append((a, b))
+    test_neg = np.asarray(neg)
+
+    s_pos = (phi_in[test_pos[:, 0]] * phi_in[test_pos[:, 1]]).sum(-1)
+    s_neg = (phi_in[test_neg[:, 0]] * phi_in[test_neg[:, 1]]).sum(-1)
+    labels = np.concatenate([np.ones_like(s_pos), np.zeros_like(s_neg)])
+    scores = np.concatenate([s_pos, s_neg])
+    order = np.argsort(scores)
+    ranks = np.empty_like(order, dtype=np.float64)
+    ranks[order] = np.arange(1, len(scores) + 1)
+    n_pos, n_neg = len(s_pos), len(s_neg)
+    auc = (ranks[labels == 1].sum() - n_pos * (n_pos + 1) / 2) / (
+        n_pos * n_neg)
+    print(f"link-prediction AUC = {auc:.4f}   "
+          f"(paper Table 4 reports 0.92-0.98 on real graphs)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Train an assigned LM architecture (reduced size) with the fault-tolerant
+runtime: checkpoints, injected failure, automatic restart-and-resume.
+
+  PYTHONPATH=src python examples/train_lm.py --arch qwen3-1.7b --steps 60
+"""
+
+import argparse
+import tempfile
+
+from repro.configs import get_config
+from repro.models.zoo import reduce_config
+from repro.runtime.trainer import FailureInjector, Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--fail-at", type=int, default=25,
+                    help="inject a simulated node failure at this step")
+    args = ap.parse_args()
+
+    cfg = reduce_config(get_config(args.arch))
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        tcfg = TrainerConfig(steps=args.steps, ckpt_every=10,
+                             ckpt_dir=ckpt_dir, batch=args.batch,
+                             seq_len=args.seq)
+        injector = FailureInjector(fail_at_steps=(args.fail_at,))
+        trainer = Trainer(cfg, tcfg, injector=injector)
+        out = trainer.run_with_restarts()
+
+    m = out["metrics"]
+    print(f"arch={args.arch} (reduced) steps={out['final_step']} "
+          f"restarts={out['restarts']}")
+    print(f"loss: {m[0]['loss']:.3f} -> {m[-1]['loss']:.3f}")
+    print(f"straggler stats: {out['straggler_stats']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""Checkpointing: atomic save/restore, elastic re-shard."""
+
+from repro.ckpt.checkpoint import (  # noqa: F401
+    save_checkpoint, load_checkpoint, restore_into, latest_step,
+    reshard_to_mesh,
+)

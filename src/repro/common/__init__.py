@@ -1,0 +1,13 @@
+from repro.common.config import (
+    Registry,
+    frozen_dataclass,
+    override_dataclass,
+)
+from repro.common.logging import get_logger
+
+__all__ = [
+    "Registry",
+    "frozen_dataclass",
+    "override_dataclass",
+    "get_logger",
+]

@@ -1,0 +1,102 @@
+"""Config system: frozen dataclasses + a named registry + CLI overrides.
+
+Every architecture config (``repro/configs/<id>.py``) registers a factory in
+the global ``ARCH_REGISTRY``; launchers select with ``--arch <id>`` and apply
+``key=value`` overrides (dotted keys traverse nested dataclasses).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Generic, Iterator, Tuple, TypeVar
+
+T = TypeVar("T")
+
+
+def frozen_dataclass(cls):
+    """Decorator: frozen dataclass usable as a pytree leaf container."""
+    return dataclasses.dataclass(frozen=True)(cls)
+
+
+class Registry(Generic[T]):
+    """A simple name -> factory registry with helpful error messages."""
+
+    def __init__(self, kind: str):
+        self._kind = kind
+        self._entries: Dict[str, Callable[[], T]] = {}
+
+    def register(self, name: str) -> Callable[[Callable[[], T]], Callable[[], T]]:
+        def deco(fn: Callable[[], T]) -> Callable[[], T]:
+            if name in self._entries:
+                raise ValueError(f"duplicate {self._kind} registration: {name!r}")
+            self._entries[name] = fn
+            return fn
+
+        return deco
+
+    def get(self, name: str) -> T:
+        if name not in self._entries:
+            known = ", ".join(sorted(self._entries))
+            raise KeyError(f"unknown {self._kind} {name!r}; known: {known}")
+        return self._entries[name]()
+
+    def names(self) -> Tuple[str, ...]:
+        return tuple(sorted(self._entries))
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._entries
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(sorted(self._entries))
+
+
+def _coerce(value: str, target: Any) -> Any:
+    """Coerce a CLI string to the type of ``target``."""
+    if isinstance(target, bool):
+        if value.lower() in ("1", "true", "yes", "on"):
+            return True
+        if value.lower() in ("0", "false", "no", "off"):
+            return False
+        raise ValueError(f"cannot parse bool from {value!r}")
+    if isinstance(target, int) and not isinstance(target, bool):
+        return int(value)
+    if isinstance(target, float):
+        return float(value)
+    if target is None or isinstance(target, str):
+        return value
+    if isinstance(target, tuple):
+        parts = [p for p in value.split(",") if p]
+        elem = target[0] if target else "0"
+        return tuple(_coerce(p, elem) for p in parts)
+    raise TypeError(f"cannot coerce override for field of type {type(target)}")
+
+
+def override_dataclass(cfg: T, overrides: Dict[str, str]) -> T:
+    """Return a copy of ``cfg`` with dotted-key string overrides applied."""
+    for dotted, raw in overrides.items():
+        keys = dotted.split(".")
+        # Walk down to the leaf owner, collecting owners for rebuild.
+        owners = [cfg]
+        for k in keys[:-1]:
+            owners.append(getattr(owners[-1], k))
+        leaf_owner = owners[-1]
+        cur = getattr(leaf_owner, keys[-1])
+        new_leaf_owner = dataclasses.replace(
+            leaf_owner, **{keys[-1]: _coerce(raw, cur)}
+        )
+        # Rebuild the chain bottom-up.
+        for owner, k in zip(reversed(owners[:-1]), reversed(keys[:-1])):
+            new_leaf_owner = dataclasses.replace(owner, **{k: new_leaf_owner})
+        cfg = new_leaf_owner
+    return cfg
+
+
+def parse_overrides(argv) -> Dict[str, str]:
+    """Parse trailing ``key=value`` tokens from an argv list."""
+    out: Dict[str, str] = {}
+    for tok in argv:
+        if "=" not in tok:
+            raise ValueError(f"override must look like key=value, got {tok!r}")
+        k, v = tok.split("=", 1)
+        out[k] = v
+    return out

@@ -1,0 +1,66 @@
+"""Architecture registry: one module per assigned arch + the paper's own
+DistGER workload. ``get_config(name)`` returns the full published config;
+``get_reduced(name)`` the CPU-smoke version (same family, tiny dims)."""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig, SHAPES, ShapeConfig, shape_applicable
+
+ARCH_IDS: List[str] = [
+    "yi_6b",
+    "qwen3_1_7b",
+    "minicpm3_4b",
+    "llama3_405b",
+    "zamba2_7b",
+    "qwen2_moe_a2_7b",
+    "deepseek_v2_lite_16b",
+    "seamless_m4t_large_v2",
+    "chameleon_34b",
+    "xlstm_350m",
+]
+
+# canonical external ids (grid spelling) -> module names
+ALIASES: Dict[str, str] = {
+    "yi-6b": "yi_6b",
+    "qwen3-1.7b": "qwen3_1_7b",
+    "minicpm3-4b": "minicpm3_4b",
+    "llama3-405b": "llama3_405b",
+    "zamba2-7b": "zamba2_7b",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "chameleon-34b": "chameleon_34b",
+    "xlstm-350m": "xlstm_350m",
+}
+
+
+def normalize(name: str) -> str:
+    return ALIASES.get(name, name.replace("-", "_").replace(".", "_"))
+
+
+def get_config(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{normalize(name)}")
+    return mod.CONFIG
+
+
+def get_reduced(name: str) -> ModelConfig:
+    from repro.models.zoo import reduce_config
+    return reduce_config(get_config(name))
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}
+
+
+def grid_cells():
+    """Every (arch, shape) cell, with applicability resolved."""
+    cells = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for sname, shape in SHAPES.items():
+            ok, why = shape_applicable(cfg, shape)
+            cells.append((arch, sname, ok, why))
+    return cells

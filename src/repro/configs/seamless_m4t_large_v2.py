@@ -1,0 +1,33 @@
+"""seamless-m4t-large-v2 — encoder-decoder multimodal backbone
+[arXiv:2308.11596; hf:facebook/seamless-m4t-v2-large].
+
+24 encoder + 24 decoder layers, d_model=1024, 16H (kv=16), d_ff=8192,
+vocab=256206. The audio frontend (w2v-BERT conformer stem) is a STUB per
+the grid rules: ``input_specs`` provides precomputed (B, S_src, 1024)
+frame embeddings (repro.models.frontend).
+
+Shape-cell semantics: train/prefill cells split seq_len as
+S_src = S_tgt = seq_len // 2; decode cells keep the decoder self-KV at
+seq_len with a 4096-frame encoder memory (models/zoo.py CROSS_SRC_LEN).
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2",
+    family="audio",
+    num_layers=48,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=8192,
+    vocab_size=256208,         # 256206 padded to a multiple of 16 for TP
+    vocab_size_unpadded=256206,
+    encdec=True,
+    enc_layers=24,
+    dec_layers=24,
+    frontend="audio",
+    rope_theta=1.0e4,
+    dtype="bfloat16",
+    remat="full",
+)

@@ -1,0 +1,32 @@
+"""xlstm-350m — sLSTM + mLSTM recurrent LM [arXiv:2405.04517].
+
+24 blocks  d_model=1024  4 heads  vocab=50304, d_ff=0 (xLSTM blocks carry
+their own up/down projection; there is no separate FFN). Block cycle is the
+paper's xLSTM[7:1] ratio: seven mLSTM ("x") then one sLSTM ("s").
+
+Recurrent state decode => runs the long_500k cell.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-350m",
+    family="ssm",
+    num_layers=24,
+    d_model=1024,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    block_cycle=("x", "x", "x", "x", "x", "x", "x", "s"),
+    ssm_heads=4,
+    ssm_expand=2,
+    ssm_chunk=512,             # large matrix memory (512x513/head): fewer,
+                               # bigger chunks cut inter-chunk state stash 4x
+    dtype="bfloat16",
+    remat="full",
+    long_context="state",
+    tie_embeddings=True,
+    act_seq_shard=False,       # all-scan arch: SP resharding costs, no gain
+                               # (EXPERIMENTS.md §Perf xlstm iteration 2)
+)

@@ -1,0 +1,35 @@
+# The paper's primary contribution: InCoM incremental information-centric
+# walks, MPGP streaming partitioning, and DSGL distributed Skip-Gram.
+from repro.core import incom, info
+from repro.core.api import EmbedConfig, embed_graph, sample_corpus
+from repro.core.corpus import Corpus, FrequencyOrder, generate_corpus
+from repro.core.huge_d import distger_spec, huge_d_spec, routine_spec
+from repro.core.termination import WalkCountController
+from repro.core.transition import (
+    DeepwalkPolicy,
+    HugePolicy,
+    Node2vecPolicy,
+    make_policy,
+)
+from repro.core.walker import WalkSpec, run_walk_batch
+
+__all__ = [
+    "incom",
+    "info",
+    "EmbedConfig",
+    "embed_graph",
+    "sample_corpus",
+    "Corpus",
+    "FrequencyOrder",
+    "generate_corpus",
+    "distger_spec",
+    "huge_d_spec",
+    "routine_spec",
+    "WalkCountController",
+    "DeepwalkPolicy",
+    "HugePolicy",
+    "Node2vecPolicy",
+    "make_policy",
+    "WalkSpec",
+    "run_walk_batch",
+]

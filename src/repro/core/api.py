@@ -1,0 +1,99 @@
+"""General embedding API (paper §6.6 "Generality of DistGER").
+
+DistGER's engine is method-agnostic: DeepWalk / node2vec / HuGE(+) all run
+through the same sampler, and each can use either its routine configuration
+(fixed L, r) or DistGER's information-centric termination (R^2 < mu walk
+length + Delta D <= delta walk count). ``embed_graph`` is the one-call
+user-facing entry point: partition -> sample -> learn -> embeddings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.corpus import Corpus, FrequencyOrder, generate_corpus
+from repro.core.transition import make_policy
+from repro.core.walker import WalkSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class EmbedConfig:
+    method: str = "huge"           # huge | deepwalk | node2vec | huge_plus
+    info_termination: bool = True  # DistGER info-centric L and r
+    fixed_len: int = 80            # routine config (when info_termination=False)
+    fixed_rounds: int = 10
+    max_len: int = 100
+    min_len: int = 20
+    mu: float = 0.995
+    reg_start: int = 16
+    delta: float = 1e-3
+    dim: int = 128
+    window: int = 10
+    negatives: int = 5
+    epochs: int = 1
+    lr: float = 0.025
+    multi_windows: int = 2
+    seed: int = 0
+    p: float = 1.0                 # node2vec return parameter
+    q: float = 1.0                 # node2vec in-out parameter
+
+
+def make_walk_plan(cfg: EmbedConfig) -> Tuple[object, WalkSpec, Dict]:
+    """Resolve (policy, spec, round kwargs) for a method + termination mode."""
+    name = "huge" if cfg.method in ("huge", "huge_plus") else cfg.method
+    policy = make_policy(name, p=cfg.p, q=cfg.q)
+    if cfg.info_termination:
+        spec = WalkSpec(max_len=cfg.max_len, min_len=cfg.min_len,
+                        mu=cfg.mu, info_mode="incom", reg_start=cfg.reg_start)
+        rounds = dict(delta=cfg.delta, min_rounds=2, max_rounds=20)
+    else:
+        spec = WalkSpec(max_len=cfg.fixed_len, info_mode="fixed",
+                        fixed_len=cfg.fixed_len)
+        rounds = dict(delta=-1.0, min_rounds=cfg.fixed_rounds,
+                      max_rounds=cfg.fixed_rounds)
+    return policy, spec, rounds
+
+
+def sample_corpus(graph, cfg: EmbedConfig, part: Optional[np.ndarray] = None) -> Corpus:
+    policy, spec, rounds = make_walk_plan(cfg)
+    return generate_corpus(
+        graph, policy=policy, spec=spec, seed=cfg.seed, part=part, **rounds
+    )
+
+
+def embed_graph(
+    graph,
+    cfg: EmbedConfig = EmbedConfig(),
+    *,
+    num_shards: int = 1,
+    return_corpus: bool = False,
+):
+    """partition -> information-oriented walks -> DSGL -> embeddings.
+
+    Returns (phi_in, phi_out) in ORIGINAL node-id space, plus optional corpus.
+    Imports are deferred so this module stays import-light.
+    """
+    from repro.core.mpgp import mpgp_partition
+    from repro.core.dsgl import DSGLConfig, train_dsgl
+
+    part = None
+    if num_shards > 1:
+        part = mpgp_partition(graph, num_shards).assignment
+    corpus = sample_corpus(graph, cfg, part=part)
+    order = FrequencyOrder.from_ocn(corpus.ocn)
+    dsgl_cfg = DSGLConfig(
+        dim=cfg.dim, window=cfg.window, negatives=cfg.negatives,
+        epochs=cfg.epochs, lr=cfg.lr, multi_windows=cfg.multi_windows,
+        seed=cfg.seed,
+    )
+    phi_in_rank, phi_out_rank = train_dsgl(corpus, order, dsgl_cfg,
+                                           num_shards=num_shards)
+    # Back to original node-id space.
+    phi_in = np.asarray(phi_in_rank)[order.to_rank]
+    phi_out = np.asarray(phi_out_rank)[order.to_rank]
+    if return_corpus:
+        return phi_in, phi_out, corpus
+    return phi_in, phi_out

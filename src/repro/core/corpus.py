@@ -1,0 +1,158 @@
+"""Corpus generation and frequency-ordered relabeling (paper §4.2-I).
+
+``generate_corpus`` drives the walker engine round-by-round: each round runs
+one information-oriented walk from every source node, then the Eq. 7
+controller decides whether another round is needed. The result is a padded
+(num_walks, max_len) array of node ids plus per-walk lengths and the node
+occurrence counts ``ocn`` (needed by both Eq. 6 and the hotness machinery).
+
+``FrequencyOrder`` relabels nodes in descending corpus frequency so the
+embedding matrices can be laid out hot-rows-first (Improvement-I): row 0 of
+the global matrices is the hottest node. This both keeps hot vectors in
+fast memory and makes hotness-*block* boundaries contiguous index ranges.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.termination import WalkCountController
+from repro.core.transition import Policy, make_policy
+from repro.core.walker import WalkSpec, batch_stats, run_walk_batch, walks_to_numpy
+from repro.graph.csr import CSRGraph
+
+
+@dataclasses.dataclass
+class Corpus:
+    walks: np.ndarray        # (num_walks, max_len) int32, -1 padded
+    lengths: np.ndarray      # (num_walks,) int64
+    ocn: np.ndarray          # (|V|,) int64 — occurrences per node
+    rounds: int
+    stats: Dict[str, float]
+
+    @property
+    def num_walks(self) -> int:
+        return int(self.walks.shape[0])
+
+    @property
+    def total_tokens(self) -> int:
+        return int(self.lengths.sum())
+
+    def token_count(self) -> np.ndarray:
+        return self.ocn
+
+
+def count_occurrences(
+    walks: np.ndarray, lengths: np.ndarray, num_nodes: int
+) -> np.ndarray:
+    mask = np.arange(walks.shape[1])[None, :] < lengths[:, None]
+    flat = walks[mask]
+    return np.bincount(flat, minlength=num_nodes).astype(np.int64)
+
+
+def generate_corpus(
+    graph: CSRGraph,
+    *,
+    policy: Policy | str = "huge",
+    spec: Optional[WalkSpec] = None,
+    delta: float = 1e-3,
+    min_rounds: int = 2,
+    max_rounds: int = 20,
+    walker_batch: int = 4096,
+    seed: int = 0,
+    part: Optional[np.ndarray] = None,
+    sources: Optional[np.ndarray] = None,
+) -> Corpus:
+    """End-to-end sampler: rounds of walks until Delta D_r <= delta."""
+    if isinstance(policy, str):
+        policy = make_policy(policy)
+    spec = spec or WalkSpec()
+    # The HuGE transition probability needs per-edge common-neighbor counts
+    # regardless of the termination mode (fixed or info-centric).
+    if getattr(policy, "needs_edge_cm", False) and graph.edge_cm is None:
+        graph = graph.with_edge_cm()
+    n = graph.num_nodes
+    if sources is None:
+        sources = np.arange(n, dtype=np.int32)
+    degrees = np.asarray(graph.degrees(), dtype=np.int64)
+    part_dev = None if part is None else jnp.asarray(part, jnp.int32)
+
+    controller = WalkCountController(
+        delta=delta, min_rounds=min_rounds, max_rounds=max_rounds
+    )
+    key = jax.random.PRNGKey(seed)
+    all_walks: List[np.ndarray] = []
+    all_lengths: List[np.ndarray] = []
+    ocn = np.zeros(n, dtype=np.int64)
+    agg = {"supersteps": 0, "accepts": 0, "rejects": 0,
+           "msg_count": 0, "msg_bytes": 0.0}
+
+    keep_walking = True
+    while keep_walking:
+        key, round_key = jax.random.split(key)
+        for start in range(0, len(sources), walker_batch):
+            chunk = sources[start : start + walker_batch]
+            round_key, k = jax.random.split(round_key)
+            st = run_walk_batch(
+                graph, jnp.asarray(chunk, jnp.int32), k, policy, spec, part_dev
+            )
+            walks, lengths = walks_to_numpy(st)
+            all_walks.append(walks)
+            all_lengths.append(lengths)
+            ocn += count_occurrences(walks, lengths, n)
+            s = batch_stats(st)
+            for field in ("supersteps", "accepts", "rejects", "msg_count"):
+                agg[field] += s[field]
+            agg["msg_bytes"] += s["msg_bytes"]
+        keep_walking = controller.update(degrees, ocn)
+
+    walks = np.concatenate(all_walks, axis=0)
+    lengths = np.concatenate(all_lengths, axis=0)
+    agg["mean_len"] = float(lengths.mean()) if len(lengths) else 0.0
+    agg["d_history"] = list(controller.history)
+    return Corpus(
+        walks=walks, lengths=lengths, ocn=ocn,
+        rounds=controller.rounds, stats=agg,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class FrequencyOrder:
+    """Bijection node id <-> frequency rank (rank 0 = hottest).
+
+    to_rank[v] = rank of node v; to_node[r] = node at rank r.
+    """
+
+    to_rank: np.ndarray
+    to_node: np.ndarray
+    sorted_ocn: np.ndarray   # occurrences in rank order (non-increasing)
+
+    @classmethod
+    def from_ocn(cls, ocn: np.ndarray) -> "FrequencyOrder":
+        ocn = np.asarray(ocn, dtype=np.int64)
+        to_node = np.argsort(-ocn, kind="stable").astype(np.int32)
+        to_rank = np.empty_like(to_node)
+        to_rank[to_node] = np.arange(len(to_node), dtype=np.int32)
+        return cls(to_rank=to_rank, to_node=to_node, sorted_ocn=ocn[to_node])
+
+    def relabel_walks(self, walks: np.ndarray) -> np.ndarray:
+        """Map a -1-padded walk array into rank space."""
+        out = np.where(walks >= 0, self.to_rank[np.maximum(walks, 0)], -1)
+        return out.astype(np.int32)
+
+    def hotness_blocks(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Block boundaries grouping equal-frequency ranks (paper §4.2-III:
+        blocks B(i) share the same corpus frequency). Returns (starts, ends)
+        index ranges in rank space, hottest block first."""
+        occ = self.sorted_ocn
+        if len(occ) == 0:
+            return np.zeros(0, np.int64), np.zeros(0, np.int64)
+        change = np.nonzero(np.diff(occ))[0] + 1
+        starts = np.concatenate([[0], change])
+        ends = np.concatenate([change, [len(occ)]])
+        return starts.astype(np.int64), ends.astype(np.int64)

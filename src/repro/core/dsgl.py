@@ -1,0 +1,242 @@
+"""DSGL — distributed Skip-Gram learning (paper §4).
+
+Improvement-I  (global matrices + local buffers): the embedding matrices are
+laid out in descending corpus frequency (``FrequencyOrder``); each training
+*lifetime* gathers the rows it will touch into local buffers, performs every
+update there, and writes the deltas back once at the end. On TPU the buffers
+live in VMEM (see ``repro.kernels.sgns``); this module is the pure-JAX
+reference with identical semantics.
+
+Improvement-II (multi-window shared negatives): ``multi_windows`` walks are
+trained together per lane; their context windows share one negative-sample
+set per position, and each walk's target acts as an extra negative for the
+other walks — turning K+1 dot products into one (W·2w) x (W+K) level-3
+matmul per position (MXU-shaped).
+
+Improvement-III (hotness-block synchronization) lives in
+``repro.core.sync`` and is driven from ``train_dsgl``.
+
+Race semantics: as in the paper (Hogwild heritage), duplicate rows inside a
+lifetime and across shards are updated without locks; deltas are
+scatter-added on write-back.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.corpus import Corpus, FrequencyOrder
+
+
+@dataclasses.dataclass(frozen=True)
+class DSGLConfig:
+    dim: int = 128
+    window: int = 10            # w — context half-width
+    negatives: int = 5          # K — shared negative samples per position
+    multi_windows: int = 2      # W — walks trained together per lane
+    batch_groups: int = 64      # G — lanes per jit step
+    epochs: int = 1
+    lr: float = 0.025
+    min_lr: float = 1e-4
+    neg_power: float = 0.75     # unigram^0.75 negative-sampling distribution
+    sync_period: int = 50       # lifetimes between hotness syncs
+    seed: int = 0
+    use_kernel: bool = False    # route the inner update through Pallas sgns
+
+
+def init_embeddings(
+    num_nodes: int, dim: int, key: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """word2vec convention: phi_in ~ U(-0.5/d, 0.5/d), phi_out = 0."""
+    phi_in = (jax.random.uniform(key, (num_nodes, dim), jnp.float32) - 0.5) / dim
+    phi_out = jnp.zeros((num_nodes, dim), jnp.float32)
+    return phi_in, phi_out
+
+
+def negative_table(ocn_sorted: np.ndarray, power: float) -> np.ndarray:
+    """Cumulative unigram^power distribution over frequency ranks."""
+    w = np.asarray(ocn_sorted, dtype=np.float64) ** power
+    if w.sum() == 0:
+        w = np.ones_like(w)
+    cdf = np.cumsum(w / w.sum())
+    cdf[-1] = 1.0
+    return cdf
+
+
+def sample_negatives(
+    cdf: np.ndarray, shape: Tuple[int, ...], rng: np.random.Generator
+) -> np.ndarray:
+    u = rng.random(shape)
+    return np.searchsorted(cdf, u).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# One lifetime: W walks x T positions, local-buffer semantics.
+# The math lives in repro.kernels.sgns: ref.py is the pure-jnp oracle and
+# kernel.py the fused Pallas version; both share one source of truth.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("window", "use_kernel"),
+                   donate_argnums=(0, 1))
+def lifetime_step(
+    phi_in: jax.Array,        # (N, d)
+    phi_out: jax.Array,       # (N, d)
+    walks: jax.Array,         # (G, W, T) int32 rank ids, -1 padded
+    negs: jax.Array,          # (G, T, K) int32 rank ids
+    lr: jax.Array,            # () f32
+    window: int,
+    use_kernel: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Process G lifetimes: gather buffers -> scan -> write back deltas."""
+    g_cnt, w_cnt, t_len = walks.shape
+    safe_walks = jnp.maximum(walks, 0)
+    valid = walks >= 0
+
+    ctx_buf0 = phi_in[safe_walks]                          # (G, W, T, d)
+    out_buf0 = phi_out[safe_walks]                         # (G, W, T, d)
+    neg_buf0 = phi_out[negs]                               # (G, T, K, d)
+
+    if use_kernel:
+        from repro.kernels.sgns import ops as sgns_ops
+        ctx_buf, out_buf, neg_buf, loss = sgns_ops.sgns_lifetime_batch(
+            ctx_buf0, out_buf0, neg_buf0, valid, lr, window
+        )
+    else:
+        from repro.kernels.sgns import ref as sgns_ref
+        ctx_buf, out_buf, neg_buf, loss = sgns_ref.sgns_lifetime_batch_ref(
+            ctx_buf0, out_buf0, neg_buf0, valid, lr, window
+        )
+
+    # Write-back: duplicate buffer rows of the same embedding row (hub nodes
+    # appear in many walks of one batch — power-law!) are AVERAGED, not
+    # summed. Summing multiplies a hot row's step by its duplicate count and
+    # diverges exponentially; averaging is the parallel-SGD semantics of the
+    # paper's racy cross-thread write-back, and is stable.
+    n_rows = phi_in.shape[0]
+    flat_ids = safe_walks.reshape(-1)
+    d_in = (ctx_buf - ctx_buf0).reshape(flat_ids.shape[0], -1)
+    d_out = (out_buf - out_buf0).reshape(flat_ids.shape[0], -1)
+    mask = valid.reshape(-1)
+    neg_ids = negs.reshape(-1)
+    d_neg = (neg_buf - neg_buf0).reshape(neg_ids.shape[0], -1)
+
+    def scatter_mean(base, ids, deltas, m):
+        ones = jnp.where(m, 1.0, 0.0)
+        cnt = jnp.zeros((n_rows,), jnp.float32).at[ids].add(ones)
+        summed = jnp.zeros_like(base).at[ids].add(
+            jnp.where(m[:, None], deltas, 0.0)
+        )
+        return base + summed / jnp.maximum(cnt, 1.0)[:, None]
+
+    phi_in = scatter_mean(phi_in, flat_ids, d_in, mask)
+    # phi_out receives deltas from both walk-token rows and negative rows;
+    # average across the union so a hot node's total step stays bounded.
+    out_ids = jnp.concatenate([flat_ids, neg_ids])
+    out_deltas = jnp.concatenate([d_out, d_neg], axis=0)
+    out_mask = jnp.concatenate([mask, jnp.ones_like(neg_ids, bool)])
+    phi_out = scatter_mean(phi_out, out_ids, out_deltas, out_mask)
+    return phi_in, phi_out, jnp.sum(loss)
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+
+def _group_walks(
+    walks: np.ndarray, w_cnt: int, g_cnt: int, rng: np.random.Generator
+) -> np.ndarray:
+    """Shuffle walks and pack into (num_steps, G, W, T) batches (drop tail)."""
+    order = rng.permutation(walks.shape[0])
+    per_step = g_cnt * w_cnt
+    n_steps = len(order) // per_step
+    if n_steps == 0:  # small corpora: pad by repetition
+        reps = -(-per_step // max(len(order), 1))
+        order = np.tile(order, reps)[:per_step]
+        n_steps = 1
+    order = order[: n_steps * per_step]
+    return walks[order].reshape(n_steps, g_cnt, w_cnt, walks.shape[1])
+
+
+def train_dsgl(
+    corpus: Corpus,
+    order: FrequencyOrder,
+    cfg: DSGLConfig,
+    *,
+    num_shards: int = 1,
+    collect_metrics: bool = False,
+):
+    """Train Skip-Gram embeddings over the corpus (rank space).
+
+    ``num_shards`` > 1 runs the paper's distributed regime: the corpus is
+    split across shard replicas, each trains locally, and replicas exchange
+    hotness-block synchronizations every ``cfg.sync_period`` lifetimes
+    (Improvement-III, ``repro.core.sync``). Returns (phi_in, phi_out) in
+    RANK space (row 0 = hottest node); use ``order.to_rank`` to map ids.
+    """
+    from repro.core import sync as sync_mod
+
+    n = len(order.to_rank)
+    walks_rank = order.relabel_walks(corpus.walks)
+    cdf = negative_table(order.sorted_ocn, cfg.neg_power)
+    rng = np.random.default_rng(cfg.seed)
+    key = jax.random.PRNGKey(cfg.seed)
+
+    # Per-shard replicas (num_shards == 1 -> plain single training).
+    replicas = []
+    for s in range(num_shards):
+        key, k = jax.random.split(key)
+        replicas.append(init_embeddings(n, cfg.dim, k))
+
+    shard_walks = [walks_rank[s::num_shards] for s in range(num_shards)]
+    starts, ends = order.hotness_blocks()
+    metrics = {"loss": [], "sync_bytes": 0.0, "steps": 0}
+
+    t_len = walks_rank.shape[1]
+    for epoch in range(cfg.epochs):
+        batches = [
+            _group_walks(sw, cfg.multi_windows, cfg.batch_groups, rng)
+            for sw in shard_walks
+        ]
+        n_steps = min(b.shape[0] for b in batches)
+        total = max(cfg.epochs * n_steps, 1)
+        for step in range(n_steps):
+            frac = (epoch * n_steps + step) / total
+            lr = jnp.float32(max(cfg.lr * (1 - frac), cfg.min_lr))
+            for s in range(num_shards):
+                phi_in, phi_out = replicas[s]
+                wb = jnp.asarray(batches[s][step])
+                neg = jnp.asarray(
+                    sample_negatives(cdf, (cfg.batch_groups, t_len, cfg.negatives), rng)
+                )
+                phi_in, phi_out, loss = lifetime_step(
+                    phi_in, phi_out, wb, neg, lr, cfg.window, cfg.use_kernel
+                )
+                replicas[s] = (phi_in, phi_out)
+                if collect_metrics:
+                    metrics["loss"].append(float(loss))
+            metrics["steps"] += 1
+            if num_shards > 1 and (step + 1) % cfg.sync_period == 0:
+                replicas, nbytes = sync_mod.hotness_block_sync(
+                    replicas, starts, ends, rng
+                )
+                metrics["sync_bytes"] += nbytes
+
+    if num_shards > 1:
+        replicas, nbytes = sync_mod.hotness_block_sync(replicas, starts, ends, rng)
+        metrics["sync_bytes"] += nbytes
+        phi_in = jnp.mean(jnp.stack([r[0] for r in replicas]), axis=0)
+        phi_out = jnp.mean(jnp.stack([r[1] for r in replicas]), axis=0)
+    else:
+        phi_in, phi_out = replicas[0]
+
+    if collect_metrics:
+        return phi_in, phi_out, metrics
+    return phi_in, phi_out

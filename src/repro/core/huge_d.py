@@ -1,0 +1,41 @@
+"""HuGE-D — the paper's distributed baseline (§2.3).
+
+Same information-oriented walk as DistGER, but with the *full-path
+computation mechanism*: H and R are recomputed from the whole path at every
+step (O(L)/step => O(L^2) per walk) and cross-machine messages carry the
+path (24 + 8L bytes). On our engine this is just the ``fullpath`` info mode;
+this module pins the configuration so benchmarks and tests reference one
+canonical baseline object.
+"""
+
+from __future__ import annotations
+
+from repro.core.corpus import Corpus, generate_corpus
+from repro.core.walker import WalkSpec
+
+
+def huge_d_spec(
+    max_len: int = 100, min_len: int = 20, mu: float = 0.995, reg_start: int = 16
+) -> WalkSpec:
+    return WalkSpec(max_len=max_len, min_len=min_len, mu=mu,
+                    info_mode="fullpath", reg_start=reg_start)
+
+
+def distger_spec(
+    max_len: int = 100, min_len: int = 20, mu: float = 0.995, reg_start: int = 16
+) -> WalkSpec:
+    """Production spec: suffix regression from L0=16 reproduces HuGE's
+    reported adaptive walk lengths (~63% shorter than the routine L=80);
+    reg_start=1 recovers the paper-literal full series (DESIGN.md §8)."""
+    return WalkSpec(max_len=max_len, min_len=min_len, mu=mu,
+                    info_mode="incom", reg_start=reg_start)
+
+
+def routine_spec(fixed_len: int = 80) -> WalkSpec:
+    """KnightKing-style routine configuration (L=80, r=10)."""
+    return WalkSpec(max_len=fixed_len, info_mode="fixed", fixed_len=fixed_len)
+
+
+def generate_corpus_huge_d(graph, **kwargs) -> Corpus:
+    kwargs.setdefault("spec", huge_d_spec())
+    return generate_corpus(graph, **kwargs)

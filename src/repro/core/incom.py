@@ -1,0 +1,216 @@
+"""InCoM — incremental information-centric computing (paper §3.1).
+
+The walker's information state is ten scalars (exactly the constant-size
+message of Example 1): ``[walker_id, steps, node_id, H, L, E(H), E(L),
+E(HL), E(H^2), E(L^2)]``. This module implements, fully vectorized over a
+batch of walkers:
+
+* Theorem 1 / Eq. 8 — O(1) incremental entropy update,
+* Eq. 13 — O(1) incremental running means / cross-moment
+  (with the cross-moment erratum fix documented in ``repro.core.info``),
+* Eq. 12 — R(H, L) from the running expectations.
+
+``n(v)`` (occurrences of the accepted node in the ongoing walk) is obtained
+by a masked-lane count over the walker's fixed-length path buffer — the
+TPU-native replacement for the paper's machine-local frequency list (see
+DESIGN.md §2): one VPU op, no divergent hashing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+LOG2 = jnp.log(jnp.float32(2.0))
+
+# Message layout (floats) for the constant-size InCoM cross-shard message.
+MSG_FIELDS = (
+    "walker_id", "steps", "node_id", "H", "L",
+    "EH", "EL", "EHL", "EH2", "EL2",
+)
+MSG_WIDTH = len(MSG_FIELDS)          # 10 fields
+MSG_BYTES = 8 * MSG_WIDTH            # 80 bytes (Example 1)
+
+
+def fullpath_msg_bytes(walk_len: jax.Array) -> jax.Array:
+    """HuGE-D message size: 24 + 8L bytes (Example 1)."""
+    return 24 + 8 * walk_len
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class InfoState:
+    """Per-walker incremental information state (all shape (B,), float32).
+
+    ``L`` is the current walk length (number of nodes, source included).
+    The running expectations are over the series {(L_i, H_i)}_{i=1..L},
+    seeded with the initial point (L=1, H=0).
+    """
+
+    H: jax.Array
+    L: jax.Array
+    EH: jax.Array
+    EL: jax.Array
+    EHL: jax.Array
+    EH2: jax.Array
+    EL2: jax.Array
+
+    def tree_flatten(self):
+        return (self.H, self.L, self.EH, self.EL, self.EHL, self.EH2, self.EL2), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @classmethod
+    def init(cls, batch: int) -> "InfoState":
+        z = jnp.zeros((batch,), jnp.float32)
+        one = jnp.ones((batch,), jnp.float32)
+        # Seed with the first series point (L=1, H=0).
+        return cls(H=z, L=one, EH=z, EL=one, EHL=z, EH2=z, EL2=one)
+
+
+def _xlogx(x: jax.Array) -> jax.Array:
+    """x * log2(x) with the 0*log(0) = 0 convention."""
+    safe = jnp.where(x > 0, x, 1.0)
+    return jnp.where(x > 0, x * jnp.log2(safe), 0.0)
+
+
+def entropy_step(H: jax.Array, L: jax.Array, n_v: jax.Array) -> jax.Array:
+    """Theorem 1: H(W^{L+1}) from H(W^L), L, and n(v) of the accepted node.
+
+        H^{L+1} = (H^L * L - log2 T) / (L + 1)
+        log2 T  = L log2 L - (L+1) log2 (L+1) + (n+1) log2 (n+1) - n log2 n
+
+    (The two cases of Theorem 1 collapse into one formula since n=0 gives
+    the v-not-in-walk branch with 0*log 0 = 0.)
+    """
+    n = n_v.astype(jnp.float32)
+    log_t = _xlogx(L) - _xlogx(L + 1.0) + _xlogx(n + 1.0) - _xlogx(n)
+    return (H * L - log_t) / (L + 1.0)
+
+
+def stats_step(
+    s: InfoState, h_new: jax.Array, l_new: jax.Array, reg_start: int = 1
+) -> InfoState:
+    """Eq. 13 running updates with the new series point (l_new, h_new).
+
+    ``reg_start`` = L0 >= 1 starts the regression series at length L0,
+    skipping the universal early log-transient of the entropy curve (see
+    DESIGN.md §8): p = l_new - L0 + 1 points so far. reg_start=1 is the
+    paper-literal full series (p = l_new). While l_new <= L0 the stats are
+    re-seeded with the current point (weight-0 history) — still O(1)/step
+    and still exactly the paper's 10-field constant-size message.
+    """
+    p = jnp.maximum(l_new - jnp.float32(reg_start) + 1.0, 1.0)
+    w_prev = (p - 1.0) / p
+    return InfoState(
+        H=h_new,
+        L=l_new,
+        EH=w_prev * s.EH + h_new / p,
+        EL=w_prev * s.EL + l_new / p,
+        # Correct running cross/raw second moments (see info.py erratum note).
+        EHL=(w_prev * s.EHL) + (h_new * l_new) / p,
+        EH2=(w_prev * s.EH2) + (h_new * h_new) / p,
+        EL2=(w_prev * s.EL2) + (l_new * l_new) / p,
+    )
+
+
+def r_squared(s: InfoState, eps: float = 1e-12) -> jax.Array:
+    """Eq. 12: R^2(H, L) from the running expectations (vectorized)."""
+    cov = s.EHL - s.EH * s.EL
+    vh = jnp.maximum(s.EH2 - s.EH * s.EH, 0.0)
+    vl = jnp.maximum(s.EL2 - s.EL * s.EL, 0.0)
+    denom = vh * vl
+    r2 = jnp.where(denom > eps, (cov * cov) / jnp.maximum(denom, eps), 0.0)
+    return r2
+
+
+def windowed_r_squared(
+    hring: jax.Array, L: jax.Array, window: int, eps: float = 1e-12
+) -> jax.Array:
+    """R^2(H, L) over the LAST ``window`` series points, from a ring buffer.
+
+    ``hring`` is (B, K): slot (s-1) mod K holds H(W^s). The windowed variant
+    measures *recent* H-vs-L linearity, i.e. actual convergence of the
+    entropy series. See DESIGN.md §8: the paper-literal full-series Pearson
+    from L=1 is dominated by the early log-shaped segment (r^2 <= ~0.93 for
+    any walk by L=8), so mu = 0.995 degenerates to fixed min-length walks;
+    the windowed form reproduces HuGE's reported adaptive lengths while
+    keeping O(1)/step updates and constant-size messages (80 B + 4K B ring).
+    """
+    b, k = hring.shape
+    offs = jnp.arange(k, dtype=jnp.float32)[None, :]          # 0..K-1
+    l_pts = L[:, None] - offs                                  # L, L-1, ...
+    valid = (l_pts >= 1.0) & (offs < jnp.float32(window))
+    slot = jnp.mod(l_pts.astype(jnp.int32) - 1, k)
+    h_pts = jnp.take_along_axis(hring, jnp.clip(slot, 0, k - 1), axis=1)
+    w = valid.astype(jnp.float32)
+    cnt = jnp.maximum(jnp.sum(w, -1), 1.0)
+    eh = jnp.sum(h_pts * w, -1) / cnt
+    el = jnp.sum(l_pts * w, -1) / cnt
+    ehl = jnp.sum(h_pts * l_pts * w, -1) / cnt
+    eh2 = jnp.sum(h_pts * h_pts * w, -1) / cnt
+    el2 = jnp.sum(l_pts * l_pts * w, -1) / cnt
+    cov = ehl - eh * el
+    vh = jnp.maximum(eh2 - eh * eh, 0.0)
+    vl = jnp.maximum(el2 - el * el, 0.0)
+    denom = vh * vl
+    return jnp.where(denom > eps, cov * cov / jnp.maximum(denom, eps), 0.0)
+
+
+def count_in_path(path: jax.Array, length: jax.Array, v: jax.Array) -> jax.Array:
+    """n(v): occurrences of v among the first ``length`` entries of ``path``.
+
+    path: (B, max_len) int32, padded with -1; length: (B,); v: (B,).
+    One masked compare+sum over lanes — the local-frequency-list analogue.
+    """
+    max_len = path.shape[-1]
+    pos = jnp.arange(max_len, dtype=jnp.int32)[None, :]
+    mask = pos < length[:, None]
+    hit = (path == v[:, None]) & mask
+    return jnp.sum(hit, axis=-1).astype(jnp.int32)
+
+
+def accept_update(
+    s: InfoState,
+    path: jax.Array,
+    v: jax.Array,
+    reg_start: int = 1,
+) -> Tuple[InfoState, jax.Array]:
+    """Apply one accepted step: compute n(v), H^{L+1}, running stats, and the
+    appended path. Returns (new_state, new_path)."""
+    n_v = count_in_path(path, s.L.astype(jnp.int32), v)
+    h_new = entropy_step(s.H, s.L, n_v)
+    l_new = s.L + 1.0
+    s_new = stats_step(s, h_new, l_new, reg_start)
+    b = path.shape[0]
+    idx = s.L.astype(jnp.int32)  # append position == old length
+    path_new = path.at[jnp.arange(b), idx].set(v)
+    return s_new, path_new
+
+
+def pack_message(walker_id: jax.Array, node_id: jax.Array, s: InfoState) -> jax.Array:
+    """Constant-size (B, 10) float32 message — the Example 1 payload."""
+    return jnp.stack(
+        [
+            walker_id.astype(jnp.float32),
+            s.L,  # steps
+            node_id.astype(jnp.float32),
+            s.H, s.L, s.EH, s.EL, s.EHL, s.EH2, s.EL2,
+        ],
+        axis=-1,
+    )
+
+
+def unpack_message(msg: jax.Array) -> Tuple[jax.Array, jax.Array, InfoState]:
+    walker_id = msg[..., 0].astype(jnp.int32)
+    node_id = msg[..., 2].astype(jnp.int32)
+    s = InfoState(
+        H=msg[..., 3], L=msg[..., 4], EH=msg[..., 5], EL=msg[..., 6],
+        EHL=msg[..., 7], EH2=msg[..., 8], EL2=msg[..., 9],
+    )
+    return walker_id, node_id, s

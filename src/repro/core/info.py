@@ -1,0 +1,129 @@
+"""Full-path information measurements (paper Eq. 4–7) — the reference oracle.
+
+Everything here recomputes from the complete walk path. It is the ground
+truth that ``repro.core.incom`` (Theorem 1 incremental computing) must match
+exactly, and it is also what the HuGE-D baseline executes at every step
+(O(L) per step — the cost InCoM removes).
+
+Logs are base 2 throughout (Theorem 1's proof manipulates 2^{-H·L}).
+"""
+
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import numpy as np
+
+
+def walk_entropy(path: Sequence[int]) -> float:
+    """H(W^L) = -sum_v n(v)/L log2 n(v)/L   (Eq. 4)."""
+    path = np.asarray(path)
+    if path.size == 0:
+        return 0.0
+    _, counts = np.unique(path, return_counts=True)
+    p = counts / path.size
+    return float(-np.sum(p * np.log2(p)))
+
+
+def walk_entropy_series(path: Sequence[int]) -> np.ndarray:
+    """H(W^1), H(W^2), ..., H(W^L) — entropy of every prefix."""
+    path = np.asarray(path)
+    return np.asarray([walk_entropy(path[: i + 1]) for i in range(path.size)])
+
+
+def pearson_r(h_series: Sequence[float], l_series: Sequence[float]) -> float:
+    """R(H, L) per Eq. 5 / Eq. 12 (plain Pearson correlation).
+
+    Degenerate series (zero variance in either coordinate) return 0.0 — a
+    flat entropy series means the walk has converged, and R -> 0 is exactly
+    the paper's termination direction.
+    """
+    h = np.asarray(h_series, dtype=np.float64)
+    l = np.asarray(l_series, dtype=np.float64)
+    if h.size < 2:
+        return 1.0  # too short to judge: keep walking
+    eh, el = h.mean(), l.mean()
+    cov = np.mean(h * l) - eh * el
+    vh = np.mean(h * h) - eh * eh
+    vl = np.mean(l * l) - el * el
+    denom = np.sqrt(max(vh, 0.0) * max(vl, 0.0))
+    if denom <= 1e-30:
+        return 0.0
+    return float(cov / denom)
+
+
+def r_squared_of_path(path: Sequence[int]) -> float:
+    """R^2(H, L) computed from scratch over a full path."""
+    path = np.asarray(path)
+    h = walk_entropy_series(path)
+    l = np.arange(1, path.size + 1, dtype=np.float64)
+    r = pearson_r(h, l)
+    return float(r * r)
+
+
+def huge_walk_should_stop(path: Sequence[int], mu: float, min_len: int) -> bool:
+    """HuGE termination: R^2(H, L) < mu once the walk has min_len nodes."""
+    if len(path) < min_len:
+        return False
+    return r_squared_of_path(path) < mu
+
+
+def relative_entropy_dpq(degrees: np.ndarray, ocn: np.ndarray) -> float:
+    """D(p || q) between degree and corpus-occurrence distributions (Eq. 6).
+
+    Nodes with ocn == 0 are guarded with a small epsilon, mirroring an
+    unconverged corpus (they push D up, demanding more walks).
+    """
+    deg = np.asarray(degrees, dtype=np.float64)
+    occ = np.asarray(ocn, dtype=np.float64)
+    sum_deg = deg.sum()
+    sum_occ = occ.sum()
+    if sum_deg == 0 or sum_occ == 0:
+        return float("inf")
+    p = deg / sum_deg
+    q = occ / sum_occ
+    mask = p > 0
+    eps = 1e-12
+    return float(np.sum(p[mask] * np.log2(p[mask] / (q[mask] + eps))))
+
+
+def reference_huge_walk_length(
+    path: Sequence[int], mu: float = 0.995, min_len: int = 5
+) -> int:
+    """Walk length HuGE would choose on this node sequence — scans prefixes
+    until the termination condition fires (pure-python oracle for tests)."""
+    path = np.asarray(path)
+    for L in range(min_len, path.size + 1):
+        if r_squared_of_path(path[:L]) < mu:
+            return L
+    return int(path.size)
+
+
+def incremental_mean_update(e_prev: float, x_p: float, p: int) -> float:
+    """E_p(X) = ((p-1)/p) E_{p-1}(X) + X_p / p   (Eq. 13, first line)."""
+    return ((p - 1) / p) * e_prev + x_p / p
+
+
+def incremental_cross_update(exy_prev: float, x_p: float, y_p: float, p: int) -> float:
+    """E_p(XY) = ((p-1) E_{p-1}(XY) + X_p Y_p) / p.
+
+    NOTE (paper erratum): the paper's printed Eq. 13 second line expands to
+    E_p(X)·E_p(Y) rather than the running cross-moment — plugging it into
+    Eq. 12 would make the covariance identically ~0 and terminate every walk
+    at min_len. We verified numerically (X=Y=[1,2]: true E_2(XY)=2.5, the
+    printed formula gives 2.25=E_2(X)E_2(Y)) and implement the correct
+    running cross-moment, which makes incremental R match full-path R
+    exactly (property-tested in tests/test_incom.py).
+    """
+    return ((p - 1) * exy_prev + x_p * y_p) / p
+
+
+def r_from_stats(eh, el, ehl, eh2, el2) -> float:
+    """Eq. 12: R from the five running expectations."""
+    cov = ehl - eh * el
+    vh = eh2 - eh * eh
+    vl = el2 - el * el
+    denom = np.sqrt(max(vh, 0.0) * max(vl, 0.0))
+    if denom <= 1e-30:
+        return 0.0
+    return float(cov / denom)

@@ -1,0 +1,90 @@
+"""Hotness-block synchronization (paper §4.2 Improvement-III).
+
+The global matrices are frequency-sorted (Improvement-I), so nodes with the
+same corpus occurrence count form contiguous rank ranges — the hotness
+blocks B(i). One synchronization period samples ONE row per block and
+averages exactly those rows across all shard replicas:
+
+* a node in B(i) is sampled with probability 1/|B(i)| — hot nodes (tiny
+  blocks, often singletons) sync nearly every period, the long cold tail
+  (huge blocks) rarely — matching update frequency to sync frequency;
+* cost per period is O(ocn_max · d · m) instead of O(|V| · d · m)
+  (ocn_max = number of blocks <= max corpus occurrence count).
+
+``full_sync`` is the baseline the paper compares against. Both return the
+byte volume they moved so benchmarks can reproduce the §4.2-III claim.
+
+This module is the *logical* (replica-list) form used by trainers and
+benchmarks anywhere; ``repro.dist.collectives`` provides the shard_map/psum
+form of the same exchange for the SPMD dry-run.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Replica = Tuple[jax.Array, jax.Array]  # (phi_in, phi_out)
+
+
+def sample_hotness_rows(
+    starts: np.ndarray, ends: np.ndarray, rng: np.random.Generator
+) -> np.ndarray:
+    """One uniformly-sampled rank per hotness block."""
+    if len(starts) == 0:
+        return np.zeros(0, dtype=np.int64)
+    u = rng.random(len(starts))
+    rows = starts + np.floor(u * (ends - starts)).astype(np.int64)
+    return rows
+
+
+def hotness_block_sync(
+    replicas: List[Replica],
+    starts: np.ndarray,
+    ends: np.ndarray,
+    rng: np.random.Generator,
+) -> Tuple[List[Replica], float]:
+    """Average the sampled hotness rows across replicas. Returns the new
+    replica list and the bytes moved (rows * d * 4 B * m replicas * 2
+    matrices)."""
+    m = len(replicas)
+    if m <= 1:
+        return replicas, 0.0
+    rows = sample_hotness_rows(starts, ends, rng)
+    if rows.size == 0:
+        return replicas, 0.0
+    rows_j = jnp.asarray(rows)
+    mean_in = jnp.mean(jnp.stack([r[0][rows_j] for r in replicas]), axis=0)
+    mean_out = jnp.mean(jnp.stack([r[1][rows_j] for r in replicas]), axis=0)
+    new_replicas = [
+        (r[0].at[rows_j].set(mean_in), r[1].at[rows_j].set(mean_out))
+        for r in replicas
+    ]
+    dim = int(replicas[0][0].shape[1])
+    nbytes = float(rows.size * dim * 4 * m * 2)
+    return new_replicas, nbytes
+
+
+def full_sync(replicas: List[Replica]) -> Tuple[List[Replica], float]:
+    """Baseline: average EVERY row across replicas — O(|V| d m) bytes."""
+    m = len(replicas)
+    if m <= 1:
+        return replicas, 0.0
+    mean_in = jnp.mean(jnp.stack([r[0] for r in replicas]), axis=0)
+    mean_out = jnp.mean(jnp.stack([r[1] for r in replicas]), axis=0)
+    n, d = replicas[0][0].shape
+    nbytes = float(n * d * 4 * m * 2)
+    return [(mean_in, mean_out) for _ in range(m)], nbytes
+
+
+def sync_cost_model(
+    num_nodes: int, dim: int, m: int, num_blocks: int
+) -> Tuple[float, float]:
+    """(hotness_bytes, full_bytes) per synchronization period — the paper's
+    O(ocn_max d m) vs O(|V| d m) comparison, in concrete bytes."""
+    hot = float(num_blocks * dim * 4 * m * 2)
+    full = float(num_nodes * dim * 4 * m * 2)
+    return hot, full

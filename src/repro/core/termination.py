@@ -1,0 +1,44 @@
+"""Walk-count controller (paper Eq. 6–7): how many walks per node.
+
+After each round r (one walk from every source node), HuGE compares the
+node-degree distribution p(v) against the corpus-occurrence distribution
+q(v) via relative entropy D_r(p||q) and stops when
+|D_r - D_{r-1}| <= delta (delta = 0.001 in the paper).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from repro.graph.csr import CSRGraph
+from repro.core.info import relative_entropy_dpq
+
+
+@dataclasses.dataclass
+class WalkCountController:
+    delta: float = 1e-3
+    min_rounds: int = 2
+    max_rounds: int = 20
+
+    def __post_init__(self):
+        self.history: List[float] = []
+
+    def update(self, degrees: np.ndarray, ocn: np.ndarray) -> bool:
+        """Record D_r for the corpus so far; return True if walking should
+        CONTINUE (i.e. |Delta D_r| > delta or not enough rounds yet)."""
+        d_r = relative_entropy_dpq(degrees, ocn)
+        self.history.append(d_r)
+        r = len(self.history)
+        if r < self.min_rounds:
+            return True
+        if r >= self.max_rounds:
+            return False
+        delta_d = abs(self.history[-1] - self.history[-2])
+        return bool(delta_d > self.delta)
+
+    @property
+    def rounds(self) -> int:
+        return len(self.history)

@@ -1,0 +1,159 @@
+"""Walk transition policies (paper Eq. 3 + §2.1/§2.2 baselines).
+
+All policies expose one vectorized function:
+
+    accept_prob(graph, prev, cur, cand, cand_edge_idx) -> (B,) float32
+
+used inside the rejection/backtracking loop of the walker engine
+(HuGE's walking-backtracking == KnightKing's rejection sampling; a rejected
+lane keeps ``cur`` and redraws next superstep).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph.csr import CSRGraph
+
+
+def node_degrees(graph: CSRGraph, nodes: jax.Array) -> jax.Array:
+    return (graph.indptr[nodes + 1] - graph.indptr[nodes]).astype(jnp.float32)
+
+
+def row_contains(graph: CSRGraph, rows: jax.Array, values: jax.Array) -> jax.Array:
+    """Vectorized membership test: values[i] in sorted N(rows[i]).
+
+    Fixed-iteration binary search over each CSR row (32 steps cover any
+    |E| < 2^32) — SIMD-friendly, no data-dependent trip counts.
+    """
+    lo = graph.indptr[rows].astype(jnp.int32)
+    hi0 = graph.indptr[rows + 1].astype(jnp.int32)
+
+    def body(_, carry):
+        lo, hi = carry
+        searching = lo < hi
+        mid = (lo + hi) // 2
+        mid_val = graph.indices[jnp.clip(mid, 0, graph.indices.shape[0] - 1)]
+        less = mid_val < values
+        lo = jnp.where(searching & less, mid + 1, lo)
+        hi = jnp.where(searching & ~less, mid, hi)
+        return lo, hi
+
+    lo_f, _ = jax.lax.fori_loop(0, 32, body, (lo, hi0))
+    pos = jnp.clip(lo_f, 0, graph.indices.shape[0] - 1)
+    found = (lo_f < hi0) & (graph.indices[pos] == values)
+    return found
+
+
+def common_neighbors_onthefly(
+    graph: CSRGraph, u: jax.Array, v: jax.Array, max_deg: int
+) -> jax.Array:
+    """Reference on-the-fly Cm(u, v): for each neighbor of u, test membership
+    in N(v). O(deg * log deg) per pair — used only for validating the
+    precomputed ``edge_cm`` (DESIGN.md §2)."""
+    b = u.shape[0]
+    base = graph.indptr[u].astype(jnp.int32)
+    deg = (graph.indptr[u + 1] - graph.indptr[u]).astype(jnp.int32)
+    offs = jnp.arange(max_deg, dtype=jnp.int32)[None, :]
+    valid = offs < deg[:, None]
+    nbr_idx = jnp.clip(base[:, None] + offs, 0, graph.indices.shape[0] - 1)
+    nbrs = graph.indices[nbr_idx]
+    flat_rows = jnp.repeat(v, max_deg)
+    flat_vals = nbrs.reshape(-1)
+    member = row_contains(graph, flat_rows, flat_vals).reshape(b, max_deg)
+    return jnp.sum(member & valid, axis=-1).astype(jnp.int32)
+
+
+class Policy:
+    """Base class — subclasses are stateless, graph-closed callables."""
+
+    needs_prev: bool = False
+    needs_edge_cm: bool = False     # HuGE transition needs Cm(u,v) precompute
+
+    def accept_prob(
+        self,
+        graph: CSRGraph,
+        prev: jax.Array,
+        cur: jax.Array,
+        cand: jax.Array,
+        cand_edge_idx: jax.Array,
+    ) -> jax.Array:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class HugePolicy(Policy):
+    """HuGE information-oriented transition (Eq. 3):
+
+        alpha(u,v) = 1/(deg(u) - Cm(u,v)) * max(deg(u)/deg(v), deg(v)/deg(u))
+        P(u,v)     = Z(alpha * w(u,v)),  Z(x) = tanh(x)
+
+    Cm comes from the CSR-aligned precompute (graph.edge_cm); since v is a
+    neighbor of u and graphs are loop-free, deg(u) - Cm(u,v) >= 1 always.
+    """
+
+    needs_prev = False
+    needs_edge_cm = True
+
+    def accept_prob(self, graph, prev, cur, cand, cand_edge_idx):
+        deg_u = node_degrees(graph, cur)
+        deg_v = node_degrees(graph, cand)
+        if graph.edge_cm is None:
+            raise ValueError("HugePolicy requires graph.with_edge_cm()")
+        cm = graph.edge_cm[cand_edge_idx].astype(jnp.float32)
+        ratio = jnp.maximum(deg_u / jnp.maximum(deg_v, 1.0),
+                            deg_v / jnp.maximum(deg_u, 1.0))
+        alpha = ratio / jnp.maximum(deg_u - cm, 1.0)
+        if graph.weights is not None:
+            alpha = alpha * graph.weights[cand_edge_idx]
+        return jnp.tanh(alpha)
+
+
+@dataclasses.dataclass(frozen=True)
+class Node2vecPolicy(Policy):
+    """node2vec second-order walk via rejection sampling (KnightKing §2.2).
+
+    pi(u,v) = 1/p if v == prev; 1 if v in N(prev); 1/q otherwise.
+    Envelope Q = max(1/p, 1, 1/q); acceptance = pi / Q.
+    """
+
+    p: float = 1.0
+    q: float = 1.0
+    needs_prev = True
+
+    def accept_prob(self, graph, prev, cur, cand, cand_edge_idx):
+        inv_p = jnp.float32(1.0 / self.p)
+        inv_q = jnp.float32(1.0 / self.q)
+        envelope = jnp.maximum(jnp.maximum(inv_p, 1.0), inv_q)
+        is_return = cand == prev
+        is_common = row_contains(graph, prev, cand)
+        pi = jnp.where(is_return, inv_p, jnp.where(is_common, 1.0, inv_q))
+        # First step of a walk has prev == cur: uniform first hop.
+        first = prev == cur
+        pi = jnp.where(first, envelope, pi)
+        return pi / envelope
+
+
+@dataclasses.dataclass(frozen=True)
+class DeepwalkPolicy(Policy):
+    """Uniform first-order walk — every candidate accepted."""
+
+    needs_prev = False
+
+    def accept_prob(self, graph, prev, cur, cand, cand_edge_idx):
+        return jnp.ones_like(cand, dtype=jnp.float32)
+
+
+def make_policy(name: str, **kwargs) -> Policy:
+    name = name.lower()
+    if name == "huge":
+        return HugePolicy()
+    if name == "node2vec":
+        return Node2vecPolicy(p=kwargs.get("p", 1.0), q=kwargs.get("q", 1.0))
+    if name == "deepwalk":
+        return DeepwalkPolicy()
+    raise ValueError(f"unknown policy {name!r}")

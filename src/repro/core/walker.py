@@ -1,0 +1,295 @@
+"""Batched information-oriented random-walk engine (paper §3.1, Alg. 1).
+
+TPU-native realization of the walker-centric model: every walker is a lane
+of a batched tensor program; one ``lax.while_loop`` iteration is one BSP
+superstep. Rejected lanes (walking-backtracking) keep their current node and
+redraw next superstep — the identical Markov chain, with no lane divergence.
+
+Three information modes:
+
+* ``incom``    — DistGER: Theorem 1 / Eq. 13 O(1) incremental updates.
+* ``fullpath`` — HuGE-D baseline: recompute H from the path and R over the
+                 stored H-series at every step (O(L) work/step, O(L) msgs).
+* ``fixed``    — KnightKing-style routine walks (L fixed, e.g. 80).
+
+Cross-partition message accounting (counts + bytes) is carried in-loop when
+a partition assignment is provided, reproducing Fig. 10(c) / Example 1
+measurements exactly (80 B constant vs 24+8L B full-path messages).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import incom
+from repro.core.transition import Policy, node_degrees
+from repro.graph.csr import CSRGraph
+
+
+@dataclasses.dataclass(frozen=True)
+class WalkSpec:
+    max_len: int = 100          # path buffer capacity (hard cap)
+    min_len: int = 8            # don't test termination before this length
+    mu: float = 0.995           # Eq. 5 termination threshold (R^2 < mu)
+    info_mode: str = "incom"    # "incom" | "fullpath" | "fixed"
+    fixed_len: int = 80         # routine walk length (info_mode == "fixed")
+    reg_start: int = 1          # L0: start of the regression series. 1 =
+                                # paper-literal; 16 reproduces HuGE's
+                                # reported adaptive lengths (DESIGN.md §8)
+    reg_window: int = 0         # optional ring-buffer variant: R^2 over the
+                                # last K points (incom.windowed_r_squared)
+    max_supersteps: int = 0     # 0 => 8 * max_len safety cap
+
+    def supersteps_cap(self) -> int:
+        return self.max_supersteps or 8 * self.max_len
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class WalkerBatchState:
+    """Loop carry for one batch of walkers."""
+
+    cur: jax.Array            # (B,) int32 current node
+    prev: jax.Array           # (B,) int32 previous node (== cur at start)
+    path: jax.Array           # (B, max_len) int32, -1 padded
+    info: incom.InfoState     # (B,) scalars
+    h_series: jax.Array       # (B, max_len) f32 (fullpath mode only; else 0-size)
+    hring: jax.Array          # (B, K) f32 ring of recent H (reg_window mode)
+    active: jax.Array         # (B,) bool
+    key: jax.Array            # PRNG key
+    supersteps: jax.Array     # () int32
+    accepts: jax.Array        # () int32
+    rejects: jax.Array        # () int32
+    msg_count: jax.Array      # () int32   cross-partition hand-offs
+    msg_bytes: jax.Array      # () float32 bytes for those hand-offs
+
+    def tree_flatten(self):
+        return (
+            self.cur, self.prev, self.path, self.info, self.h_series,
+            self.hring, self.active, self.key, self.supersteps, self.accepts,
+            self.rejects, self.msg_count, self.msg_bytes,
+        ), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def init_batch(sources: jax.Array, key: jax.Array, spec: WalkSpec) -> WalkerBatchState:
+    b = sources.shape[0]
+    path = jnp.full((b, spec.max_len), -1, jnp.int32)
+    path = path.at[:, 0].set(sources)
+    h_len = spec.max_len if spec.info_mode == "fullpath" else 1
+    k = max(spec.reg_window, 1)
+    return WalkerBatchState(
+        cur=sources.astype(jnp.int32),
+        prev=sources.astype(jnp.int32),
+        path=path,
+        info=incom.InfoState.init(b),
+        h_series=jnp.zeros((b, h_len), jnp.float32),
+        hring=jnp.zeros((b, k), jnp.float32),
+        active=jnp.ones((b,), bool),
+        key=key,
+        supersteps=jnp.zeros((), jnp.int32),
+        accepts=jnp.zeros((), jnp.int32),
+        rejects=jnp.zeros((), jnp.int32),
+        msg_count=jnp.zeros((), jnp.int32),
+        msg_bytes=jnp.zeros((), jnp.float32),
+    )
+
+
+def _fullpath_entropy(path: jax.Array, length: jax.Array) -> jax.Array:
+    """H(W^L) recomputed from scratch: O(max_len^2) lane-work per call.
+
+    Uses the positional identity  H = -(1/L) * sum_{i<L} log2(n(path_i)/L)
+    (each node v contributes n(v) positions)."""
+    b, max_len = path.shape
+    pos = jnp.arange(max_len, dtype=jnp.int32)
+    mask = pos[None, :] < length[:, None]                       # (B, max_len)
+    eq = path[:, :, None] == path[:, None, :]                   # (B, i, j)
+    eq = eq & mask[:, None, :] & mask[:, :, None]
+    n_i = jnp.sum(eq, axis=-1).astype(jnp.float32)              # (B, max_len)
+    lf = jnp.maximum(length.astype(jnp.float32), 1.0)[:, None]
+    term = jnp.where(mask, jnp.log2(jnp.maximum(n_i, 1.0) / lf), 0.0)
+    return -jnp.sum(term, axis=-1) / lf[:, 0]
+
+
+def _fullpath_r2(
+    h_series: jax.Array, length: jax.Array, window: int = 0, start: int = 1
+) -> jax.Array:
+    """Pearson R^2 over the stored prefix-entropy series (O(L)/step).
+    ``window`` > 0 restricts to the last ``window`` points; ``start`` = L0
+    drops points with L < L0 (suffix regression)."""
+    b, max_len = h_series.shape
+    pos = jnp.arange(max_len, dtype=jnp.float32)
+    l_series = pos[None, :] + 1.0
+    in_prefix = pos[None, :] < length[:, None]
+    if window:
+        in_prefix = in_prefix & (pos[None, :] >= length[:, None] - window)
+    if start > 1:
+        in_prefix = in_prefix & (l_series >= jnp.float32(start))
+    mask = in_prefix.astype(jnp.float32)
+    cnt = jnp.maximum(jnp.sum(mask, -1), 1.0)
+    eh = jnp.sum(h_series * mask, -1) / cnt
+    el = jnp.sum(l_series * mask, -1) / cnt
+    ehl = jnp.sum(h_series * l_series * mask, -1) / cnt
+    eh2 = jnp.sum(h_series * h_series * mask, -1) / cnt
+    el2 = jnp.sum(l_series * l_series * mask, -1) / cnt
+    cov = ehl - eh * el
+    vh = jnp.maximum(eh2 - eh * eh, 0.0)
+    vl = jnp.maximum(el2 - el * el, 0.0)
+    denom = vh * vl
+    return jnp.where(denom > 1e-12, cov * cov / jnp.maximum(denom, 1e-12), 0.0)
+
+
+def _superstep(
+    graph: CSRGraph,
+    policy: Policy,
+    spec: WalkSpec,
+    part: Optional[jax.Array],
+    st: WalkerBatchState,
+) -> WalkerBatchState:
+    b = st.cur.shape[0]
+    key, k_cand, k_acc = jax.random.split(st.key, 3)
+
+    deg = node_degrees(graph, st.cur)                       # (B,) f32
+    has_nbrs = deg > 0
+    u1 = jax.random.uniform(k_cand, (b,))
+    j = jnp.minimum((u1 * deg).astype(jnp.int32),
+                    jnp.maximum(deg.astype(jnp.int32) - 1, 0))
+    eidx = graph.indptr[st.cur].astype(jnp.int32) + j
+    eidx = jnp.clip(eidx, 0, graph.indices.shape[0] - 1)
+    cand = graph.indices[eidx]
+
+    p_acc = policy.accept_prob(graph, st.prev, st.cur, cand, eidx)
+    u2 = jax.random.uniform(k_acc, (b,))
+    accept = st.active & has_nbrs & (u2 < p_acc)
+    # Lanes whose node has no neighbors terminate immediately.
+    dead_end = st.active & ~has_nbrs
+
+    # --- information update on accepted lanes --------------------------------
+    info_acc, path_acc = incom.accept_update(st.info, st.path, cand, spec.reg_start)
+    new_info = jax.tree_util.tree_map(
+        lambda new, old: jnp.where(accept, new, old), info_acc, st.info
+    )
+    new_path = jnp.where(accept[:, None], path_acc, st.path)
+
+    l_new = new_info.L  # (B,) f32 — post-accept length
+
+    if spec.info_mode == "fullpath":
+        # Recompute H from scratch (O(L^2) lanes) and R over the H-series.
+        h_full = _fullpath_entropy(new_path, l_new.astype(jnp.int32))
+        idx = jnp.clip(l_new.astype(jnp.int32) - 1, 0, spec.max_len - 1)
+        h_series = jnp.where(
+            accept[:, None],
+            st.h_series.at[jnp.arange(b), idx].set(h_full),
+            st.h_series,
+        )
+        r2 = _fullpath_r2(h_series, l_new.astype(jnp.int32),
+                          spec.reg_window, spec.reg_start)
+        # Overwrite incremental H with recomputed (identical values) to keep
+        # downstream uniform; the *cost* difference is what we benchmark.
+        new_info = dataclasses.replace(new_info, H=jnp.where(accept, h_full, new_info.H))
+        hring = st.hring
+    else:
+        h_series = st.h_series
+        if spec.reg_window:
+            k = st.hring.shape[1]
+            slot = jnp.mod(l_new.astype(jnp.int32) - 1, k)
+            hring = jnp.where(
+                accept[:, None],
+                st.hring.at[jnp.arange(b), slot].set(new_info.H),
+                st.hring,
+            )
+            r2 = incom.windowed_r_squared(hring, l_new, spec.reg_window)
+        else:
+            hring = st.hring
+            r2 = incom.r_squared(new_info)
+
+    # --- termination ----------------------------------------------------------
+    if spec.info_mode == "fixed":
+        done_now = accept & (l_new >= jnp.float32(spec.fixed_len))
+    else:
+        long_enough = l_new >= jnp.float32(spec.min_len)
+        done_now = accept & long_enough & (r2 < jnp.float32(spec.mu))
+    done_now = done_now | (accept & (l_new >= jnp.float32(spec.max_len)))
+    done_now = done_now | dead_end
+
+    # --- cross-partition message accounting -----------------------------------
+    if part is not None:
+        crossed = accept & (part[st.cur] != part[cand])
+        n_crossed = jnp.sum(crossed).astype(jnp.int32)
+        if spec.info_mode == "fullpath":
+            per_msg = incom.fullpath_msg_bytes(l_new).astype(jnp.float32)
+        else:
+            # Constant-size InCoM message; the windowed variant additionally
+            # carries the K-entry H ring (still constant w.r.t. L).
+            size = incom.MSG_BYTES + 8 * spec.reg_window
+            per_msg = jnp.full((b,), float(size), jnp.float32)
+        add_bytes = jnp.sum(jnp.where(crossed, per_msg, 0.0))
+    else:
+        n_crossed = jnp.zeros((), jnp.int32)
+        add_bytes = jnp.zeros((), jnp.float32)
+
+    return WalkerBatchState(
+        cur=jnp.where(accept, cand, st.cur),
+        prev=jnp.where(accept, st.cur, st.prev),
+        path=new_path,
+        info=new_info,
+        h_series=h_series,
+        hring=hring,
+        active=st.active & ~done_now,
+        key=key,
+        supersteps=st.supersteps + 1,
+        accepts=st.accepts + jnp.sum(accept).astype(jnp.int32),
+        rejects=st.rejects
+        + jnp.sum(st.active & has_nbrs & ~accept).astype(jnp.int32),
+        msg_count=st.msg_count + n_crossed,
+        msg_bytes=st.msg_bytes + add_bytes,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("policy", "spec"))
+def run_walk_batch(
+    graph: CSRGraph,
+    sources: jax.Array,
+    key: jax.Array,
+    policy: Policy,
+    spec: WalkSpec,
+    part: Optional[jax.Array] = None,
+) -> WalkerBatchState:
+    """Run one walk per source until every lane terminates (or cap)."""
+    st = init_batch(sources, key, spec)
+    cap = spec.supersteps_cap()
+
+    def cond(s: WalkerBatchState):
+        return jnp.any(s.active) & (s.supersteps < cap)
+
+    def body(s: WalkerBatchState):
+        return _superstep(graph, policy, spec, part, s)
+
+    return jax.lax.while_loop(cond, body, st)
+
+
+def walks_to_numpy(st: WalkerBatchState) -> Tuple[np.ndarray, np.ndarray]:
+    """Extract (paths, lengths) as numpy from a finished batch."""
+    paths = np.asarray(st.path)
+    lengths = np.asarray(st.info.L, dtype=np.int64)
+    return paths, lengths
+
+
+def batch_stats(st: WalkerBatchState) -> Dict[str, float]:
+    return {
+        "supersteps": int(st.supersteps),
+        "accepts": int(st.accepts),
+        "rejects": int(st.rejects),
+        "msg_count": int(st.msg_count),
+        "msg_bytes": float(st.msg_bytes),
+        "mean_len": float(np.mean(np.asarray(st.info.L))),
+    }

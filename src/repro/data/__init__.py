@@ -1,0 +1,6 @@
+"""Host-side data pipeline: deterministic sharded streams, prefetch,
+straggler mitigation."""
+
+from repro.data.pipeline import (  # noqa: F401
+    TokenStream, WalkCorpusStream, Prefetcher, BackupShardFetcher,
+)

@@ -1,0 +1,189 @@
+"""Deterministic, sharded, restartable host data pipeline.
+
+Design rules for 1000+-node runs:
+
+* **Pure-function batches**: ``batch_at(step)`` is a pure function of
+  (seed, step, shard) — any worker can (re)materialize any batch, which is
+  what makes checkpoint-resume bit-exact and backup-shard speculation
+  trivially consistent.
+* **Prefetch**: a daemon thread keeps a bounded queue of upcoming batches.
+* **Straggler mitigation**: ``BackupShardFetcher`` races the primary fetch
+  against a backup replica after a deadline; first result wins (both are
+  deterministic, so the race is benign). Delay injection hooks let tests
+  exercise the policy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Callable, Dict, Iterator, Optional
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Token stream (LM training)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TokenStream:
+    """Synthetic-but-deterministic LM token stream with next-token labels.
+
+    Serves the role of a tokenized corpus reader; batch contents depend only
+    on (seed, step, shard_id), never on wall-clock or fetch order.
+    """
+
+    vocab_size: int
+    batch_per_shard: int
+    seq_len: int
+    seed: int = 0
+    shard_id: int = 0
+    num_shards: int = 1
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        rng = np.random.default_rng(
+            (self.seed * 1_000_003 + step) * 4096 + self.shard_id)
+        toks = rng.integers(
+            0, self.vocab_size,
+            size=(self.batch_per_shard, self.seq_len + 1), dtype=np.int32)
+        return {"tokens": toks[:, :-1],
+                "labels": toks[:, 1:].copy()}
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+@dataclasses.dataclass(frozen=True)
+class WalkCorpusStream:
+    """Batches of random-walk lifetimes from a materialized corpus (the
+    DistGER learner's input). Shuffle order is a pure function of
+    (seed, epoch); the cursor (epoch, step) checkpoints the stream."""
+
+    walks: np.ndarray            # (n_walks, T) int32, -1 padded
+    group_size: int              # G lifetimes per batch
+    multi_windows: int           # W walks per lifetime
+    seed: int = 0
+    shard_id: int = 0
+    num_shards: int = 1
+
+    def _order(self, epoch: int) -> np.ndarray:
+        rng = np.random.default_rng(self.seed * 7919 + epoch)
+        order = rng.permutation(self.walks.shape[0])
+        return order[self.shard_id::self.num_shards]
+
+    def steps_per_epoch(self) -> int:
+        per = self.group_size * self.multi_windows
+        return max(len(self._order(0)) // per, 1)
+
+    def batch_at(self, epoch: int, step: int) -> np.ndarray:
+        order = self._order(epoch)
+        per = self.group_size * self.multi_windows
+        if len(order) < per:   # tiny corpora: tile
+            order = np.tile(order, -(-per // max(len(order), 1)))
+        lo = (step * per) % max(len(order) - per + 1, 1)
+        sel = order[lo:lo + per]
+        return self.walks[sel].reshape(
+            self.group_size, self.multi_windows, self.walks.shape[1])
+
+
+# ---------------------------------------------------------------------------
+# Prefetch
+# ---------------------------------------------------------------------------
+
+class Prefetcher:
+    """Bounded background prefetch over any ``batch_at(step)`` source."""
+
+    def __init__(self, fetch: Callable[[int], object], depth: int = 2,
+                 start_step: int = 0):
+        self._fetch = fetch
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._step = start_step
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        step = self._step
+        while not self._stop.is_set():
+            batch = self._fetch(step)
+            while not self._stop.is_set():
+                try:
+                    self._q.put((step, batch), timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            step += 1
+
+    def next(self, timeout: float = 60.0):
+        return self._q.get(timeout=timeout)
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=2.0)
+
+
+# ---------------------------------------------------------------------------
+# Straggler mitigation: backup-shard speculative fetch
+# ---------------------------------------------------------------------------
+
+class BackupShardFetcher:
+    """Race a primary fetch against a backup after ``deadline_s``.
+
+    Because batches are pure functions of (step, shard), the backup replica
+    produces the identical bytes — speculation never changes training data.
+    ``delay_injector(step) -> seconds`` simulates slow primaries in tests.
+    """
+
+    def __init__(
+        self,
+        primary: Callable[[int], object],
+        backup: Callable[[int], object],
+        deadline_s: float = 0.5,
+        delay_injector: Optional[Callable[[int], float]] = None,
+    ):
+        self.primary = primary
+        self.backup = backup
+        self.deadline_s = deadline_s
+        self.delay_injector = delay_injector
+        self.stats = {"primary": 0, "backup": 0}
+
+    def fetch(self, step: int):
+        result = {}
+        done = threading.Event()
+
+        def run_primary():
+            if self.delay_injector:
+                time.sleep(self.delay_injector(step))
+            out = self.primary(step)
+            if not done.is_set():
+                result.setdefault("value", out)
+                result.setdefault("source", "primary")
+                done.set()
+
+        t = threading.Thread(target=run_primary, daemon=True)
+        t.start()
+        if done.wait(self.deadline_s):
+            self.stats["primary"] += 1
+            return result["value"]
+        # deadline passed: speculative backup fetch
+        out = self.backup(step)
+        if not done.is_set():
+            result.setdefault("value", out)
+            result.setdefault("source", "backup")
+            done.set()
+        if result.get("source") == "backup":
+            self.stats["backup"] += 1
+        else:
+            self.stats["primary"] += 1
+        return result["value"]

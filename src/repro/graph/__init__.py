@@ -1,0 +1,14 @@
+from repro.graph.csr import CSRGraph, build_csr, edge_common_neighbors
+from repro.graph.generators import rmat_graph, erdos_renyi_graph, barabasi_albert_graph
+from repro.graph.io import load_edge_list, save_edge_list
+
+__all__ = [
+    "CSRGraph",
+    "build_csr",
+    "edge_common_neighbors",
+    "rmat_graph",
+    "erdos_renyi_graph",
+    "barabasi_albert_graph",
+    "load_edge_list",
+    "save_edge_list",
+]

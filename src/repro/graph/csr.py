@@ -1,0 +1,234 @@
+"""CSR graph container (paper §2: "DistGER uses the CSR format").
+
+Undirected edges are stored twice (both directions), directed once, exactly
+as the paper describes. Neighbor lists are kept **sorted** so that set
+intersections (common-neighbor counts, MPGP proximity scores) can use
+galloping/binary search.
+
+The container is a pytree of device arrays so it can be donated to jitted
+walk kernels, sharded, or kept on host as numpy transparently.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class CSRGraph:
+    """Compressed-sparse-row adjacency.
+
+    indptr:   (|V|+1,) int32  — row offsets
+    indices:  (|E|,)   int32  — sorted neighbor ids per row
+    weights:  (|E|,)   float32 or None — edge weights (None = unweighted)
+    edge_cm:  (|E|,)   int32 or None — per-edge common-neighbor counts
+                                       (precomputed; see DESIGN.md §2)
+    """
+
+    indptr: jax.Array
+    indices: jax.Array
+    weights: Optional[jax.Array] = None
+    edge_cm: Optional[jax.Array] = None
+
+    # -- pytree protocol ---------------------------------------------------
+    def tree_flatten(self):
+        return (self.indptr, self.indices, self.weights, self.edge_cm), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    # -- basic properties --------------------------------------------------
+    @property
+    def num_nodes(self) -> int:
+        return int(self.indptr.shape[0]) - 1
+
+    @property
+    def num_edges(self) -> int:
+        """Number of stored directed arcs (2x undirected edge count)."""
+        return int(self.indices.shape[0])
+
+    def degrees(self) -> jax.Array:
+        return self.indptr[1:] - self.indptr[:-1]
+
+    @property
+    def max_degree(self) -> int:
+        return int(np.max(np.asarray(self.degrees())))
+
+    def neighbors(self, u: int) -> np.ndarray:
+        lo, hi = int(self.indptr[u]), int(self.indptr[u + 1])
+        return np.asarray(self.indices[lo:hi])
+
+    def to_numpy(self) -> "CSRGraph":
+        return CSRGraph(
+            indptr=np.asarray(self.indptr),
+            indices=np.asarray(self.indices),
+            weights=None if self.weights is None else np.asarray(self.weights),
+            edge_cm=None if self.edge_cm is None else np.asarray(self.edge_cm),
+        )
+
+    def to_device(self) -> "CSRGraph":
+        return CSRGraph(
+            indptr=jnp.asarray(self.indptr, jnp.int32),
+            indices=jnp.asarray(self.indices, jnp.int32),
+            weights=None if self.weights is None else jnp.asarray(self.weights, jnp.float32),
+            edge_cm=None if self.edge_cm is None else jnp.asarray(self.edge_cm, jnp.int32),
+        )
+
+    def with_edge_cm(self) -> "CSRGraph":
+        if self.edge_cm is not None:
+            return self
+        cm = edge_common_neighbors(self)
+        return dataclasses.replace(self, edge_cm=jnp.asarray(cm, jnp.int32))
+
+
+def build_csr(
+    edges: np.ndarray,
+    num_nodes: Optional[int] = None,
+    *,
+    undirected: bool = True,
+    weights: Optional[np.ndarray] = None,
+    dedup: bool = True,
+) -> CSRGraph:
+    """Build a CSR graph from an (m, 2) int edge array.
+
+    Self-loops are dropped. With ``undirected=True`` each edge is stored in
+    both directions (paper §2). Neighbor lists come out sorted.
+    """
+    edges = np.asarray(edges, dtype=np.int64)
+    if edges.ndim != 2 or edges.shape[1] != 2:
+        raise ValueError(f"edges must be (m, 2), got {edges.shape}")
+    mask = edges[:, 0] != edges[:, 1]
+    edges = edges[mask]
+    w = None
+    if weights is not None:
+        w = np.asarray(weights, dtype=np.float32)[mask]
+
+    if undirected:
+        edges = np.concatenate([edges, edges[:, ::-1]], axis=0)
+        if w is not None:
+            w = np.concatenate([w, w], axis=0)
+
+    if num_nodes is None:
+        num_nodes = int(edges.max()) + 1 if edges.size else 0
+
+    # Sort by (src, dst) so rows are contiguous and neighbor lists sorted.
+    order = np.lexsort((edges[:, 1], edges[:, 0]))
+    edges = edges[order]
+    if w is not None:
+        w = w[order]
+
+    if dedup and edges.size:
+        keep = np.ones(len(edges), dtype=bool)
+        keep[1:] = np.any(edges[1:] != edges[:-1], axis=1)
+        edges = edges[keep]
+        if w is not None:
+            w = w[keep]
+
+    counts = np.bincount(edges[:, 0], minlength=num_nodes)
+    indptr = np.zeros(num_nodes + 1, dtype=np.int64)
+    np.cumsum(counts, out=indptr[1:])
+
+    return CSRGraph(
+        indptr=jnp.asarray(indptr, jnp.int32),
+        indices=jnp.asarray(edges[:, 1], jnp.int32),
+        weights=None if w is None else jnp.asarray(w, jnp.float32),
+        edge_cm=None,
+    )
+
+
+def edge_common_neighbors(graph: CSRGraph) -> np.ndarray:
+    """Per-edge common-neighbor counts Cm(u, v), CSR-aligned.
+
+    One sorted-merge intersection per arc. This is the cached form of the
+    HuGE transition numerator (Eq. 3); ``repro.core.transition`` also has an
+    on-the-fly reference used to validate this precompute.
+    """
+    g = graph.to_numpy()
+    indptr, indices = g.indptr.astype(np.int64), g.indices.astype(np.int64)
+    n = len(indptr) - 1
+    cm = np.zeros(len(indices), dtype=np.int32)
+    for u in range(n):
+        lo, hi = indptr[u], indptr[u + 1]
+        nu = indices[lo:hi]
+        if nu.size == 0:
+            continue
+        for k in range(lo, hi):
+            v = indices[k]
+            nv = indices[indptr[v]:indptr[v + 1]]
+            # galloping-style: binary-search the smaller set into the larger
+            if nu.size <= nv.size:
+                small, large = nu, nv
+            else:
+                small, large = nv, nu
+            pos = np.searchsorted(large, small)
+            pos = np.minimum(pos, large.size - 1)
+            cm[k] = int(np.sum(large[pos] == small))
+    return cm
+
+
+def edge_common_neighbors_fast(graph: CSRGraph) -> np.ndarray:
+    """Vectorized Cm for all arcs at once (memory: O(|E|*avg_deg) chunked)."""
+    g = graph.to_numpy()
+    indptr, indices = g.indptr.astype(np.int64), g.indices.astype(np.int64)
+    n = len(indptr) - 1
+    deg = (indptr[1:] - indptr[:-1]).astype(np.int64)
+    src = np.repeat(np.arange(n, dtype=np.int64), deg)
+    dst = indices
+    cm = np.zeros(len(indices), dtype=np.int32)
+    # Process arcs in chunks; for each arc, intersect sorted N(u) with N(v)
+    # by searching each element of N(u) in N(v).
+    chunk = 1 << 16
+    for start in range(0, len(dst), chunk):
+        end = min(start + chunk, len(dst))
+        for k in range(start, end):
+            u, v = src[k], dst[k]
+            nu = indices[indptr[u]:indptr[u + 1]]
+            nv = indices[indptr[v]:indptr[v + 1]]
+            if nu.size > nv.size:
+                nu, nv = nv, nu
+            pos = np.searchsorted(nv, nu)
+            pos = np.minimum(pos, nv.size - 1)
+            cm[k] = int(np.sum(nv[pos] == nu)) if nv.size else 0
+    return cm
+
+
+def subgraph_partition_pad(
+    graph: CSRGraph, assignment: np.ndarray, num_parts: int
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+    """Split a CSR graph into per-partition padded CSR slices.
+
+    Returns (indptr_p, indices_p, owned_nodes_p, max_nodes) where arrays are
+    stacked per partition and padded so every partition has identical shapes
+    (required for shard_map). Node ids stay GLOBAL; each partition stores the
+    adjacency of the nodes it owns.
+    """
+    g = graph.to_numpy()
+    indptr, indices = g.indptr.astype(np.int64), g.indices.astype(np.int64)
+    n = len(indptr) - 1
+    assignment = np.asarray(assignment)
+    owned = [np.where(assignment == p)[0] for p in range(num_parts)]
+    max_nodes = max((len(o) for o in owned), default=0)
+    max_edges = 0
+    for o in owned:
+        deg = indptr[o + 1] - indptr[o]
+        max_edges = max(max_edges, int(deg.sum()))
+    indptr_p = np.zeros((num_parts, max_nodes + 1), dtype=np.int64)
+    indices_p = np.full((num_parts, max(max_edges, 1)), -1, dtype=np.int64)
+    owned_p = np.full((num_parts, max_nodes), -1, dtype=np.int64)
+    for p, o in enumerate(owned):
+        owned_p[p, : len(o)] = o
+        off = 0
+        for i, u in enumerate(o):
+            lo, hi = indptr[u], indptr[u + 1]
+            indices_p[p, off : off + (hi - lo)] = indices[lo:hi]
+            off += hi - lo
+            indptr_p[p, i + 1] = off
+        indptr_p[p, len(o) + 1 :] = off
+    return indptr_p, indices_p, owned_p, max_nodes

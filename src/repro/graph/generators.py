@@ -1,0 +1,108 @@
+"""Synthetic graph generators.
+
+R-MAT [Chakrabarti et al., SDM'04] is the generator the paper uses for its
+scalability study (§6.3, "synthetic graphs with a fixed node degree of 10 and
+the number of nodes from 1e5 to 1e9"). We implement it vectorized in numpy.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.graph.csr import CSRGraph, build_csr
+
+
+def rmat_edges(
+    num_nodes: int,
+    num_edges: int,
+    *,
+    a: float = 0.57,
+    b: float = 0.19,
+    c: float = 0.19,
+    seed: int = 0,
+) -> np.ndarray:
+    """Vectorized R-MAT edge sampling. num_nodes is rounded up to a power of 2
+    internally; ids are taken mod num_nodes so the output range is exact."""
+    rng = np.random.default_rng(seed)
+    scale = max(1, int(np.ceil(np.log2(max(num_nodes, 2)))))
+    src = np.zeros(num_edges, dtype=np.int64)
+    dst = np.zeros(num_edges, dtype=np.int64)
+    # Quadrant probabilities (a, b, c, d) with d = 1-a-b-c.
+    p_src1 = c + (1.0 - a - b - c)  # P(src bit = 1)
+    for level in range(scale):
+        src_bit = rng.random(num_edges) < p_src1
+        # conditional P(dst bit = 1 | src bit)
+        p_dst1_given0 = b / (a + b)
+        p_dst1_given1 = (1.0 - a - b - c) / (c + (1.0 - a - b - c))
+        p = np.where(src_bit, p_dst1_given1, p_dst1_given0)
+        dst_bit = rng.random(num_edges) < p
+        src = (src << 1) | src_bit
+        dst = (dst << 1) | dst_bit
+    src %= num_nodes
+    dst %= num_nodes
+    return np.stack([src, dst], axis=1)
+
+
+def rmat_graph(
+    num_nodes: int,
+    avg_degree: int = 10,
+    *,
+    seed: int = 0,
+    undirected: bool = True,
+    weighted: bool = False,
+) -> CSRGraph:
+    edges = rmat_edges(num_nodes, num_nodes * avg_degree, seed=seed)
+    weights = None
+    if weighted:
+        # Paper appendix 8.1: weights uniform at random from [1, 5).
+        rng = np.random.default_rng(seed + 1)
+        weights = rng.uniform(1.0, 5.0, size=len(edges)).astype(np.float32)
+    return build_csr(edges, num_nodes, undirected=undirected, weights=weights)
+
+
+def erdos_renyi_graph(
+    num_nodes: int, avg_degree: int = 8, *, seed: int = 0
+) -> CSRGraph:
+    rng = np.random.default_rng(seed)
+    m = num_nodes * avg_degree // 2
+    edges = rng.integers(0, num_nodes, size=(m, 2), dtype=np.int64)
+    return build_csr(edges, num_nodes, undirected=True)
+
+
+def barabasi_albert_graph(
+    num_nodes: int, m: int = 4, *, seed: int = 0
+) -> CSRGraph:
+    """Preferential attachment — produces the power-law degree distribution
+    that HuGE's walk-count heuristic (Eq. 6) assumes."""
+    rng = np.random.default_rng(seed)
+    if num_nodes <= m:
+        raise ValueError("num_nodes must exceed m")
+    # Repeated-node list trick for preferential attachment.
+    targets = list(range(m))
+    repeated: list[int] = []
+    edges = []
+    for v in range(m, num_nodes):
+        for t in targets:
+            edges.append((v, t))
+        repeated.extend(targets)
+        repeated.extend([v] * m)
+        idx = rng.integers(0, len(repeated), size=m)
+        targets = list({repeated[i] for i in idx})
+        while len(targets) < m:
+            targets.append(int(rng.integers(0, v + 1)))
+            targets = list(set(targets))
+    return build_csr(np.asarray(edges, dtype=np.int64), num_nodes, undirected=True)
+
+
+def connected_rmat_graph(
+    num_nodes: int, avg_degree: int = 10, *, seed: int = 0
+) -> CSRGraph:
+    """R-MAT plus a random ring so every node has degree >= 2 (walkable)."""
+    edges = rmat_edges(num_nodes, num_nodes * avg_degree, seed=seed)
+    perm = np.random.default_rng(seed + 7).permutation(num_nodes)
+    ring = np.stack([perm, np.roll(perm, 1)], axis=1)
+    return build_csr(
+        np.concatenate([edges, ring], axis=0), num_nodes, undirected=True
+    )

@@ -1,0 +1,60 @@
+"""Edge-list IO (text + npz) for real-graph ingestion."""
+
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import numpy as np
+
+from repro.graph.csr import CSRGraph, build_csr
+
+
+def load_edge_list(
+    path: str,
+    *,
+    undirected: bool = True,
+    num_nodes: Optional[int] = None,
+    comment: str = "#",
+) -> CSRGraph:
+    if path.endswith(".npz"):
+        data = np.load(path)
+        return build_csr(
+            data["edges"],
+            num_nodes=num_nodes or (int(data["num_nodes"]) if "num_nodes" in data else None),
+            undirected=undirected,
+            weights=data["weights"] if "weights" in data else None,
+        )
+    rows = []
+    weights = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line or line.startswith(comment):
+                continue
+            parts = line.split()
+            rows.append((int(parts[0]), int(parts[1])))
+            if len(parts) > 2:
+                weights.append(float(parts[2]))
+    edges = np.asarray(rows, dtype=np.int64)
+    w = np.asarray(weights, dtype=np.float32) if weights else None
+    return build_csr(edges, num_nodes, undirected=undirected, weights=w)
+
+
+def save_edge_list(graph: CSRGraph, path: str) -> None:
+    g = graph.to_numpy()
+    indptr, indices = g.indptr.astype(np.int64), g.indices.astype(np.int64)
+    n = len(indptr) - 1
+    deg = indptr[1:] - indptr[:-1]
+    src = np.repeat(np.arange(n, dtype=np.int64), deg)
+    edges = np.stack([src, indices], axis=1)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    if path.endswith(".npz"):
+        payload = {"edges": edges, "num_nodes": np.int64(n)}
+        if g.weights is not None:
+            payload["weights"] = g.weights
+        np.savez_compressed(path, **payload)
+    else:
+        with open(path, "w") as f:
+            for s, d in edges:
+                f.write(f"{s} {d}\n")

@@ -1,0 +1,68 @@
+"""Graph statistics used by the paper's heuristics and our tests.
+
+HuGE's walk-count heuristic (Eq. 6) compares the node-degree distribution
+p(v) with the corpus-occurrence distribution q(v) via relative entropy; both
+distributions live here, together with a power-law tail check.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.graph.csr import CSRGraph
+
+
+def degree_distribution(graph: CSRGraph) -> np.ndarray:
+    """p(v) = deg(v) / sum_deg (Eq. 6 numerator)."""
+    deg = np.asarray(graph.degrees(), dtype=np.float64)
+    total = deg.sum()
+    if total == 0:
+        return np.zeros_like(deg)
+    return deg / total
+
+
+def occurrence_distribution(ocn: np.ndarray) -> np.ndarray:
+    """q(v) = ocn(v) / sum ocn (Eq. 6 denominator)."""
+    ocn = np.asarray(ocn, dtype=np.float64)
+    total = ocn.sum()
+    if total == 0:
+        return np.zeros_like(ocn)
+    return ocn / total
+
+
+def relative_entropy(p: np.ndarray, q: np.ndarray, eps: float = 1e-12) -> float:
+    """D(p || q) = sum p log(p/q), guarded against zeros (Eq. 6)."""
+    p = np.asarray(p, dtype=np.float64)
+    q = np.asarray(q, dtype=np.float64)
+    mask = p > 0
+    return float(np.sum(p[mask] * np.log((p[mask]) / (q[mask] + eps))))
+
+
+def powerlaw_alpha_mle(degrees: np.ndarray, dmin: int = 1) -> float:
+    """Continuous MLE for the power-law exponent of the degree tail."""
+    deg = np.asarray(degrees, dtype=np.float64)
+    deg = deg[deg >= dmin]
+    if deg.size == 0:
+        return float("nan")
+    return 1.0 + deg.size / np.sum(np.log(deg / (dmin - 0.5)))
+
+
+def edge_locality(graph: CSRGraph, assignment: np.ndarray) -> float:
+    """Fraction of arcs whose both endpoints land in the same partition.
+
+    This is the quantity MPGP maximizes (a proxy for "walker stays local",
+    i.e. fewer cross-machine messages — Fig. 10(c))."""
+    g = graph.to_numpy()
+    indptr, indices = g.indptr.astype(np.int64), g.indices.astype(np.int64)
+    n = len(indptr) - 1
+    deg = indptr[1:] - indptr[:-1]
+    src = np.repeat(np.arange(n, dtype=np.int64), deg)
+    a = np.asarray(assignment)
+    same = a[src] == a[indices]
+    return float(np.mean(same)) if len(same) else 1.0
+
+
+def partition_balance(assignment: np.ndarray, num_parts: int) -> float:
+    """max partition size / mean partition size (1.0 = perfectly balanced)."""
+    counts = np.bincount(np.asarray(assignment), minlength=num_parts)
+    return float(counts.max() / max(counts.mean(), 1e-9))

@@ -1,0 +1,140 @@
+"""Pallas TPU kernel: flash attention (online softmax), GQA-native.
+
+Grid = (B * Hq, Sq/bq, Skv/bk) with the KV dimension innermost; running max
+(m), normalizer (l) and the f32 output accumulator live in VMEM scratch and
+persist across the KV grid steps (canonical Pallas revisiting pattern).
+GQA costs nothing: the K/V BlockSpec index_map folds the query head index
+onto its KV head (h_kv = h_q // group) — no repeat/copy materialized.
+
+Causal blocks strictly above the diagonal are skipped with pl.when (no MXU
+work, no VMEM traffic for the P*V matmul); the diagonal block applies an
+iota mask. Tiles default to (bq, bk) = (256, 256): MXU-aligned (multiples
+of 128) and ~2 MiB VMEM at D=128/f32 accumulators.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,        # (1, bq, D)
+    k_ref,        # (1, bk, D)
+    v_ref,        # (1, bk, D)
+    o_ref,        # (1, bq, D)
+    m_scr,        # (bq,) f32
+    l_scr,        # (bq,) f32
+    acc_scr,      # (bq, D) f32
+    *,
+    causal: bool,
+    sm_scale: float,
+    bq: int,
+    bk: int,
+    nk: int,
+    q_offset: int,
+):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # Global positions of this tile.
+    q_lo = iq * bq + q_offset          # first query's kv-space position
+    k_lo = ik * bk
+
+    def compute():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * sm_scale
+        if causal:
+            q_pos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            k_pos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1)
+        v = v_ref[0].astype(jnp.float32)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    if causal:
+        # Skip tiles strictly above the diagonal (no query attends there).
+        pl.when(k_lo <= q_lo + bq - 1)(compute)
+    else:
+        compute()
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,          # (B, Hq, Sq, D)
+    k: jax.Array,          # (B, Hkv, Skv, D)
+    v: jax.Array,          # (B, Hkv, Skv, D)
+    *,
+    causal: bool = True,
+    sm_scale: float | None = None,
+    block_q: int = 256,
+    block_k: int = 256,
+    q_offset: int = 0,
+    interpret: bool = True,
+) -> jax.Array:
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    assert sq % bq == 0 and skv % bk == 0, "caller pads to tile multiples"
+    nq, nk = sq // bq, skv // bk
+
+    # Flatten (B, Hq): grid dim 0; K/V index_maps fold onto the KV head.
+    qf = q.reshape(b * hq, sq, d)
+    kf = k.reshape(b * hkv, skv, d)
+    vf = v.reshape(b * hkv, skv, d)
+
+    def kv_head(bh):
+        # bh = batch * Hq + h  ->  batch * Hkv + h // group
+        return (bh // hq) * hkv + (bh % hq) // group
+
+    kernel = functools.partial(
+        _flash_kernel, causal=causal, sm_scale=sm_scale,
+        bq=bq, bk=bk, nk=nk, q_offset=q_offset,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, iq, ik: (kv_head(bh), ik, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, iq, ik: (kv_head(bh), ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, hq, sq, d)

@@ -1,0 +1,4 @@
+from repro.kernels.sgns import ops, ref
+from repro.kernels.sgns.ops import sgns_lifetime_batch
+
+__all__ = ["ops", "ref", "sgns_lifetime_batch"]

@@ -1,0 +1,152 @@
+"""Pallas TPU kernel: fused SGNS lifetime update (paper §4.2-I/II on MXU).
+
+One grid program processes one *lifetime* (a group of W = multi_windows
+walks). The three local buffers — context rows (phi_in), target rows and the
+negative-sample rows (phi_out) — are VMEM-resident for the whole lifetime:
+loaded once, updated in-place across all T positions, stored once. This is
+the TPU mapping of the paper's "local buffers reduce cache-line
+ping-ponging": HBM traffic is one read + one write per row per lifetime
+regardless of how many windows touch the row.
+
+Per position the fused pipeline runs on values in VMEM/VREGs:
+    logits (W*(2w+1) x (W+K) MXU matmul) -> clamp(+-6) -> sigmoid ->
+    gradient -> SGD update of both buffers.
+
+Window addressing uses dynamic_slice on a (T + 2w)-padded time axis (no
+gathers/scatters — Mosaic-friendly); the window's center row is masked out
+instead of excluded, which is mathematically identical.
+
+VMEM budget per program (W=2, T=100+2w, d=128, K=5, f32):
+  ctx/out: 2*120*128*4 = 123 KiB each; neg: 100*5*128*4 = 256 KiB -> ~0.5 MiB.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+MAX_EXP = 6.0
+
+
+def _sgns_kernel(
+    ctx_ref,    # (1, W, Tp, d)  phi_in rows, time-padded by w on both sides
+    out_ref,    # (1, W, Tp, d)  phi_out rows (same padding)
+    neg_ref,    # (1, T, K, d)
+    valid_ref,  # (1, W, Tp) int32 (0/1)
+    lr_ref,     # (1, 1) f32
+    ctx_o_ref, out_o_ref, neg_o_ref, loss_ref,
+    *, window: int, t_len: int,
+):
+    w = window
+    ctx = ctx_ref[0]
+    out = out_ref[0]
+    neg = neg_ref[0]
+    valid = valid_ref[0]
+    lr = lr_ref[0, 0]
+
+    w_cnt, t_pad, dim = ctx.shape
+    k = neg.shape[1]
+    span = 2 * w + 1
+    n_rows = w_cnt * span
+
+    # Row bookkeeping (static): which walk each context row belongs to, and
+    # whether it is the (masked-out) center of its window.
+    walk_of_row = jnp.repeat(jnp.arange(w_cnt, dtype=jnp.int32), span)
+    is_center = jnp.tile(
+        (jnp.arange(span, dtype=jnp.int32) == w), (w_cnt,)
+    )
+    y = jax.nn.one_hot(walk_of_row, w_cnt + k, dtype=jnp.float32)
+
+    def body(p, carry):
+        ctx, out, neg, loss = carry
+        # padded-window slice: rows p..p+2w of the padded time axis
+        c_win = jax.lax.dynamic_slice(ctx, (0, p, 0), (w_cnt, span, dim))
+        v_win = jax.lax.dynamic_slice(valid, (0, p), (w_cnt, span))
+        tgt = jax.lax.dynamic_slice(out, (0, p + w, 0), (w_cnt, 1, dim))[:, 0]
+        tgt_valid = jax.lax.dynamic_slice(valid, (0, p + w), (w_cnt, 1))[:, 0]
+        negs = jax.lax.dynamic_slice(neg, (p, 0, 0), (1, k, dim))[0]
+
+        t_rows = jnp.concatenate([tgt, negs], axis=0)           # (W+K, d)
+        c_flat = c_win.reshape(n_rows, dim)
+        logits = jnp.clip(
+            jnp.dot(c_flat, t_rows.T, preferred_element_type=jnp.float32),
+            -MAX_EXP, MAX_EXP,
+        )
+        sig = jax.nn.sigmoid(logits)
+        row_mask = (
+            (v_win.reshape(-1) != 0)
+            & ~is_center
+            & (tgt_valid[walk_of_row] != 0)
+        ).astype(jnp.float32)
+        col_mask = jnp.concatenate(
+            [(tgt_valid != 0).astype(jnp.float32), jnp.ones((k,), jnp.float32)]
+        )
+        g = (y - sig) * row_mask[:, None] * col_mask[None, :]
+
+        eps = 1e-7
+        pair_loss = -(y * jnp.log(sig + eps) + (1 - y) * jnp.log(1 - sig + eps))
+        loss = loss + jnp.sum(pair_loss * row_mask[:, None] * col_mask[None, :])
+
+        d_c = jnp.dot(g, t_rows, preferred_element_type=jnp.float32) * lr
+        d_t = jnp.dot(g.T, c_flat, preferred_element_type=jnp.float32) * lr
+
+        ctx = jax.lax.dynamic_update_slice(
+            ctx, c_win + d_c.reshape(w_cnt, span, dim), (0, p, 0)
+        )
+        out = jax.lax.dynamic_update_slice(
+            out, (tgt + d_t[:w_cnt])[:, None, :], (0, p + w, 0)
+        )
+        neg = jax.lax.dynamic_update_slice(
+            neg, (negs + d_t[w_cnt:])[None], (p, 0, 0)
+        )
+        return ctx, out, neg, loss
+
+    ctx, out, neg, loss = jax.lax.fori_loop(
+        0, t_len, body, (ctx, out, neg, jnp.float32(0.0))
+    )
+    ctx_o_ref[0] = ctx
+    out_o_ref[0] = out
+    neg_o_ref[0] = neg
+    loss_ref[0] = loss
+
+
+def sgns_lifetime_pallas(
+    ctx_pad: jax.Array,   # (G, W, T+2w, d)
+    out_pad: jax.Array,   # (G, W, T+2w, d)
+    neg: jax.Array,       # (G, T, K, d)
+    valid_pad: jax.Array, # (G, W, T+2w) int32
+    lr: jax.Array,        # (1, 1) f32
+    *, window: int, t_len: int, interpret: bool = True,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    g_cnt, w_cnt, t_pad, dim = ctx_pad.shape
+    k = neg.shape[2]
+    grid = (g_cnt,)
+    kernel = functools.partial(_sgns_kernel, window=window, t_len=t_len)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, w_cnt, t_pad, dim), lambda g: (g, 0, 0, 0)),
+            pl.BlockSpec((1, w_cnt, t_pad, dim), lambda g: (g, 0, 0, 0)),
+            pl.BlockSpec((1, t_len, k, dim), lambda g: (g, 0, 0, 0)),
+            pl.BlockSpec((1, w_cnt, t_pad), lambda g: (g, 0, 0)),
+            pl.BlockSpec((1, 1), lambda g: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, w_cnt, t_pad, dim), lambda g: (g, 0, 0, 0)),
+            pl.BlockSpec((1, w_cnt, t_pad, dim), lambda g: (g, 0, 0, 0)),
+            pl.BlockSpec((1, t_len, k, dim), lambda g: (g, 0, 0, 0)),
+            pl.BlockSpec((1,), lambda g: (g,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((g_cnt, w_cnt, t_pad, dim), jnp.float32),
+            jax.ShapeDtypeStruct((g_cnt, w_cnt, t_pad, dim), jnp.float32),
+            jax.ShapeDtypeStruct((g_cnt, t_len, k, dim), jnp.float32),
+            jax.ShapeDtypeStruct((g_cnt,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(ctx_pad, out_pad, neg, valid_pad, lr)

@@ -1,0 +1,52 @@
+"""Jit'd wrapper around the fused SGNS Pallas kernel.
+
+Handles the time-axis padding the kernel wants (T -> T + 2w so windows are
+pure dynamic_slices) and exposes the same call signature as the pure-jnp
+reference (``ref.sgns_lifetime_batch_ref``).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sgns.kernel import sgns_lifetime_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def sgns_lifetime_batch(
+    ctx: jax.Array,    # (G, W, T, d) f32
+    out: jax.Array,    # (G, W, T, d) f32
+    neg: jax.Array,    # (G, T, K, d) f32
+    valid: jax.Array,  # (G, W, T) bool
+    lr: jax.Array,     # () f32
+    window: int,
+    interpret: bool | None = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Fused lifetime update for G groups. Returns (ctx, out, neg, loss(G,))."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    g_cnt, w_cnt, t_len, dim = ctx.shape
+    w = window
+    pad = ((0, 0), (0, 0), (w, w), (0, 0))
+    ctx_p = jnp.pad(ctx, pad)
+    out_p = jnp.pad(out, pad)
+    valid_p = jnp.pad(valid.astype(jnp.int32), ((0, 0), (0, 0), (w, w)))
+    lr_arr = jnp.full((1, 1), lr, jnp.float32)
+    ctx_p, out_p, neg_o, loss = sgns_lifetime_pallas(
+        ctx_p, out_p, neg, valid_p, lr_arr,
+        window=w, t_len=t_len, interpret=interpret,
+    )
+    return (
+        ctx_p[:, :, w : w + t_len, :],
+        out_p[:, :, w : w + t_len, :],
+        neg_o,
+        loss,
+    )

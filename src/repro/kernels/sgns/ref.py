@@ -1,0 +1,93 @@
+"""Pure-jnp oracle for the fused SGNS lifetime kernel.
+
+Semantics (must match kernel.py bit-for-bit up to float associativity):
+for each position p of a lifetime of W walks:
+
+    contexts  C = ctx_buf[:, p-w..p+w (excl p), :]      (W*2w, d)  phi_in rows
+    targets/negs T = [out_buf[:, p, :] ; neg_buf[p]]    (W+K, d)   phi_out rows
+    logits = clip(C @ T^T, +-6)  (word2vec MAX_EXP)
+    g      = (Y - sigmoid(logits)) * masks * lr
+    C += g @ T ;  T += g^T @ C_old
+
+All updates are applied to the VMEM-resident local buffers; the caller
+writes deltas back to the global matrices (paper Improvement-I).
+This file is the single source of truth the Pallas kernel is tested against
+(shape/dtype sweeps in tests/test_kernels_sgns.py).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+MAX_EXP = 6.0
+
+
+def sgns_lifetime_ref(
+    ctx_buf: jax.Array,   # (W, T, d) f32
+    out_buf: jax.Array,   # (W, T, d) f32
+    neg_buf: jax.Array,   # (T, K, d) f32
+    valid: jax.Array,     # (W, T) bool
+    lr: jax.Array,        # () f32
+    window: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Reference lifetime update. Returns updated buffers + summed loss."""
+    w_cnt, t_len, dim = ctx_buf.shape
+    k = neg_buf.shape[1]
+    offs = jnp.concatenate(
+        [jnp.arange(-window, 0), jnp.arange(1, window + 1)]
+    ).astype(jnp.int32)
+    n_ctx = offs.shape[0]
+
+    def step(carry, p):
+        ctx_buf, out_buf, neg_buf, loss = carry
+        idx = p + offs
+        in_bounds = (idx >= 0) & (idx < t_len)
+        idx_c = jnp.clip(idx, 0, t_len - 1)
+
+        c_rows = ctx_buf[:, idx_c, :]                       # (W, 2w, d)
+        c_valid = in_bounds[None, :] & jnp.take_along_axis(
+            valid, jnp.broadcast_to(idx_c[None, :], (w_cnt, n_ctx)), axis=1
+        )
+        tgt = out_buf[:, p, :]
+        tgt_valid = valid[:, p]
+        negs = neg_buf[p]
+
+        t_rows = jnp.concatenate([tgt, negs], axis=0)       # (W+K, d)
+        c_flat = c_rows.reshape(w_cnt * n_ctx, dim)
+        logits = jnp.clip(c_flat @ t_rows.T, -MAX_EXP, MAX_EXP)
+        walk_of_row = jnp.repeat(jnp.arange(w_cnt), n_ctx)
+        y = jax.nn.one_hot(walk_of_row, w_cnt + k, dtype=jnp.float32)
+        sig = jax.nn.sigmoid(logits)
+        row_mask = (c_valid.reshape(-1) & tgt_valid[walk_of_row]).astype(jnp.float32)
+        col_mask = jnp.concatenate(
+            [tgt_valid.astype(jnp.float32), jnp.ones((k,), jnp.float32)]
+        )
+        g = (y - sig) * row_mask[:, None] * col_mask[None, :]
+
+        eps = 1e-7
+        pair_loss = -(y * jnp.log(sig + eps) + (1 - y) * jnp.log(1 - sig + eps))
+        loss = loss + jnp.sum(pair_loss * row_mask[:, None] * col_mask[None, :])
+
+        d_c = (g @ t_rows) * lr
+        d_t = (g.T @ c_flat) * lr
+
+        ctx_buf = ctx_buf.at[:, idx_c, :].add(d_c.reshape(w_cnt, n_ctx, dim))
+        out_buf = out_buf.at[:, p, :].add(d_t[:w_cnt])
+        neg_buf = neg_buf.at[p].add(d_t[w_cnt:])
+        return (ctx_buf, out_buf, neg_buf, loss), None
+
+    (ctx_buf, out_buf, neg_buf, loss), _ = jax.lax.scan(
+        step, (ctx_buf, out_buf, neg_buf, jnp.float32(0.0)),
+        jnp.arange(t_len, dtype=jnp.int32),
+    )
+    return ctx_buf, out_buf, neg_buf, loss
+
+
+def sgns_lifetime_batch_ref(ctx, out, neg, valid, lr, window):
+    """vmapped-over-groups reference: shapes (G, W, T, d) etc."""
+    return jax.vmap(
+        lambda c, o, n, v: sgns_lifetime_ref(c, o, n, v, lr, window)
+    )(ctx, out, neg, valid)

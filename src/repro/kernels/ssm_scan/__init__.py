@@ -1,0 +1,4 @@
+from repro.kernels.ssm_scan import ops, ref
+from repro.kernels.ssm_scan.ops import ssd_chunked_scan
+
+__all__ = ["ops", "ref", "ssd_chunked_scan"]

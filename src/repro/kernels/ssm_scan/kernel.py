@@ -1,0 +1,113 @@
+"""Pallas TPU kernel: chunked SSD scan (Mamba2), linear-time attention dual.
+
+Grid = (BH, S/Q) with the chunk dimension innermost; the (N x P) state is
+VMEM scratch carried across chunks (same revisiting pattern as flash
+attention). Each chunk of length Q does three MXU matmuls:
+
+    intra:  y  = ((C B^T) ⊙ L) xdt        L[i,j] = exp(cum_i - cum_j), i>=j
+    inter:  y += (C ⊙ exp(cum)) S_prev
+    state:  S  = exp(cum_Q) S_prev + (B ⊙ exp(cum_Q - cum))^T xdt
+
+This is the paper-pool Mamba2 SSD decomposition adapted to VMEM tiling:
+chunk length Q=128/256 keeps the (Q x Q) decay-masked score tile and the
+(N x P) state resident; HBM traffic is exactly one pass over x/B/C.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(
+    xdt_ref,   # (1, Q, P)
+    loga_ref,  # (1, Q)
+    b_ref,     # (1, Q, N)
+    c_ref,     # (1, Q, N)
+    y_ref,     # (1, Q, P)
+    sfin_ref,  # (1, N, P)
+    s_scr,     # (N, P) f32 scratch — carried state
+    *,
+    nc: int,
+    q_len: int,
+):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    xdt = xdt_ref[0].astype(jnp.float32)    # (Q, P)
+    loga = loga_ref[0].astype(jnp.float32)  # (Q,)
+    b = b_ref[0].astype(jnp.float32)        # (Q, N)
+    c = c_ref[0].astype(jnp.float32)        # (Q, N)
+
+    cum = jnp.cumsum(loga)                  # inclusive cumulative log-decay
+    total = cum[q_len - 1]
+
+    # intra-chunk: decay-masked "attention" scores
+    scores = jnp.dot(c, b.T, preferred_element_type=jnp.float32)  # (Q, Q)
+    li = jax.lax.broadcasted_iota(jnp.int32, (q_len, q_len), 0)
+    lj = jax.lax.broadcasted_iota(jnp.int32, (q_len, q_len), 1)
+    decay = jnp.exp(cum[:, None] - cum[None, :])
+    l_mask = jnp.where(li >= lj, decay, 0.0)
+    y = jnp.dot(scores * l_mask, xdt, preferred_element_type=jnp.float32)
+
+    # inter-chunk: contribution of the carried state
+    s_prev = s_scr[...]
+    y = y + jnp.dot(c * jnp.exp(cum)[:, None], s_prev,
+                    preferred_element_type=jnp.float32)
+
+    # state update for the next chunk
+    b_scaled = b * jnp.exp(total - cum)[:, None]
+    s_scr[...] = jnp.exp(total) * s_prev + jnp.dot(
+        b_scaled.T, xdt, preferred_element_type=jnp.float32
+    )
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(ic == nc - 1)
+    def _emit_state():
+        sfin_ref[0] = s_scr[...]
+
+
+def ssd_chunked_pallas(
+    xdt: jax.Array,    # (BH, S, P)
+    loga: jax.Array,   # (BH, S)
+    b: jax.Array,      # (BH, S, N)
+    c: jax.Array,      # (BH, S, N)
+    *,
+    chunk: int = 128,
+    interpret: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    bh, s, p = xdt.shape
+    n = b.shape[-1]
+    assert s % chunk == 0, "caller pads to chunk multiples"
+    nc = s // chunk
+    kernel = functools.partial(_ssd_kernel, nc=nc, q_len=chunk)
+    y, sfin = pl.pallas_call(
+        kernel,
+        grid=(bh, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda i, c_: (i, c_, 0)),
+            pl.BlockSpec((1, chunk), lambda i, c_: (i, c_)),
+            pl.BlockSpec((1, chunk, n), lambda i, c_: (i, c_, 0)),
+            pl.BlockSpec((1, chunk, n), lambda i, c_: (i, c_, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, p), lambda i, c_: (i, c_, 0)),
+            pl.BlockSpec((1, n, p), lambda i, c_: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, p), xdt.dtype),
+            jax.ShapeDtypeStruct((bh, n, p), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(xdt, loga, b, c)
+    return y, sfin

@@ -1,0 +1,41 @@
+"""Jit'd wrapper for the chunked SSD scan kernel (pads S to chunk multiple)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssm_scan.kernel import ssd_chunked_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunked_scan(
+    xdt: jax.Array,    # (BH, S, P)
+    loga: jax.Array,   # (BH, S)
+    b: jax.Array,      # (BH, S, N)
+    c: jax.Array,      # (BH, S, N)
+    chunk: int = 128,
+    interpret: bool | None = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (BH,S,P), final_state (BH,N,P))."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    bh, s, p = xdt.shape
+    q = min(chunk, s)
+    rem = (-s) % q
+    if rem:
+        # Padded steps use loga=0 (a=1, no decay) and xdt=0/B=0 so they do
+        # not perturb the carried state; padded y rows are sliced off.
+        xdt = jnp.pad(xdt, ((0, 0), (0, rem), (0, 0)))
+        loga = jnp.pad(loga, ((0, 0), (0, rem)))
+        b = jnp.pad(b, ((0, 0), (0, rem), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, rem), (0, 0)))
+    y, sfin = ssd_chunked_pallas(xdt, loga, b, c, chunk=q, interpret=interpret)
+    return y[:, :s], sfin

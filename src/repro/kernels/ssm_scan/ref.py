@@ -1,0 +1,122 @@
+"""Pure-jnp oracle for the Mamba2/SSD selective state-space scan.
+
+Per head with state S in R^{N x P} (N = d_state, P = head_dim), scalar
+decay a_t = exp(loga_t) (Mamba2's scalar-identity A):
+
+    S_t = a_t * S_{t-1} + B_t ⊗ xdt_t          (B_t in R^N, xdt_t in R^P)
+    y_t = C_t^T S_t                             (C_t in R^N)
+
+``xdt`` is x with the Delta step already folded in (x * dt); ``loga`` is
+dt * A (negative). The sequential lax.scan here is the ground truth the
+chunked Pallas kernel must reproduce.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_reference(
+    xdt: jax.Array,    # (BH, S, P)
+    loga: jax.Array,   # (BH, S)
+    b: jax.Array,      # (BH, S, N)
+    c: jax.Array,      # (BH, S, N)
+    s0: jax.Array | None = None,   # (BH, N, P) initial state
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (BH,S,P), final_state (BH,N,P))."""
+    bh, s, p = xdt.shape
+    n = b.shape[-1]
+    if s0 is None:
+        s0 = jnp.zeros((bh, n, p), jnp.float32)
+
+    def one(xdt_i, loga_i, b_i, c_i, s0_i):
+        def step(state, inputs):
+            x_t, la_t, b_t, c_t = inputs
+            state = jnp.exp(la_t) * state + jnp.outer(b_t, x_t)
+            y_t = c_t @ state
+            return state, y_t
+
+        state, ys = jax.lax.scan(step, s0_i, (xdt_i, loga_i, b_i, c_i))
+        return ys, state
+
+    y, s_fin = jax.vmap(one)(
+        xdt.astype(jnp.float32), loga.astype(jnp.float32),
+        b.astype(jnp.float32), c.astype(jnp.float32), s0.astype(jnp.float32),
+    )
+    return y.astype(xdt.dtype), s_fin
+
+
+def ssd_chunked_ref(
+    xdt: jax.Array,    # (BH, S, P)
+    loga: jax.Array,   # (BH, S)
+    b: jax.Array,      # (BH, S, N)
+    c: jax.Array,      # (BH, S, N)
+    chunk: int = 128,
+    s0: jax.Array | None = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD in pure jnp — the same matmul decomposition as the Pallas
+    kernel, expressed as a lax.scan over chunks (XLA path for CPU dry-runs
+    and the compile-time-friendly default for long sequences)."""
+    bh, s, p = xdt.shape
+    n = b.shape[-1]
+    # chunk scan slices along S: pin inputs to batch/head-sharded layout so
+    # every chunk step is device-local (see repro.dist.context)
+    from repro.dist.context import constrain_scan_inputs
+    xdt = constrain_scan_inputs(xdt)
+    loga = constrain_scan_inputs(loga)
+    b = constrain_scan_inputs(b)
+    c = constrain_scan_inputs(c)
+    q = min(chunk, s)
+    rem = (-s) % q
+    if rem:
+        xdt = jnp.pad(xdt, ((0, 0), (0, rem), (0, 0)))
+        loga = jnp.pad(loga, ((0, 0), (0, rem)))
+        b = jnp.pad(b, ((0, 0), (0, rem), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, rem), (0, 0)))
+    nc = xdt.shape[1] // q
+    xdt_c = xdt.reshape(bh, nc, q, p).swapaxes(0, 1).astype(jnp.float32)
+    loga_c = loga.reshape(bh, nc, q).swapaxes(0, 1).astype(jnp.float32)
+    b_c = b.reshape(bh, nc, q, n).swapaxes(0, 1).astype(jnp.float32)
+    c_c = c.reshape(bh, nc, q, n).swapaxes(0, 1).astype(jnp.float32)
+    if s0 is None:
+        s0 = jnp.zeros((bh, n, p), jnp.float32)
+
+    li = jnp.arange(q)[:, None]
+    lj = jnp.arange(q)[None, :]
+
+    def step(state, inputs):
+        x_i, la_i, b_i, c_i = inputs
+        cum = jnp.cumsum(la_i, axis=-1)                       # (BH, Q)
+        total = cum[:, -1]
+        scores = jnp.einsum("zqn,zkn->zqk", c_i, b_i)
+        decay = jnp.exp(cum[:, :, None] - cum[:, None, :])
+        l_mask = jnp.where(li >= lj, decay, 0.0)
+        y = jnp.einsum("zqk,zkp->zqp", scores * l_mask, x_i)
+        y = y + jnp.einsum("zqn,znp->zqp", c_i * jnp.exp(cum)[..., None], state)
+        b_scaled = b_i * jnp.exp(total[:, None, None] - cum[..., None])
+        state = jnp.exp(total)[:, None, None] * state + jnp.einsum(
+            "zqn,zqp->znp", b_scaled, x_i
+        )
+        return state, y
+
+    s_fin, ys = jax.lax.scan(step, s0, (xdt_c, loga_c, b_c, c_c))
+    y = ys.swapaxes(0, 1).reshape(bh, nc * q, p)[:, :s]
+    return y.astype(xdt.dtype), s_fin
+
+
+def ssd_decode_step(
+    state: jax.Array,  # (BH, N, P)
+    xdt: jax.Array,    # (BH, P)
+    loga: jax.Array,   # (BH,)
+    b: jax.Array,      # (BH, N)
+    c: jax.Array,      # (BH, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """One recurrent token step (decode path — O(1) per token)."""
+    state = jnp.exp(loga)[:, None, None] * state + jnp.einsum(
+        "bn,bp->bnp", b, xdt
+    )
+    y = jnp.einsum("bn,bnp->bp", c, state)
+    return y, state

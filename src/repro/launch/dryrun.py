@@ -1,0 +1,236 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and extract roofline terms.
+
+The two lines ABOVE this docstring must run before any jax import — jax
+locks the device count at first init. Do not set the flag globally: smoke
+tests and benches must see 1 device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+
+Each cell writes a JSON artifact with lower/compile timings, per-device
+FLOPs/bytes, collective schedule (op counts + bytes), memory analysis and
+the three roofline terms; EXPERIMENTS.md §Dry-run/§Roofline are generated
+from these artifacts.
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config, normalize
+from repro.dist.context import activation_sharding
+from repro.launch import inputs as inputs_mod
+from repro.launch import roofline as rf
+from repro.launch import steps as steps_mod
+from repro.launch.mesh import chips, make_production_mesh
+from repro.models.config import SHAPES, shape_applicable
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__),
+                           "../../../benchmarks/artifacts/dryrun")
+
+
+def dryrun_distger(multi_pod: bool = False,
+                   num_nodes: int = 41_652_230,   # Twitter |V| (Table 2)
+                   dim: int = 128, g_cnt: int = 4096, w_cnt: int = 2,
+                   t_len: int = 80, k_neg: int = 5) -> Dict[str, Any]:
+    """The paper's OWN workload on the production mesh: one DSGL lifetime
+    step (multi-window shared-negative SGNS) at Twitter scale, embedding
+    tables vocab-sharded over "model", lifetimes batched over "data", plus
+    the hotness-block sync collective. This is the cell that directly
+    rooflines DistGER's contribution."""
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.dist.sharding import resolve_spec
+    from repro.launch import roofline as rf
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = chips(mesh)
+    num_nodes = -(-num_nodes // 16) * 16     # pad vocab rows for TP16
+
+    def distger_step(phi_in, phi_out, walks, negs, lr):
+        from repro.core.dsgl import lifetime_step
+        pi, po, loss = lifetime_step.__wrapped__(  # un-jitted inner
+            phi_in, phi_out, walks, negs, lr, 10, False)
+        # periodic hotness sync modeled as one sampled-row pmean exchange
+        return pi, po, loss
+
+    f32, i32 = jnp.float32, jnp.int32
+    sds = jax.ShapeDtypeStruct
+    args = (
+        sds((num_nodes, dim), f32),             # phi_in
+        sds((num_nodes, dim), f32),             # phi_out
+        sds((g_cnt, w_cnt, t_len), i32),        # walks (rank ids)
+        sds((g_cnt, t_len, k_neg), i32),        # negatives
+        sds((), f32),                           # lr
+    )
+    vocab_spec = resolve_spec(P("model", None), mesh, (num_nodes, dim))
+    batch_spec_ = resolve_spec(P(("pod", "data"), None, None), mesh,
+                               (g_cnt, w_cnt, t_len))
+    neg_spec = resolve_spec(P(("pod", "data"), None, None), mesh,
+                            (g_cnt, t_len, k_neg))
+    in_sh = (NamedSharding(mesh, vocab_spec), NamedSharding(mesh, vocab_spec),
+             NamedSharding(mesh, batch_spec_), NamedSharding(mesh, neg_spec),
+             NamedSharding(mesh, P()))
+    out_sh = (NamedSharding(mesh, vocab_spec), NamedSharding(mesh, vocab_spec),
+              NamedSharding(mesh, P()))
+
+    rec: Dict[str, Any] = {"arch": "distger", "shape": "twitter_lifetime",
+                           "mesh": dict(mesh.shape), "chips": n_chips,
+                           "kind": "train", "status": "ok"}
+    t0 = time.time()
+    lowered = jax.jit(distger_step, in_shardings=in_sh,
+                      out_shardings=out_sh).lower(*args)
+    rec["lower_s"] = round(time.time() - t0, 2)
+    t1 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t1, 2)
+
+    from repro.launch.hlo_cost import HloCostModel
+    cost = HloCostModel(compiled.as_text()).entry_cost()
+    terms = rf.roofline_terms(cost.flops, cost.bytes_fused, cost.coll_bytes)
+    # useful flops: one lifetime batch trains G*W walks x T positions x
+    # 2w context rows x (W+K) targets x 2d MACs, fwd+bwd ~ 3x
+    useful = 3 * 2.0 * g_cnt * w_cnt * t_len * 2 * 10 * (w_cnt + k_neg) * dim
+    rec.update({
+        "per_device_flops": cost.flops,
+        "per_device_bytes": cost.bytes_fused,
+        "per_device_collective_bytes": cost.coll_bytes,
+        "collective_counts": {k: int(v) for k, v in cost.coll_counts.items()},
+        **terms,
+        "model_flops": useful,
+        "roofline_fraction": (useful / n_chips / rf.PEAK_FLOPS)
+        / max(terms["step_s_lower_bound"], 1e-12),
+    })
+    ma = compiled.memory_analysis()
+    rec["memory_analysis"] = {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes)}
+    print(ma)
+    return rec
+
+
+def dryrun_cell(arch: str, shape_name: str, multi_pod: bool = False,
+                seq_shard: bool = True) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = chips(mesh)
+    specs = inputs_mod.input_specs(cfg, shape_name)
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": dict(mesh.shape), "chips": n_chips,
+        "kind": shape.kind, "status": "ok",
+    }
+    t0 = time.time()
+    if shape.kind == "train":
+        fn = steps_mod.build_train_step(cfg)
+        in_sh, out_sh, (pshapes, oshapes) = steps_mod.train_shardings(
+            cfg, mesh, specs)
+        args = (pshapes, oshapes, specs["batch"], specs["step"])
+    elif shape.kind == "prefill":
+        fn = steps_mod.build_prefill_step(cfg, shape.seq_len)
+        in_sh, out_sh, pshapes = steps_mod.prefill_shardings(
+            cfg, mesh, specs, prefill_fn=fn)
+        args = (pshapes, specs["batch"])
+    else:  # decode
+        fn = steps_mod.build_serve_step(cfg)
+        in_sh, out_sh, pshapes = steps_mod.serve_shardings(
+            cfg, mesh, specs, serve_fn=fn)
+        args = (pshapes, specs["caches"], specs["token"], specs["cache_len"])
+
+    with activation_sharding(mesh, seq_shard=seq_shard and cfg.act_seq_shard):
+        lowered = jax.jit(fn, in_shardings=in_sh,
+                          out_shardings=out_sh).lower(*args)
+    rec["lower_s"] = round(time.time() - t0, 2)
+
+    t1 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t1, 2)
+
+    rec.update(rf.analyze_compiled(compiled, cfg, shape, n_chips))
+    print(compiled.memory_analysis())
+    ca = compiled.cost_analysis()
+    print({k: v for k, v in (ca[0] if isinstance(ca, list) else ca).items()
+           if k in ("flops", "bytes accessed")})
+    return rec
+
+
+def run_cells(archs, shapes, multi_pod: bool, out_dir: str,
+              seq_shard: bool = True) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    tag = "pod2" if multi_pod else "pod1"
+    for arch in archs:
+        for shape_name in shapes:
+            name = f"{normalize(arch)}__{shape_name}__{tag}"
+            path = os.path.join(out_dir, name + ".json")
+            print(f"=== {name} ===", flush=True)
+            t0 = time.time()
+            try:
+                rec = dryrun_cell(arch, shape_name, multi_pod,
+                                  seq_shard=seq_shard)
+            except Exception as e:
+                rec = {"arch": arch, "shape": shape_name, "status": "failed",
+                       "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-2000:]}
+                print("FAILED:", rec["error"], flush=True)
+            rec["wall_s"] = round(time.time() - t0, 2)
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            status = rec.get("status")
+            if status == "ok":
+                print(f"    ok  lower {rec['lower_s']}s compile "
+                      f"{rec['compile_s']}s bound={rec['bound']} "
+                      f"roofline_frac={rec['roofline_fraction']:.3f}",
+                      flush=True)
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default=None)
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--both-meshes", action="store_true")
+    p.add_argument("--no-seq-shard", action="store_true",
+                   help="disable Megatron-SP activation sharding (baseline)")
+    p.add_argument("--out", default=os.path.normpath(DEFAULT_OUT))
+    args = p.parse_args()
+
+    seq_shard = not args.no_seq_shard
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    if args.arch == "distger":
+        os.makedirs(args.out, exist_ok=True)
+        for mp in meshes:
+            tag = "pod2" if mp else "pod1"
+            rec = dryrun_distger(multi_pod=mp)
+            with open(os.path.join(args.out,
+                                   f"distger__twitter_lifetime__{tag}.json"),
+                      "w") as f:
+                json.dump(rec, f, indent=1)
+            print(f"distger {tag}: bound={rec['bound']} "
+                  f"compute={rec['compute_s']:.4f}s "
+                  f"memory={rec['memory_s']:.4f}s "
+                  f"collective={rec['collective_s']:.4f}s")
+        return
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    for mp in meshes:
+        run_cells(archs, shapes, mp, args.out, seq_shard=seq_shard)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,462 @@
+"""Trip-count-aware cost model over optimized (post-SPMD) HLO text.
+
+Why this exists: ``compiled.cost_analysis()`` counts a ``while`` body ONCE,
+but every scan (layer stack, grad-accum, SSD chunks, chunked attention)
+lowers to a while loop — so its FLOPs/bytes understate the program by the
+trip count (e.g. 28x for a 28-layer stack). The same hole would corrupt
+collective-byte sums. This module parses the HLO text into computations
+with a per-computation symbol table (operands print WITHOUT inline types in
+optimized HLO), evaluates per-computation costs, and multiplies while
+bodies by their trip counts (``backend_config.known_trip_count``, falling
+back to the loop condition's compare constant).
+
+Cost conventions (per device):
+  * flops — dot: 2 x prod(result dims) x prod(contracted dims); counted
+    inside fusions too. convolution: 2 x result x kernel-work.
+  * bytes — per top-level op: result bytes + operand bytes (symbol-table
+    lookup); fusions count boundary operands/result only (XLA convention);
+    parameter/constant/tuple/get-tuple-element/bitcast are free.
+  * collective bytes — operand bytes of all-reduce / all-gather /
+    reduce-scatter / all-to-all / collective-permute: one payload traversal
+    per op (ring constants are interpretation, stated in EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "token": 0,
+}
+
+_SHAPE_RE = re.compile(
+    r"\b(" + "|".join(k for k in _DTYPE_BYTES if k != "token")
+    + r")\[([0-9,]*)\](?:\{[^}]*\})?")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+            "after-all", "opt-barrier", "partition-id", "replica-id"}
+
+# Ops a TPU-grade fusion pass would fold into neighbors. The CPU backend
+# leaves many of these standalone, which inflates a naive bytes-accessed sum
+# ~5x vs what the TPU compiler would materialize. We therefore track TWO
+# byte counters: strict (every top-level op) and fused (elementwise ops
+# assumed fused) — the roofline memory term uses `fused` as the TPU
+# estimate and reports `strict` as the upper bound.
+ELEMENTWISE_OPS = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "and", "or", "xor", "not", "negate", "abs", "sign", "compare", "select",
+    "convert", "broadcast", "exponential", "exponential-minus-one", "log",
+    "log-plus-one", "tanh", "sine", "cosine", "sqrt", "rsqrt", "cbrt",
+    "floor", "ceil", "round-nearest-afz", "round-nearest-even", "is-finite",
+    "clamp", "iota", "reduce-precision", "shift-left",
+    "shift-right-arithmetic", "shift-right-logical", "atan2", "erf",
+    "logistic", "real", "imag", "complex", "expm1", "log1p", "reverse",
+    "concatenate", "pad", "slice",
+}
+
+_OPLINE_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->\s*.*\{\s*$")
+
+
+def _dims(dims_str: str) -> List[int]:
+    return [int(d) for d in dims_str.split(",")] if dims_str else []
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in _dims(dims):
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_type_and_rest(rest: str) -> Tuple[str, str]:
+    """'f32[2,3]{1,0} dot(...)' -> ('f32[2,3]{1,0}', 'dot(...)');
+    handles tuple types with nested parens and /*index*/ comments."""
+    rest = rest.lstrip()
+    if rest.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    return rest[: i + 1], rest[i + 1:].lstrip()
+        return rest, ""
+    sp = rest.find(" ")
+    if sp < 0:
+        return rest, ""
+    return rest[:sp], rest[sp + 1:].lstrip()
+
+
+def _split_top_commas(s: str) -> List[str]:
+    out, depth, start = [], 0, 0
+    for i, ch in enumerate(s):
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        elif ch == "," and depth == 0:
+            out.append(s[start:i])
+            start = i + 1
+    if s[start:].strip():
+        out.append(s[start:])
+    return out
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0            # strict: every top-level op
+    bytes_fused: float = 0.0      # TPU estimate: elementwise assumed fused
+    coll_bytes: float = 0.0
+    coll_by_op: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {c: 0.0 for c in COLLECTIVES})
+    coll_counts: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {c: 0.0 for c in COLLECTIVES})
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += mult * other.flops
+        self.bytes += mult * other.bytes
+        self.bytes_fused += mult * other.bytes_fused
+        self.coll_bytes += mult * other.coll_bytes
+        for k in COLLECTIVES:
+            self.coll_by_op[k] += mult * other.coll_by_op[k]
+            self.coll_counts[k] += mult * other.coll_counts[k]
+
+    def as_dict(self) -> Dict[str, object]:
+        return {
+            "flops": self.flops, "bytes": self.bytes,
+            "bytes_fused": self.bytes_fused,
+            "collective_bytes": self.coll_bytes,
+            "collective_bytes_by_op": dict(self.coll_by_op),
+            "collective_counts": {k: int(v) for k, v in self.coll_counts.items()},
+        }
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    opcode: str
+    result_type: str
+    args: List[str]                   # operand op names (no %)
+    attrs: str                        # text after the operand parens
+    raw_operands: str = ""            # raw text inside the op parens
+
+
+class _Comp:
+    def __init__(self, name: str, params: Dict[str, str]):
+        self.name = name
+        self.types: Dict[str, str] = dict(params)   # symbol -> type string
+        self.ops: List[_Op] = []
+
+
+class HloCostModel:
+    def __init__(self, text: str):
+        self.comps: Dict[str, _Comp] = {}
+        self.entry: Optional[str] = None
+        self.fusion_comps: set = set()
+        self._parse(text)
+        self._memo: Dict[str, Cost] = {}
+
+    # ------------------------------------------------------------------ parse
+    def _parse(self, text: str) -> None:
+        cur: Optional[_Comp] = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if cur is None:
+                m = _HDR_RE.match(line.strip())
+                if m:
+                    is_entry, name, params_str = m.groups()
+                    params: Dict[str, str] = {}
+                    for part in _split_top_commas(params_str):
+                        if ":" in part:
+                            pname, ptype = part.split(":", 1)
+                            params[pname.strip().lstrip("%")] = ptype.strip()
+                    cur = _Comp(name, params)
+                    self.comps[name] = cur
+                    if is_entry:
+                        self.entry = name
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            m = _OPLINE_RE.match(line)
+            if not m:
+                continue
+            opname, rest = m.groups()
+            rtype, tail = _split_type_and_rest(rest)
+            om = re.match(r"([a-z][\w\-\$.]*)\(", tail)
+            if not om:
+                cur.types[opname] = rtype
+                continue
+            opcode = om.group(1)
+            # operand list: up to the matching close paren
+            depth, i0 = 0, len(om.group(0)) - 1
+            operands_str, attrs = "", ""
+            for i in range(i0, len(tail)):
+                if tail[i] == "(":
+                    depth += 1
+                elif tail[i] == ")":
+                    depth -= 1
+                    if depth == 0:
+                        operands_str = tail[i0 + 1: i]
+                        attrs = tail[i + 1:]
+                        break
+            args = re.findall(r"%([\w.\-]+)", operands_str)
+            cur.types[opname] = rtype
+            op = _Op(opname, opcode, rtype, args, attrs, operands_str)
+            cur.ops.append(op)
+            km = re.search(r"calls=%?([\w.\-]+)", attrs)
+            if km:
+                self.fusion_comps.add(km.group(1))
+
+    # --------------------------------------------------------------- helpers
+    def _trip_count(self, op: _Op) -> int:
+        m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', op.attrs)
+        if m:
+            return int(m.group(1))
+        cm = re.search(r"condition=%?([\w.\-]+)", op.attrs)
+        if cm and cm.group(1) in self.comps:
+            best = 1
+            for o in self.comps[cm.group(1)].ops:
+                if o.opcode == "constant":
+                    k = re.search(r"constant\((\d+)\)", o.attrs or "")
+                    # constant value prints inside the op parens, re-find:
+                    k = k or re.search(r"constant\((\d+)\)", o.result_type)
+                    if k:
+                        best = max(best, int(k.group(1)))
+            return best
+        return 1
+
+    def _arg_type(self, comp: _Comp, arg: str) -> str:
+        return comp.types.get(arg, "")
+
+    def _op_flops(self, comp: _Comp, op: _Op) -> float:
+        if op.opcode == "dot":
+            r_elems = 1
+            rshapes = _SHAPE_RE.findall(op.result_type)
+            if not rshapes:
+                return 0.0
+            for d in _dims(rshapes[0][1]):
+                r_elems *= d
+            lhs_type = self._arg_type(comp, op.args[0]) if op.args else ""
+            lshapes = _SHAPE_RE.findall(lhs_type)
+            lhs_dims = _dims(lshapes[0][1]) if lshapes else []
+            m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.attrs)
+            contract = 1
+            if m and m.group(1):
+                for idx in m.group(1).split(","):
+                    i = int(idx)
+                    if i < len(lhs_dims):
+                        contract *= lhs_dims[i]
+            return 2.0 * r_elems * contract
+        if op.opcode == "convolution":
+            rshapes = _SHAPE_RE.findall(op.result_type)
+            if not rshapes:
+                return 0.0
+            r_elems = 1
+            for d in _dims(rshapes[0][1]):
+                r_elems *= d
+            k_type = self._arg_type(comp, op.args[1]) if len(op.args) > 1 else ""
+            k_elems = max(_type_bytes(k_type) // 2, 1)   # elems ~ bytes/2 bf16
+            rd = _dims(rshapes[0][1])
+            out_ch = rd[-1] if rd else 1
+            return 2.0 * r_elems * (k_elems / max(out_ch, 1))
+        return 0.0
+
+    def _op_bytes(self, comp: _Comp, op: _Op) -> float:
+        if op.opcode in FREE_OPS:
+            return 0.0
+        total = _type_bytes(op.result_type)
+        for a in op.args:
+            total += _type_bytes(self._arg_type(comp, a))
+        return float(total)
+
+    def _fusion_bytes(self, comp: _Comp, op: _Op) -> float:
+        """Fusion boundary bytes with slice/in-place-aware accounting.
+
+        Two systematic overcounts to avoid (both arise from scans):
+        * operand side — a scan body's fusion takes the WHOLE stacked
+          parameter array as an operand but reads one dynamic-slice per
+          iteration: charge the sliced bytes, not the buffer;
+        * result side — grad-accumulation fusions ROOT in a
+          dynamic-update-slice into a stacked buffer, which XLA aliases
+          in place: charge 2x the update-slice bytes (read-modify-write),
+          not the buffer; the aliased input operand is charged 0.
+        """
+        km = re.search(r"calls=%?([\w.\-]+)", op.attrs)
+        eff, root_bytes, aliased = (
+            self._fusion_analysis(km.group(1)) if km else ({}, None, set()))
+        total = float(root_bytes if root_bytes is not None
+                      else _type_bytes(op.result_type))
+        for i, a in enumerate(op.args):
+            if i in aliased:
+                continue
+            full = _type_bytes(self._arg_type(comp, a))
+            total += min(eff.get(i, full), full) if i in eff else full
+        return total
+
+    def _fusion_analysis(self, fname: str):
+        """Returns (param_idx -> effective read bytes,
+                    root write bytes or None,
+                    set of param indices aliased by in-place DUS roots)."""
+        if not hasattr(self, "_fusion_memo"):
+            self._fusion_memo = {}
+        if fname in self._fusion_memo:
+            return self._fusion_memo[fname]
+        eff: Dict[int, float] = {}
+        root_bytes = None
+        aliased: set = set()
+        fcomp = self.comps.get(fname)
+        if fcomp is not None and fcomp.ops:
+            pidx: Dict[str, int] = {}
+            for o in fcomp.ops:
+                if o.opcode == "parameter":
+                    mi = re.match(r"\s*(\d+)", o.raw_operands)
+                    pidx[o.name] = int(mi.group(1)) if mi else len(pidx)
+            by_name = {o.name: o for o in fcomp.ops}
+            root = fcomp.ops[-1]
+
+            def dus_write_bytes(dus: _Op) -> float:
+                upd = (by_name.get(dus.args[1]) if len(dus.args) > 1 else None)
+                if upd is not None:
+                    return 2.0 * _type_bytes(upd.result_type)
+                t = fcomp.types.get(dus.args[1], "") if len(dus.args) > 1 else ""
+                return 2.0 * _type_bytes(t)
+
+            # root write accounting (DUS roots are in-place)
+            dus_ops: List[_Op] = []
+            if root.opcode == "dynamic-update-slice":
+                root_bytes = dus_write_bytes(root)
+                dus_ops = [root]
+            elif root.opcode == "tuple":
+                rb = 0.0
+                for a in root.args:
+                    o = by_name.get(a)
+                    if o is not None and o.opcode == "dynamic-update-slice":
+                        rb += dus_write_bytes(o)
+                        dus_ops.append(o)
+                    elif o is not None:
+                        rb += _type_bytes(o.result_type)
+                    else:
+                        rb += _type_bytes(fcomp.types.get(a, ""))
+                root_bytes = rb
+
+            # operand-side effective reads
+            for pname, i in pidx.items():
+                consumers = [o for o in fcomp.ops if pname in o.args]
+                if not consumers:
+                    eff[i] = 0.0
+                    continue
+                if all(o.opcode in ("dynamic-slice", "slice", "gather")
+                       for o in consumers):
+                    eff[i] = float(sum(
+                        _type_bytes(o.result_type) for o in consumers))
+                elif all(o in dus_ops and o.args and o.args[0] == pname
+                         for o in consumers):
+                    # param is only the in-place destination of a root DUS
+                    aliased.add(i)
+        self._fusion_memo[fname] = (eff, root_bytes, aliased)
+        return self._fusion_memo[fname]
+
+    def _coll_base(self, opcode: str) -> Optional[str]:
+        for c in COLLECTIVES:
+            if opcode == c or opcode.startswith(c + "-start"):
+                return c
+        return None
+
+    def _op_coll_bytes(self, comp: _Comp, op: _Op) -> float:
+        total = 0.0
+        for a in op.args:
+            total += _type_bytes(self._arg_type(comp, a))
+        return total
+
+    # ------------------------------------------------------------------ eval
+    def comp_cost(self, name: str) -> Cost:
+        if name in self._memo:
+            return self._memo[name]
+        comp = self.comps.get(name)
+        cost = Cost()
+        self._memo[name] = cost
+        if comp is None:
+            return cost
+        in_fusion = name in self.fusion_comps
+        for op in comp.ops:
+            if op.opcode == "while":
+                bm = re.search(r"body=%?([\w.\-]+)", op.attrs)
+                if bm:
+                    cost.add(self.comp_cost(bm.group(1)),
+                             mult=float(self._trip_count(op)))
+                continue
+            if op.opcode == "fusion":
+                km = re.search(r"calls=%?([\w.\-]+)", op.attrs)
+                b = self._fusion_bytes(comp, op)
+                cost.bytes += b
+                cost.bytes_fused += b
+                if km:
+                    cost.flops += self.comp_cost(km.group(1)).flops
+                continue
+            if op.opcode in ("call", "async-start"):
+                am = re.search(r"(?:to_apply|called_computation)=%?([\w.\-]+)",
+                               op.attrs)
+                if am:
+                    cost.add(self.comp_cost(am.group(1)))
+                continue
+            if op.opcode == "conditional":
+                branches = re.findall(
+                    r"(?:branch_computations=\{([^}]*)\}"
+                    r"|true_computation=%?([\w.\-]+)"
+                    r"|false_computation=%?([\w.\-]+))", op.attrs)
+                names: List[str] = []
+                for grp in branches:
+                    for g in grp:
+                        if g:
+                            names.extend(
+                                x.strip().lstrip("%") for x in g.split(","))
+                if names:
+                    branch_costs = [self.comp_cost(n) for n in names]
+                    cost.add(max(branch_costs,
+                                 key=lambda c: c.flops + c.bytes))
+                continue
+            cost.flops += self._op_flops(comp, op)
+            base = self._coll_base(op.opcode)
+            if base is not None:
+                cb = self._op_coll_bytes(comp, op)
+                cost.coll_bytes += cb
+                cost.coll_by_op[base] += cb
+                cost.coll_counts[base] += 1
+            if not in_fusion:
+                if op.opcode == "dynamic-update-slice":
+                    # in-place: read+write the update slice, not the buffer
+                    upd = (self._arg_type(comp, op.args[1])
+                           if len(op.args) > 1 else "")
+                    b = 2.0 * _type_bytes(upd)
+                elif op.opcode == "dynamic-slice":
+                    b = 2.0 * _type_bytes(op.result_type)
+                else:
+                    b = self._op_bytes(comp, op)
+                cost.bytes += b
+                if op.opcode not in ELEMENTWISE_OPS:
+                    cost.bytes_fused += b
+        self._memo[name] = cost
+        return cost
+
+    def entry_cost(self) -> Cost:
+        assert self.entry is not None, "no ENTRY computation found"
+        return self.comp_cost(self.entry)
+
+
+def analyze_text(text: str) -> Cost:
+    return HloCostModel(text).entry_cost()

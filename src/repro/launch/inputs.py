@@ -1,0 +1,82 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) cell.
+
+Weak-type-correct, shardable, never allocates device memory — the dry-run
+pattern. Three step kinds:
+
+  train   -> {"batch": {...}, "step": ()}                for train_step
+  prefill -> {"batch": {...}}                            for prefill_step
+  decode  -> {"caches": ..., "token": (B,1), "cache_len": ()}  for serve_step
+
+Enc-dec cells split seq_len as S_src = S_tgt = seq_len // 2 (train/prefill)
+and use a CROSS_SRC_LEN encoder memory for decode (models/zoo.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import zoo
+from repro.models.config import ModelConfig, SHAPES, ShapeConfig
+
+I32 = jnp.int32
+F32 = jnp.float32
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.encdec:
+        half = s // 2
+        batch = {
+            "frames": _sds((b, half, cfg.d_model), F32),
+            "tokens": _sds((b, half), I32),
+            "labels": _sds((b, half), I32),
+        }
+    else:
+        batch = {"tokens": _sds((b, s), I32), "labels": _sds((b, s), I32)}
+    return {"batch": batch, "step": _sds((), I32)}
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.encdec:
+        half = s // 2
+        batch = {
+            "frames": _sds((b, half, cfg.d_model), F32),
+            "tokens": _sds((b, half), I32),
+        }
+    else:
+        batch = {"tokens": _sds((b, s), I32)}
+    return {"batch": batch}
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    caches = jax.eval_shape(
+        functools.partial(zoo.init_caches, cfg, b, s))
+    return {
+        "caches": caches,
+        "token": _sds((b, 1), I32),
+        "cache_len": _sds((), I32),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> Dict[str, Any]:
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return train_input_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_input_specs(cfg, shape)
+    return decode_input_specs(cfg, shape)
+
+
+def params_shapes(cfg: ModelConfig):
+    return jax.eval_shape(
+        functools.partial(zoo.init_params, jax.random.PRNGKey(0), cfg))

@@ -1,0 +1,102 @@
+"""Dry-run 'profiler': attribute trip-count-scaled HLO bytes/flops to model
+regions via op_name metadata (jaxpr paths survive into optimized HLO).
+
+This is the §Perf napkin-math engine: it tells you WHICH subsystem owns the
+dominant roofline term before you change anything.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import Counter
+from typing import Dict, Optional, Tuple
+
+from repro.launch.hlo_cost import HloCostModel
+
+REGIONS = (
+    ("attention", ("attention", "dot_product", "mha", "flash")),
+    ("ssd_scan", ("ssd", "mamba", "mixer", "mlstm", "slstm")),
+    ("moe", ("moe", "router", "expert")),
+    ("mlp", ("mlp", "ffn", "silu", "swiglu")),
+    ("loss_vocab", ("unembed", "logsumexp", "log_softmax", "cross_entropy",
+                    "nll", "take_along_axis")),
+    ("embed", ("embed",)),
+    ("norm", ("rmsnorm", "norm")),
+    ("optimizer", ("adamw", "opt_update", "clip", "global_norm", "upd")),
+    ("rope", ("rope",)),
+)
+
+
+def _region_of(op_name: str) -> str:
+    low = op_name.lower()
+    for region, keys in REGIONS:
+        if any(k in low for k in keys):
+            return region
+    if "transpose(" in low or "jvp(" in low:
+        return "backward_other"
+    return "other"
+
+
+def attribute(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Returns region -> {bytes, flops, collective_bytes} with while-loop
+    trip multipliers applied."""
+    m = HloCostModel(hlo_text)
+    acc: Dict[str, Counter] = {}
+
+    def bump(region: str, field: str, v: float):
+        acc.setdefault(region, Counter())[field] += v
+
+    def walk(name: str, mult: float):
+        comp = m.comps.get(name)
+        if comp is None:
+            return
+        in_fusion = name in m.fusion_comps
+        for op in comp.ops:
+            meta = re.search(r'op_name="([^"]*)"', op.attrs)
+            region = _region_of(meta.group(1)) if meta else "other"
+            if op.opcode == "while":
+                bm = re.search(r"body=%?([\w.\-]+)", op.attrs)
+                if bm:
+                    walk(bm.group(1), mult * m._trip_count(op))
+                continue
+            if op.opcode == "fusion":
+                km = re.search(r"calls=%?([\w.\-]+)", op.attrs)
+                bump(region, "bytes", mult * m._fusion_bytes(comp, op))
+                if km:
+                    bump(region, "flops",
+                         mult * m.comp_cost(km.group(1)).flops)
+                continue
+            if op.opcode == "call":
+                am = re.search(r"to_apply=%?([\w.\-]+)", op.attrs)
+                if am:
+                    walk(am.group(1), mult)
+                continue
+            base = m._coll_base(op.opcode)
+            if base is not None:
+                bump(region, "collective_bytes",
+                     mult * m._op_coll_bytes(comp, op))
+            if not in_fusion:
+                if op.opcode == "dynamic-update-slice":
+                    from repro.launch.hlo_cost import _type_bytes
+                    upd = (comp.types.get(op.args[1], "")
+                           if len(op.args) > 1 else "")
+                    b = 2.0 * _type_bytes(upd)
+                else:
+                    b = m._op_bytes(comp, op)
+                bump(region, "bytes", mult * b)
+            bump(region, "flops", mult * m._op_flops(comp, op))
+
+    walk(m.entry, 1.0)
+    return {r: dict(c) for r, c in acc.items()}
+
+
+def print_profile(hlo_text: str, top: int = 12) -> Dict[str, Dict[str, float]]:
+    prof = attribute(hlo_text)
+    rows = sorted(prof.items(),
+                  key=lambda kv: -kv[1].get("bytes", 0.0))[:top]
+    print(f"{'region':16s} {'bytes':>12s} {'flops':>12s} {'coll_bytes':>12s}")
+    for region, c in rows:
+        print(f"{region:16s} {c.get('bytes', 0):12.3e} "
+              f"{c.get('flops', 0):12.3e} "
+              f"{c.get('collective_bytes', 0):12.3e}")
+    return prof

@@ -1,0 +1,142 @@
+"""Generate EXPERIMENTS.md tables from dry-run artifacts.
+
+  PYTHONPATH=src python -m repro.launch.report \
+      --baseline benchmarks/artifacts/dryrun_baseline \
+      --optimized benchmarks/artifacts/dryrun
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+
+def load_dir(d: str) -> Dict[str, dict]:
+    out = {}
+    for path in sorted(glob.glob(os.path.join(d, "*.json"))):
+        rec = json.load(open(path))
+        key = os.path.basename(path)[:-5]
+        out[key] = rec
+    return out
+
+
+def fmt_s(x: Optional[float]) -> str:
+    if x is None:
+        return "-"
+    if x >= 100:
+        return f"{x:.0f}"
+    if x >= 1:
+        return f"{x:.2f}"
+    return f"{x * 1e3:.2f}m" if x >= 1e-3 else f"{x * 1e6:.0f}u"
+
+
+def roofline_table(recs: Dict[str, dict], tag: str = "pod1") -> List[str]:
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | bound | "
+        "6ND/HLO | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for key, r in sorted(recs.items()):
+        if not key.endswith(tag):
+            continue
+        arch, shape, _ = key.rsplit("__", 2)
+        if r.get("status") == "skipped":
+            lines.append(f"| {arch} | {shape} | - | - | - | skipped | - | - |")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"| {arch} | {shape} | - | - | - | FAILED | - | - |")
+            continue
+        lines.append(
+            f"| {arch} | {shape} | {fmt_s(r['compute_s'])} | "
+            f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+            f"{r['bound'].replace('_s','')} | "
+            f"{r.get('useful_flops_ratio', 0.0):.2f} | "
+            f"{r['roofline_fraction']:.3f} |")
+    return lines
+
+
+def dryrun_table(recs: Dict[str, dict]) -> List[str]:
+    lines = [
+        "| arch | shape | mesh | lower s | compile s | arg GB | temp GB | "
+        "collectives (AR/AG/RS/A2A/CP) |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for key, r in sorted(recs.items()):
+        arch, shape, tag = key.rsplit("__", 2)
+        mesh = "2x16x16" if tag == "pod2" else "16x16"
+        if r.get("status") == "skipped":
+            lines.append(
+                f"| {arch} | {shape} | {mesh} | - | - | - | - | skipped: "
+                f"{r.get('reason','')[:40]} |")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"| {arch} | {shape} | {mesh} | - | - | - | - | "
+                         f"FAILED |")
+            continue
+        ma = r.get("memory_analysis", {})
+        c = r.get("collective_counts", {})
+        cc = (f"{c.get('all-reduce',0)}/{c.get('all-gather',0)}/"
+              f"{c.get('reduce-scatter',0)}/{c.get('all-to-all',0)}/"
+              f"{c.get('collective-permute',0)}")
+        lines.append(
+            f"| {arch} | {shape} | {mesh} | {r['lower_s']} | "
+            f"{r['compile_s']} | {ma.get('argument_bytes', 0)/1e9:.1f} | "
+            f"{ma.get('temp_bytes', 0)/1e9:.1f} | {cc} |")
+    return lines
+
+
+def compare_table(base: Dict[str, dict], opt: Dict[str, dict]) -> List[str]:
+    lines = [
+        "| arch | shape | baseline bound (s) | optimized bound (s) | "
+        "speedup | baseline frac | optimized frac |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for key in sorted(base):
+        if not key.endswith("pod1"):
+            continue
+        b, o = base.get(key, {}), opt.get(key, {})
+        if b.get("status") != "ok" or o.get("status") != "ok":
+            continue
+        arch, shape, _ = key.rsplit("__", 2)
+        sb = b["step_s_lower_bound"]
+        so = o["step_s_lower_bound"]
+        lines.append(
+            f"| {arch} | {shape} | {fmt_s(sb)} | {fmt_s(so)} | "
+            f"{sb / so:.2f}x | {b['roofline_fraction']:.3f} | "
+            f"{o['roofline_fraction']:.3f} |")
+    return lines
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--baseline", default="benchmarks/artifacts/dryrun_baseline")
+    p.add_argument("--optimized", default="benchmarks/artifacts/dryrun")
+    p.add_argument("--section", default="all",
+                   choices=("all", "roofline", "dryrun", "compare"))
+    args = p.parse_args()
+
+    base = load_dir(args.baseline) if os.path.isdir(args.baseline) else {}
+    opt = load_dir(args.optimized)
+
+    if args.section in ("all", "dryrun"):
+        print("### Dry-run (optimized build, both meshes)\n")
+        print("\n".join(dryrun_table(opt)))
+        print()
+    if args.section in ("all", "roofline"):
+        print("### Roofline — optimized build (single pod, 256 chips)\n")
+        print("\n".join(roofline_table(opt)))
+        print()
+        if base:
+            print("### Roofline — paper-faithful baseline build\n")
+            print("\n".join(roofline_table(base)))
+            print()
+    if args.section in ("all", "compare") and base:
+        print("### Baseline vs optimized (step-time lower bound)\n")
+        print("\n".join(compare_table(base, opt)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,172 @@
+"""Roofline analysis from compiled dry-run artifacts (no real hardware).
+
+Three terms per (arch x shape x mesh), all in seconds:
+
+  compute    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+  memory     = HLO_bytes_per_device / HBM_bandwidth
+  collective = collective_bytes_per_device / ICI_link_bandwidth
+
+``cost_analysis()`` reports the per-device (post-SPMD) program, so
+per-device terms need no further division. Collective bytes are NOT in
+cost_analysis: we parse the optimized HLO and sum OPERAND sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+(simple size model: one traversal of the payload over the link; ring
+constants ~2(N-1)/N are absorbed into the interpretation, stated in
+EXPERIMENTS.md).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, Optional, Tuple
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+# dtype[1,2,3]{layout} — layout part optional
+_SHAPE_RE = re.compile(r"\b(pred|s8|u8|s16|u16|f16|bf16|s32|u32|f32|s64|u64"
+                       r"|f64|c64|c128)\[([0-9,]*)\]")
+
+
+def _nbytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def parse_collective_bytes(hlo_text: str) -> Tuple[float, Dict[str, float]]:
+    """Sum operand bytes of every collective op in (per-device) HLO text."""
+    by_op: Dict[str, float] = {c: 0.0 for c in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # op lines look like:  %name = TYPE op-name(OPERANDS), attrs
+        m = re.search(r"=\s*(?:\([^)]*\)|\S+)\s+([a-z0-9-]+)\(", stripped)
+        if not m:
+            continue
+        op = m.group(1)
+        # normalize all-reduce-start / all-gather-done etc.
+        base = None
+        for c in COLLECTIVES:
+            if op == c or op.startswith(c + "-start"):
+                base = c
+                break
+        if base is None:
+            continue
+        # operands are inside the call parens; everything before "=" plus the
+        # result type also matches _SHAPE_RE, so split at the op name first.
+        operands_part = stripped.split(op + "(", 1)[1]
+        total = 0
+        for dt, dims in _SHAPE_RE.findall(operands_part):
+            total += _nbytes(dt, dims)
+        by_op[base] += float(total)
+    return sum(by_op.values()), by_op
+
+
+def count_collectives(hlo_text: str) -> Dict[str, int]:
+    counts: Dict[str, int] = {c: 0 for c in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s*(?:\([^)]*\)|\S+)\s+([a-z0-9-]+)\(", line.strip())
+        if not m:
+            continue
+        op = m.group(1)
+        for c in COLLECTIVES:
+            if op == c or op.startswith(c + "-start"):
+                counts[c] += 1
+    return counts
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS for the cell: 6·N·D train / 2·N·D inference
+    (N = active params, D = tokens processed by the step)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.tokens
+    return 2.0 * n * shape.global_batch        # decode: one token per row
+
+
+def roofline_terms(
+    per_device_flops: float,
+    per_device_bytes: float,
+    per_device_collective_bytes: float,
+) -> Dict[str, float]:
+    terms = {
+        "compute_s": per_device_flops / PEAK_FLOPS,
+        "memory_s": per_device_bytes / HBM_BW,
+        "collective_s": per_device_collective_bytes / ICI_BW,
+    }
+    terms["bound"] = max(terms, key=lambda k: terms[k] if k.endswith("_s") else -1)
+    terms["step_s_lower_bound"] = max(
+        terms["compute_s"], terms["memory_s"], terms["collective_s"])
+    return terms
+
+
+def analyze_compiled(compiled, cfg, shape, chips: int) -> Dict[str, object]:
+    """Extract the full §Roofline record from one compiled artifact.
+
+    Primary costs come from the trip-count-aware HLO text model
+    (launch.hlo_cost) — XLA's own cost_analysis() counts while (scan)
+    bodies once, understating a 28-layer stack 28x; its numbers are kept
+    under xla_cost_analysis for reference."""
+    from repro.launch.hlo_cost import HloCostModel
+
+    hlo = compiled.as_text()
+    cost = HloCostModel(hlo).entry_cost()
+    flops = cost.flops
+    byts = cost.bytes_fused
+    coll_bytes = cost.coll_bytes
+    coll_by_op = dict(cost.coll_by_op)
+    coll_counts = {k: int(v) for k, v in cost.coll_counts.items()}
+    terms = roofline_terms(flops, byts, coll_bytes)
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+
+    mf = model_flops(cfg, shape)
+    hlo_global_flops = flops * chips
+    rec: Dict[str, object] = {
+        "per_device_flops": flops,
+        "per_device_bytes": byts,
+        "per_device_bytes_strict": cost.bytes,
+        "per_device_collective_bytes": coll_bytes,
+        "collective_bytes_by_op": coll_by_op,
+        "collective_counts": coll_counts,
+        **terms,
+        "model_flops": mf,
+        "hlo_global_flops": hlo_global_flops,
+        "useful_flops_ratio": (mf / hlo_global_flops) if hlo_global_flops else 0.0,
+        "roofline_fraction": (
+            (mf / chips / PEAK_FLOPS) / terms["step_s_lower_bound"]
+            if terms["step_s_lower_bound"] > 0 else 0.0),
+        "xla_cost_analysis": {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+            "note": "while bodies counted once by XLA; see hlo_cost",
+        },
+    }
+    try:
+        ma = compiled.memory_analysis()
+        rec["memory_analysis"] = {
+            "argument_bytes": int(getattr(ma, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(ma, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(ma, "temp_size_in_bytes", 0)),
+            "alias_bytes": int(getattr(ma, "alias_size_in_bytes", 0)),
+        }
+    except Exception as e:                      # CPU backend may not support
+        rec["memory_analysis"] = {"error": str(e)}
+    return rec

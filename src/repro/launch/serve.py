@@ -1,0 +1,50 @@
+"""Serving launcher CLI (batched prefill + decode over the runtime server).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduced \
+      --requests 6 --new-tokens 8
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="qwen3-1.7b")
+    p.add_argument("--reduced", action="store_true")
+    p.add_argument("--requests", type=int, default=6)
+    p.add_argument("--new-tokens", type=int, default=8)
+    p.add_argument("--slots", type=int, default=4)
+    p.add_argument("--max-len", type=int, default=128)
+    args = p.parse_args()
+
+    from repro.configs import get_config
+    from repro.models.zoo import init_params, reduce_config
+    from repro.runtime.server import Request, Server, ServerConfig, \
+        throughput_stats
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_config(cfg)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    srv = Server(cfg, params, ServerConfig(batch_slots=args.slots,
+                                           max_len=args.max_len))
+    rng = np.random.default_rng(0)
+    reqs = [Request(i, rng.integers(0, cfg.vocab_size, size=8).astype(np.int32),
+                    max_new_tokens=args.new_tokens)
+            for i in range(args.requests)]
+    t0 = time.time()
+    done = srv.serve(reqs)
+    dt = time.time() - t0
+    n_tok = sum(len(r.output) for r in done)
+    print(json.dumps({"requests": len(done), **throughput_stats(n_tok, dt)}))
+
+
+if __name__ == "__main__":
+    main()

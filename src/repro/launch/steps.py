@@ -1,0 +1,161 @@
+"""Step-function + sharding builders: the SAME functions the trainer/server
+execute are what the dry-run lowers.
+
+``train_step``  : params, opt_state, batch, step -> params', opt_state', metrics
+``prefill_step``: params, batch -> (last-token logits, caches)
+``serve_step``  : params, caches, token, cache_len -> (logits, caches')
+
+Gradient accumulation (cfg.grad_accum > 1) scans over microbatches with a
+cfg.grad_accum_dtype accumulator — the 405B recipe (bf16 accumulators, bf16
+Adam moments, FSDP, remat, Megatron-SP activations).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.dist.sharding import resolve_specs, sharding_tree
+from repro.models import zoo
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.models.layers import dtype_of
+from repro.optim.optimizers import (
+    AdamWConfig, init_opt_state, opt_specs, opt_update,
+)
+from repro.optim.schedules import cosine_warmup
+
+
+def default_opt(cfg: ModelConfig) -> AdamWConfig:
+    return AdamWConfig(moment_dtype=cfg.opt_state_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+# ---------------------------------------------------------------------------
+
+def build_train_step(cfg: ModelConfig, opt_cfg: Optional[AdamWConfig] = None,
+                     total_steps: int = 10_000, lr: float = 3e-4):
+    opt_cfg = opt_cfg or default_opt(cfg)
+    schedule = cosine_warmup(lr, min(2000, total_steps // 10 + 1), total_steps)
+    loss_of = zoo.loss_fn(cfg)
+    accum = max(cfg.grad_accum, 1)
+
+    def train_step(params, opt_state, batch, step):
+        if accum > 1:
+            from repro.dist.context import constrain_tree
+            pspecs = zoo.param_specs(cfg)
+            mb = jax.tree_util.tree_map(
+                lambda x: x.reshape(accum, x.shape[0] // accum, *x.shape[1:]),
+                batch)
+            adt = dtype_of(cfg.grad_accum_dtype)
+
+            def body(gacc, b):
+                loss, g = jax.value_and_grad(loss_of)(params, b)
+                g = jax.tree_util.tree_map(lambda gg: gg.astype(adt), g)
+                # cast to the accumulator dtype BEFORE the cross-data
+                # reduction and pin the carry to the FSDP layout — else
+                # XLA re-reduces full-f32 weight grads every microbatch
+                # (51 TB/device measured on llama3-405b; §Perf)
+                g = constrain_tree(g, pspecs)
+                gacc = jax.tree_util.tree_map(
+                    lambda a, gg: a + gg, gacc, g)
+                return constrain_tree(gacc, pspecs), loss
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, adt), params)
+            g0 = constrain_tree(g0, pspecs)
+            gacc, losses = jax.lax.scan(body, g0, mb)
+            grads = jax.tree_util.tree_map(lambda g: g / accum, gacc)
+            loss = jnp.mean(losses)
+        else:
+            loss, grads = jax.value_and_grad(loss_of)(params, batch)
+        params, opt_state, gnorm = opt_update(
+            grads, opt_state, params, opt_cfg, schedule(step))
+        return params, opt_state, {"loss": loss, "gnorm": gnorm}
+
+    return train_step
+
+
+def build_prefill_step(cfg: ModelConfig, max_len: int):
+    return zoo.prefill_fn(cfg, max_len)
+
+
+def build_serve_step(cfg: ModelConfig):
+    return zoo.decode_fn(cfg)
+
+
+# ---------------------------------------------------------------------------
+# Shardings (resolved NamedSharding trees per mesh)
+# ---------------------------------------------------------------------------
+
+def train_shardings(cfg: ModelConfig, mesh: Mesh, specs_in: Dict[str, Any],
+                    opt_cfg: Optional[AdamWConfig] = None):
+    """Returns (in_shardings, out_shardings) for train_step given the
+    input-spec dict from launch.inputs.train_input_specs."""
+    opt_cfg = opt_cfg or default_opt(cfg)
+    pspecs = zoo.param_specs(cfg)
+    pshapes = jax.eval_shape(
+        functools.partial(zoo.init_params, jax.random.PRNGKey(0), cfg))
+    params_sh = sharding_tree(pspecs, mesh, pshapes)
+
+    ospecs = opt_specs(pspecs, opt_cfg)
+    oshapes = jax.eval_shape(
+        functools.partial(init_opt_state, pshapes, opt_cfg))
+    opt_sh = sharding_tree(ospecs, mesh, oshapes)
+
+    bspecs = zoo.train_batch_specs(cfg)
+    batch_sh = sharding_tree(bspecs, mesh, specs_in["batch"])
+    step_sh = NamedSharding(mesh, P())
+
+    metrics_sh = {"loss": NamedSharding(mesh, P()),
+                  "gnorm": NamedSharding(mesh, P())}
+    in_sh = (params_sh, opt_sh, batch_sh, step_sh)
+    out_sh = (params_sh, opt_sh, metrics_sh)
+    return in_sh, out_sh, (pshapes, oshapes)
+
+
+def prefill_shardings(cfg: ModelConfig, mesh: Mesh, specs_in: Dict[str, Any],
+                      prefill_fn=None, max_len: int = 0):
+    from repro.dist.sharding import batch_spec
+    pspecs = zoo.param_specs(cfg)
+    pshapes = jax.eval_shape(
+        functools.partial(zoo.init_params, jax.random.PRNGKey(0), cfg))
+    params_sh = sharding_tree(pspecs, mesh, pshapes)
+    bspecs = {k: v for k, v in zoo.train_batch_specs(cfg).items()
+              if k in specs_in["batch"]}
+    batch_sh = sharding_tree(bspecs, mesh, specs_in["batch"])
+    in_sh = (params_sh, batch_sh)
+    # outputs: (last-token logits (B,V) vocab-sharded, caches) — resolved
+    # against the ACTUAL output shapes via eval_shape.
+    fn = prefill_fn or build_prefill_step(cfg, max_len)
+    logits_shape, caches_shapes = jax.eval_shape(
+        fn, pshapes, specs_in["batch"])
+    logits_sh = sharding_tree(batch_spec("model"), mesh, logits_shape)
+    caches_sh = sharding_tree(zoo.cache_specs(cfg), mesh, caches_shapes)
+    out_sh = (logits_sh, caches_sh)
+    return in_sh, out_sh, pshapes
+
+
+def serve_shardings(cfg: ModelConfig, mesh: Mesh, specs_in: Dict[str, Any],
+                    serve_fn=None):
+    from repro.dist.sharding import batch_spec
+    pspecs = zoo.param_specs(cfg)
+    pshapes = jax.eval_shape(
+        functools.partial(zoo.init_params, jax.random.PRNGKey(0), cfg))
+    params_sh = sharding_tree(pspecs, mesh, pshapes)
+    cspecs = zoo.cache_specs(cfg)
+    caches_sh = sharding_tree(cspecs, mesh, specs_in["caches"])
+    token_sh = sharding_tree(batch_spec(None), mesh, specs_in["token"])
+    clen_sh = NamedSharding(mesh, P())
+    fn = serve_fn or build_serve_step(cfg)
+    logits_shape, _ = jax.eval_shape(
+        fn, pshapes, specs_in["caches"], specs_in["token"],
+        specs_in["cache_len"])
+    logits_sh = sharding_tree(batch_spec("model"), mesh, logits_shape)
+    in_sh = (params_sh, caches_sh, token_sh, clen_sh)
+    out_sh = (logits_sh, caches_sh)
+    return in_sh, out_sh, pshapes

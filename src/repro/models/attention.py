@@ -1,0 +1,155 @@
+"""GQA attention (optional qk_norm), with KV cache for serving.
+
+Head axes are sharded over "model"; the KV cache inherits the same sharding.
+``attn_impl="flash"`` routes prefill/train through the Pallas kernel
+(TPU deploy path); "ref" uses the jnp oracle (CPU dry-run path — identical
+math and FLOPs, so roofline numbers are unaffected).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope, dense_init, rmsnorm
+
+Params = Dict[str, Any]
+
+
+def init_attention(key, cfg: ModelConfig, dtype) -> Params:
+    d, h, hkv = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    hd = cfg.resolved_head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(k1, (d, h, hd), dtype),
+        "wk": dense_init(k2, (d, hkv, hd), dtype),
+        "wv": dense_init(k3, (d, hkv, hd), dtype),
+        "wo": dense_init(k4, (h, hd, d), dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = {"scale": jnp.ones((hd,), dtype)}
+        p["k_norm"] = {"scale": jnp.ones((hd,), dtype)}
+    return p
+
+
+def spec_attention(cfg: ModelConfig) -> Params:
+    dax = "data" if cfg.fsdp else None
+    p = {
+        "wq": P(dax, "model", None),
+        "wk": P(dax, "model", None),
+        "wv": P(dax, "model", None),
+        "wo": P("model", None, dax),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = {"scale": P(None)}
+        p["k_norm"] = {"scale": P(None)}
+    return p
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Params:
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, hkv, max_len, hd), dtype),
+        "v": jnp.zeros((batch, hkv, max_len, hd), dtype),
+    }
+
+
+def spec_cache(cfg: Optional[ModelConfig] = None) -> Params:
+    """KV-cache layout choice: shard heads over "model" when the KV-head
+    count divides the production tensor axis; otherwise shard the SEQUENCE
+    dim (split-KV / flash-decoding style) so few-KV-head GQA models (kv=4/8)
+    still spread the cache across the pod instead of replicating 16x."""
+    from repro.dist.sharding import PRODUCTION_MODEL_AXIS
+    if cfg is None or cfg.num_kv_heads % PRODUCTION_MODEL_AXIS == 0:
+        s = P(("pod", "data"), "model", None, None)
+    else:
+        s = P(("pod", "data"), None, "model", None)
+    return {"k": s, "v": s}
+
+
+def _attend(q, k, v, *, causal: bool, impl: str, q_offset: int = 0):
+    if impl == "flash":
+        from repro.kernels.flash_attention.ops import flash_attention
+        return flash_attention(q, k, v, causal=causal, q_offset=q_offset)
+    if impl == "chunked" or (impl == "ref" and q.shape[2] > 2048):
+        from repro.kernels.flash_attention.ref import mha_chunked
+        return mha_chunked(q, k, v, causal=causal, q_offset=q_offset)
+    from repro.kernels.flash_attention.ref import mha_reference
+    return mha_reference(q, k, v, causal=causal, q_offset=q_offset)
+
+
+from repro.models.layers import named
+
+
+@named("attention")
+def attention(
+    x: jax.Array,                 # (B, S, d)
+    p: Params,
+    cfg: ModelConfig,
+    positions: jax.Array,         # (S,)
+    *,
+    causal: bool = True,
+    cache: Optional[Params] = None,
+    cache_len: Optional[jax.Array] = None,   # () int32 — tokens already cached
+    kv_x: Optional[jax.Array] = None,        # cross-attention source
+) -> Tuple[jax.Array, Optional[Params]]:
+    """Returns (y, updated_cache). Three modes:
+
+    * train/prefill: cache=None -> full self-attention over x.
+    * prefill with cache: cache provided, cache_len=None -> fills cache[0:S].
+    * decode: cache + cache_len -> writes S new tokens at cache_len, attends
+      over the first cache_len + S entries (positions give RoPE phases).
+    """
+    b, s, d = x.shape
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"])
+    src = x if kv_x is None else kv_x
+    k = jnp.einsum("bsd,dhk->bhsk", src, p["wk"])
+    v = jnp.einsum("bsd,dhk->bhsk", src, p["wv"])
+
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+
+    kv_positions = positions if kv_x is None else jnp.arange(src.shape[1])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, kv_positions, cfg.rope_theta)
+
+    if cache is None:
+        y = _attend(q, k, v, causal=causal, impl=cfg.attn_impl)
+        new_cache = None
+    elif cache_len is None:
+        # prefill into cache
+        kc = jax.lax.dynamic_update_slice(cache["k"], k, (0, 0, 0, 0))
+        vc = jax.lax.dynamic_update_slice(cache["v"], v, (0, 0, 0, 0))
+        y = _attend(q, k, v, causal=causal, impl=cfg.attn_impl)
+        new_cache = {"k": kc, "v": vc}
+    else:
+        # decode: append then attend over the valid prefix
+        kc = jax.lax.dynamic_update_slice(
+            cache["k"], k, (0, 0, cache_len, 0)
+        )
+        vc = jax.lax.dynamic_update_slice(
+            cache["v"], v, (0, 0, cache_len, 0)
+        )
+        # Mask: query at absolute position cache_len + i attends kv <= that.
+        scale = hd ** -0.5
+        hq, hkv = q.shape[1], kc.shape[1]
+        group = hq // hkv
+        qg = q.reshape(b, hkv, group, s, hd)
+        scores = jnp.einsum("bhgsk,bhtk->bhgst", qg, kc).astype(jnp.float32) * scale
+        kv_pos = jnp.arange(kc.shape[2])
+        q_pos = cache_len + jnp.arange(s)
+        mask = q_pos[:, None] >= kv_pos[None, :]
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1)
+        y = jnp.einsum("bhgst,bhtk->bhgsk", w.astype(v.dtype), vc)
+        y = y.reshape(b, hq, s, hd)
+        new_cache = {"k": kc, "v": vc}
+
+    out = jnp.einsum("bhsk,hkd->bsd", y, p["wo"])
+    return out, new_cache

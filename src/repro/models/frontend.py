@@ -1,0 +1,53 @@
+"""Modality-frontend STUBS (per the assignment grid rules).
+
+``[audio]`` (seamless-m4t) and ``[vlm]`` (chameleon) specify the transformer
+BACKBONE only; the real frontends (conformer audio encoder / VQ-GAN image
+tokenizer) are out of scope. Instead:
+
+* audio: ``input_specs`` provides precomputed frame embeddings
+  (B, S_src, d_model) float32 — what the conformer stem would emit.
+* vlm  : chameleon is EARLY-FUSION — images arrive as discrete VQ codes that
+  live inside the 65536-entry vocabulary, so its inputs are ordinary token
+  ids; ``vq_token_stream`` mimics a text+image interleave for smoke tests.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+# Chameleon reserves a contiguous block of the vocab for image codes; we
+# mirror that convention for the stub stream (8192 VQ codes is the public
+# codebook size).
+VQ_CODEBOOK = 8192
+
+
+def audio_frames(key, batch: int, src_len: int, d_model: int) -> jax.Array:
+    """Stand-in for conformer-stem output: unit-variance frame embeddings."""
+    return jax.random.normal(key, (batch, src_len, d_model), jnp.float32)
+
+
+def audio_frame_specs(batch: int, src_len: int, d_model: int):
+    return jax.ShapeDtypeStruct((batch, src_len, d_model), jnp.float32)
+
+
+def vq_token_stream(
+    key, batch: int, seq: int, vocab: int, image_frac: float = 0.5
+) -> jax.Array:
+    """Interleaved text+image token ids: the first image_frac of each row is
+    VQ codes (drawn from the top-of-vocab code block), the rest text ids."""
+    k1, k2 = jax.random.split(key)
+    n_img = int(seq * image_frac)
+    img = jax.random.randint(k1, (batch, n_img), vocab - VQ_CODEBOOK, vocab,
+                             jnp.int32)
+    txt = jax.random.randint(k2, (batch, seq - n_img), 0,
+                             vocab - VQ_CODEBOOK, jnp.int32)
+    return jnp.concatenate([img, txt], axis=1)
+
+
+def frontend_kind(cfg: ModelConfig) -> str:
+    return cfg.frontend

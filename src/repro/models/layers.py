@@ -1,0 +1,155 @@
+"""Shared neural layers: RMSNorm, RoPE, SwiGLU, embeddings.
+
+Parameters are plain nested dicts of jnp arrays; every ``init_*`` has a
+matching ``spec_*`` producing the PartitionSpec tree with the SAME structure
+(axis names: "data" = batch/fsdp axis group, "model" = tensor axis).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Params = Dict[str, Any]
+
+
+def named(scope: str):
+    """Decorator: run the function under jax.named_scope so optimized-HLO
+    op_name metadata attributes its ops to this module (used by the dry-run
+    profiler, launch.profile, and real-TPU traces alike)."""
+    import functools
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapped(*args, **kwargs):
+            with jax.named_scope(scope):
+                return fn(*args, **kwargs)
+        return wrapped
+    return deco
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+# -- initializers -------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[0]
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# -- RMSNorm -------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def spec_rmsnorm() -> Params:
+    return {"scale": P(None)}
+
+
+def rmsnorm(x: jax.Array, p: Params, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+# -- RoPE ------------------------------------------------------------------------
+
+def rope_freqs(dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, D even); positions: (S,) or broadcastable to x[..., S]."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x1 * sin + x2 * cos
+    out = jnp.stack([y1, y2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# -- SwiGLU MLP --------------------------------------------------------------------
+
+def init_mlp(key, d: int, d_ff: int, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, (d, d_ff), dtype),
+        "up": dense_init(k2, (d, d_ff), dtype),
+        "down": dense_init(k3, (d_ff, d), dtype),
+    }
+
+
+def spec_mlp(fsdp: bool) -> Params:
+    dax = "data" if fsdp else None
+    return {
+        "gate": P(dax, "model"),
+        "up": P(dax, "model"),
+        "down": P("model", dax),
+    }
+
+
+@named("mlp")
+def mlp(x: jax.Array, p: Params) -> jax.Array:
+    g = jax.nn.silu(jnp.einsum("...d,df->...f", x, p["gate"]))
+    u = jnp.einsum("...d,df->...f", x, p["up"])
+    return jnp.einsum("...f,fd->...d", g * u, p["down"])
+
+
+# -- Embeddings ------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d: int, dtype, tie: bool) -> Params:
+    k1, k2 = jax.random.split(key)
+    p = {"table": dense_init(k1, (vocab, d), dtype, scale=1.0)}
+    if not tie:
+        p["head"] = dense_init(k2, (d, vocab), dtype)
+    return p
+
+
+def spec_embedding(tie: bool, fsdp: bool) -> Params:
+    dax = "data" if fsdp else None
+    p = {"table": P("model", dax)}   # vocab-sharded over model axis
+    if not tie:
+        p["head"] = P(dax, "model")
+    return p
+
+
+@named("embed")
+def embed(tokens: jax.Array, p: Params) -> jax.Array:
+    return p["table"][tokens]
+
+
+@named("loss_vocab")
+def unembed(x: jax.Array, p: Params) -> jax.Array:
+    if "head" in p:
+        return jnp.einsum("...d,dv->...v", x, p["head"])
+    return jnp.einsum("...d,vd->...v", x, p["table"])
+
+
+@named("loss_vocab")
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token NLL; labels < 0 are masked.
+
+    Written as logsumexp - picked_logit (no full log-softmax tensor): with
+    vocab-sharded logits the only cross-shard exchanges are the max/sum
+    reductions and the one-hot pick — the (B,S,V) tensor itself never needs
+    an all-gather (the classic Megatron vocab-parallel loss)."""
+    mask = labels >= 0
+    safe = jnp.maximum(labels, 0)
+    lg = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    picked = jnp.take_along_axis(lg, safe[..., None], axis=-1)[..., 0]
+    nll = jnp.where(mask, lse - picked, 0.0)
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1)

@@ -1,0 +1,177 @@
+"""Mamba2 mixer block (scalar-identity A, SSD scan) — zamba2's "m" blocks.
+
+Structure per block (faithful to Mamba2, n_groups=1):
+  in_proj -> [z (gate), x, B, C, dt] ;  causal depthwise conv over [x,B,C] ;
+  dt = softplus(dt + bias) ; loga = -exp(A_log) * dt (per head) ;
+  y = SSD_scan(x*dt, loga, B, C) + D*x ;  y = RMSNorm(y * silu(z)) ;
+  out_proj.
+
+Scan impls: "chunked" (pure-jnp SSD, CPU/dry-run default), "kernel"
+(Pallas), "ref" (sequential oracle). Decode keeps (conv_state, ssm_state)
+and is O(1)/token — this is what makes long_500k runnable (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, init_rmsnorm, rmsnorm
+
+Params = Dict[str, Any]
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nh = cfg.ssm_heads or max(d_in // max(cfg.ssm_head_dim, 1), 1)
+    p_dim = d_in // nh
+    return d_in, nh, p_dim, cfg.ssm_state
+
+
+def init_mamba(key, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    d_in, nh, p_dim, n = _dims(cfg)
+    conv_ch = d_in + 2 * n
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * d_in + 2 * n + nh), dtype),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv, conv_ch), dtype, scale=0.5),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": init_rmsnorm(d_in, dtype),
+        "out_proj": dense_init(ks[2], (d_in, d), dtype),
+    }
+
+
+def spec_mamba(cfg: ModelConfig) -> Params:
+    dax = "data" if cfg.fsdp else None
+    return {
+        "in_proj": P(dax, "model"),
+        "conv_w": P(None, "model"),
+        "conv_b": P("model"),
+        "A_log": P(None),
+        "D": P(None),
+        "dt_bias": P(None),
+        "norm": {"scale": P("model")},
+        "out_proj": P("model", dax),
+    }
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype) -> Params:
+    d_in, nh, p_dim, n = _dims(cfg)
+    conv_ch = d_in + 2 * n
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((batch, nh, n, p_dim), jnp.float32),
+    }
+
+
+def spec_mamba_state() -> Params:
+    return {
+        "conv": P(("pod", "data"), None, "model"),
+        "ssm": P(("pod", "data"), "model", None, None),
+    }
+
+
+def _split_proj(z_all, d_in, n, nh):
+    z, xc, b, c, dt = jnp.split(
+        z_all, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1
+    )
+    return z, xc, b, c, dt
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv along time. x: (B,S,C); w: (K,C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k)
+    )
+    return jax.nn.silu(out + b[None, None, :])
+
+
+from repro.models.layers import named
+
+
+@named("ssd_mixer")
+def mamba_mixer(
+    x: jax.Array,                 # (B, S, d)
+    p: Params,
+    cfg: ModelConfig,
+    *,
+    state: Optional[Params] = None,   # decode: (conv, ssm) running state
+    return_state: bool = False,       # prefill: emit final state
+) -> Tuple[jax.Array, Optional[Params]]:
+    bsz, s, d = x.shape
+    d_in, nh, p_dim, n = _dims(cfg)
+    z_all = jnp.einsum("bsd,dk->bsk", x, p["in_proj"])
+    z, xc, b, c, dt = _split_proj(z_all, d_in, n, nh)
+
+    conv_in = jnp.concatenate([xc, b, c], axis=-1)           # (B,S,d_in+2N)
+    new_state = None
+    if state is None:
+        conv_out = _causal_conv(conv_in, p["conv_w"], p["conv_b"])
+    else:
+        # decode: roll the conv window
+        window = jnp.concatenate([state["conv"], conv_in], axis=1)
+        k = cfg.ssm_conv
+        conv_out = jax.nn.silu(
+            jnp.einsum("bkc,kc->bc", window[:, -k:], p["conv_w"])
+            + p["conv_b"]
+        )[:, None, :]
+        new_conv = window[:, -(k - 1):]
+
+    xs, bs, cs = jnp.split(conv_out, [d_in, d_in + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,S,nh)
+    loga = -jnp.exp(p["A_log"])[None, None, :] * dt               # (B,S,nh)
+
+    xh = xs.reshape(bsz, -1, nh, p_dim)
+    xdt = (xh.astype(jnp.float32) * dt[..., None])
+
+    if state is None:
+        # train / prefill: chunked SSD over heads
+        bh = bsz * nh
+        xdt_f = xdt.swapaxes(1, 2).reshape(bh, s, p_dim)
+        loga_f = loga.swapaxes(1, 2).reshape(bh, s)
+        b_f = jnp.broadcast_to(bs[:, None], (bsz, nh, s, n)).reshape(bh, s, n)
+        c_f = jnp.broadcast_to(cs[:, None], (bsz, nh, s, n)).reshape(bh, s, n)
+        from repro.kernels.ssm_scan import ref as ssm_ref
+        y_f, s_fin = ssm_ref.ssd_chunked_ref(
+            xdt_f.astype(jnp.float32), loga_f, b_f.astype(jnp.float32),
+            c_f.astype(jnp.float32), chunk=cfg.ssm_chunk,
+        )
+        y = y_f.reshape(bsz, nh, s, p_dim).swapaxes(1, 2)         # (B,S,nh,P)
+        if return_state:
+            k = cfg.ssm_conv
+            tail = conv_in[:, -(k - 1):]
+            pad = k - 1 - tail.shape[1]
+            if pad > 0:
+                tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+            new_state = {"conv": tail,
+                         "ssm": s_fin.reshape(bsz, nh, n, p_dim)}
+    else:
+        # decode: recurrent O(1) step (S == 1)
+        from repro.kernels.ssm_scan import ref as ssm_ref
+        bh = bsz * nh
+        y_f, new_ssm = ssm_ref.ssd_decode_step(
+            state["ssm"].reshape(bh, n, p_dim),
+            xdt[:, 0].reshape(bh, p_dim),
+            loga[:, 0].reshape(bh),
+            jnp.broadcast_to(bs[:, 0, None], (bsz, nh, n)).reshape(bh, n),
+            jnp.broadcast_to(cs[:, 0, None], (bsz, nh, n)).reshape(bh, n),
+        )
+        y = y_f.reshape(bsz, nh, p_dim)[:, None].reshape(bsz, 1, nh, p_dim)
+        new_state = {"conv": new_conv,
+                     "ssm": new_ssm.reshape(bsz, nh, n, p_dim)}
+
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(bsz, -1, d_in).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"])
+    return out, new_state

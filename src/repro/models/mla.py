@@ -1,0 +1,166 @@
+"""MLA — multi-head latent attention (DeepSeek-V2 / MiniCPM3), absorbed form.
+
+KV is compressed to a ``kv_lora_rank`` latent plus a shared RoPE key of
+``qk_rope_dim``. We run the **absorbed** (weight-folded) formulation used in
+production serving:
+
+    score_h = (q_nope_h W_uk_h^T) · c_kv  +  q_rope_h · k_rope
+    y_h     = (softmax(score) · c_kv) W_uv_h
+
+i.e. attention is MQA against the latent itself — per-head K/V are never
+materialized, the cache stores only ``[c_kv ‖ k_rope]`` per token, and long
+prefill rides the same chunked/flash attention path as GQA (Hkv = 1).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope, dense_init, init_rmsnorm, rmsnorm
+
+Params = Dict[str, Any]
+
+
+def init_mla(key, cfg: ModelConfig, dtype) -> Params:
+    d, h = cfg.d_model, cfg.num_heads
+    qn, qr = cfg.qk_nope_dim, cfg.qk_rope_dim
+    vh, rank = cfg.v_head_dim, cfg.kv_lora_rank
+    ks = jax.random.split(key, 8)
+    p: Params = {}
+    if cfg.q_lora_rank:
+        p["wq_down"] = dense_init(ks[0], (d, cfg.q_lora_rank), dtype)
+        p["q_norm"] = init_rmsnorm(cfg.q_lora_rank, dtype)
+        p["wq_up"] = dense_init(ks[1], (cfg.q_lora_rank, h, qn + qr), dtype)
+    else:
+        p["wq"] = dense_init(ks[1], (d, h, qn + qr), dtype)
+    p["wkv_down"] = dense_init(ks[2], (d, rank), dtype)
+    p["kv_norm"] = init_rmsnorm(rank, dtype)
+    p["wk_rope"] = dense_init(ks[3], (d, qr), dtype)
+    p["wk_up"] = dense_init(ks[4], (rank, h, qn), dtype)
+    p["wv_up"] = dense_init(ks[5], (rank, h, vh), dtype)
+    p["wo"] = dense_init(ks[6], (h, vh, d), dtype)
+    return p
+
+
+def spec_mla(cfg: ModelConfig) -> Params:
+    dax = "data" if cfg.fsdp else None
+    p: Params = {}
+    if cfg.q_lora_rank:
+        p["wq_down"] = P(dax, None)
+        p["q_norm"] = {"scale": P(None)}
+        p["wq_up"] = P(dax, "model", None)
+    else:
+        p["wq"] = P(dax, "model", None)
+    p["wkv_down"] = P(dax, None)
+    p["kv_norm"] = {"scale": P(None)}
+    p["wk_rope"] = P(dax, None)
+    p["wk_up"] = P(None, "model", None)
+    p["wv_up"] = P(None, "model", None)
+    p["wo"] = P("model", None, dax)
+    return p
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Params:
+    return {
+        "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "krope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+    }
+
+
+def spec_mla_cache() -> Params:
+    return {
+        "ckv": P(("pod", "data"), None, None),
+        "krope": P(("pod", "data"), None, None),
+    }
+
+
+def _queries(x, p, cfg, positions):
+    if cfg.q_lora_rank:
+        qc = jnp.einsum("bsd,dr->bsr", x, p["wq_down"])
+        qc = rmsnorm(qc, p["q_norm"], cfg.norm_eps)
+        q = jnp.einsum("bsr,rhk->bhsk", qc, p["wq_up"])
+    else:
+        q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"])
+    qn = q[..., : cfg.qk_nope_dim]
+    qr = apply_rope(q[..., cfg.qk_nope_dim :], positions, cfg.rope_theta)
+    return qn, qr
+
+
+from repro.models.layers import named
+
+
+@named("attention")
+def mla_attention(
+    x: jax.Array,
+    p: Params,
+    cfg: ModelConfig,
+    positions: jax.Array,
+    *,
+    cache: Optional[Params] = None,
+    cache_len: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Optional[Params]]:
+    b, s, d = x.shape
+    h = cfg.num_heads
+    rank, rope = cfg.kv_lora_rank, cfg.qk_rope_dim
+    qn, qr = _queries(x, p, cfg, positions)                   # (B,H,S,*)
+
+    ckv = rmsnorm(jnp.einsum("bsd,dr->bsr", x, p["wkv_down"]),
+                  p["kv_norm"], cfg.norm_eps)                  # (B,S,rank)
+    krope = apply_rope(
+        jnp.einsum("bsd,dk->bsk", x, p["wk_rope"])[:, None],
+        positions, cfg.rope_theta,
+    )[:, 0]                                                    # (B,S,rope)
+
+    # Absorb W_uk into the query: q_lat = qn @ W_uk^T  (B,H,S,rank).
+    q_lat = jnp.einsum("bhsk,rhk->bhsr", qn, p["wk_up"])
+    q_mqa = jnp.concatenate([q_lat, qr], axis=-1)              # (B,H,S,rank+rope)
+    sm_scale = float(cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+
+    new_cache = None
+    if cache is not None and cache_len is not None:
+        # ---- decode: append to cache, attend over valid prefix ------------
+        ckv_c = jax.lax.dynamic_update_slice(cache["ckv"], ckv, (0, cache_len, 0))
+        kr_c = jax.lax.dynamic_update_slice(cache["krope"], krope, (0, cache_len, 0))
+        new_cache = {"ckv": ckv_c, "krope": kr_c}
+        k_mqa = jnp.concatenate([ckv_c, kr_c], axis=-1)        # (B,T,rank+rope)
+        t_len = k_mqa.shape[1]
+        scores = jnp.einsum("bhsk,btk->bhst", q_mqa, k_mqa).astype(jnp.float32)
+        scores = scores * sm_scale
+        kv_pos = jnp.arange(t_len)
+        q_pos = cache_len + jnp.arange(s)
+        mask = q_pos[:, None] >= kv_pos[None, :]
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1).astype(ckv_c.dtype)
+        y_lat = jnp.einsum("bhst,btr->bhsr", w, ckv_c)         # (B,H,S,rank)
+    else:
+        # ---- train / prefill: MQA over the latent via chunked/flash -------
+        if cache is not None:
+            ckv_c = jax.lax.dynamic_update_slice(cache["ckv"], ckv, (0, 0, 0))
+            kr_c = jax.lax.dynamic_update_slice(cache["krope"], krope, (0, 0, 0))
+            new_cache = {"ckv": ckv_c, "krope": kr_c}
+        k_mqa = jnp.concatenate([ckv, krope], axis=-1)[:, None]  # (B,1,S,r+r)
+        # Value = latent padded to the same width so one kernel handles both
+        # (the rope tail of V is sliced off below).
+        v_mqa = jnp.pad(ckv, ((0, 0), (0, 0), (0, rope)))[:, None]
+        from repro.kernels.flash_attention.ref import mha_chunked, mha_reference
+        if cfg.attn_impl == "flash":
+            from repro.kernels.flash_attention.ops import flash_attention
+            y_pad = flash_attention(q_mqa, k_mqa, v_mqa, causal=True,
+                                    sm_scale=sm_scale)
+        elif s > 2048 or cfg.attn_impl == "chunked":
+            y_pad = mha_chunked(q_mqa, k_mqa, v_mqa, causal=True,
+                                sm_scale=sm_scale)
+        else:
+            y_pad = mha_reference(q_mqa, k_mqa, v_mqa, causal=True,
+                                  sm_scale=sm_scale)
+        y_lat = y_pad[..., :rank]                              # (B,H,S,rank)
+
+    # Un-absorb values: y_h = y_lat @ W_uv_h, then output projection.
+    y = jnp.einsum("bhsr,rhk->bhsk", y_lat, p["wv_up"])        # (B,H,S,vh)
+    out = jnp.einsum("bhsk,hkd->bsd", y, p["wo"])
+    return out, new_cache

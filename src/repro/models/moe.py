@@ -1,0 +1,153 @@
+"""Mixture-of-Experts layer: shared + routed experts, top-k softmax router,
+capacity-based dispatch (GShard-style), expert dim sharded over "model" (EP).
+
+Dispatch is sort-free: position-in-expert comes from a masked cumulative sum
+over the token axis (classic Switch/GShard formulation but WITHOUT the
+(T, E, C) one-hot dispatch tensor — we scatter straight into the (E, C, d)
+buffer, which is what keeps 1M-token batches feasible). Tokens beyond an
+expert's capacity are dropped (contribute zero), standard for
+capacity-factor routing; the router's aux loss pushes toward balance.
+
+Qwen2-MoE convention: ONE shared-expert MLP of width
+``n_shared_experts * moe_d_ff`` runs on every token in parallel with the
+routed experts (HF's shared_expert_intermediate_size = 4 * 1408).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init
+
+Params = Dict[str, Any]
+
+
+def padded_experts(cfg: ModelConfig) -> int:
+    """Expert count padded to the production tensor axis (EP divisibility):
+    qwen2-moe's 60 routed experts become 64 param slots; the router only
+    ever selects the first n_routed_experts, pad slots carry zero tokens
+    (Megatron-style expert padding)."""
+    from repro.dist.sharding import PRODUCTION_MODEL_AXIS
+    m = PRODUCTION_MODEL_AXIS
+    return -(-cfg.n_routed_experts // m) * m
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> Params:
+    d, e, f = cfg.d_model, cfg.n_routed_experts, cfg.moe_d_ff
+    ep = padded_experts(cfg)
+    ks = jax.random.split(key, 5)
+    p: Params = {
+        "router": dense_init(ks[0], (d, e), jnp.float32),
+        "gate": dense_init(ks[1], (ep, d, f), dtype),
+        "up": dense_init(ks[2], (ep, d, f), dtype),
+        "down": dense_init(ks[3], (ep, f, d), dtype),
+    }
+    if cfg.n_shared_experts:
+        sf = cfg.n_shared_experts * f
+        k1, k2, k3 = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "gate": dense_init(k1, (d, sf), dtype),
+            "up": dense_init(k2, (d, sf), dtype),
+            "down": dense_init(k3, (sf, d), dtype),
+        }
+    return p
+
+
+def spec_moe(cfg: ModelConfig) -> Params:
+    dax = "data" if cfg.fsdp else None
+    p: Params = {
+        "router": P(None, None),
+        "gate": P("model", dax, None),   # experts over model axis (EP)
+        "up": P("model", dax, None),
+        "down": P("model", dax, None),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = {
+            "gate": P(dax, "model"),
+            "up": P(dax, "model"),
+            "down": P("model", dax),
+        }
+    return p
+
+
+from repro.models.layers import named
+
+
+@named("moe")
+def moe_ffn(
+    x: jax.Array,            # (B, S, d)
+    p: Params,
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y, aux_loss)."""
+    b, s, d = x.shape
+    e, k = cfg.n_routed_experts, cfg.top_k
+    ep = padded_experts(cfg)
+    t = b * s
+    xt = x.reshape(t, d)
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                   # (T, E)
+    gate_w, gate_e = jax.lax.top_k(probs, k)                  # (T, k)
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    # Load-balancing aux loss (Switch): E * sum_e f_e * p_e.
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.zeros((e,), jnp.float32).at[gate_e.reshape(-1)].add(1.0) / (t * k)
+    aux = e * jnp.sum(me * ce)
+
+    # Per-GROUP capacity dispatch (groups ~ data shards): each group builds
+    # its own (Ep, C_g, d) buffer with a LOCAL scatter; the expert einsum
+    # then exchanges group-buffers for expert-shards (one all-to-all-shaped
+    # reshard) instead of all-reducing a globally-scattered buffer — the
+    # standard EP schedule. groups=1 reproduces the global-capacity form.
+    groups = max(cfg.moe_dispatch_groups, 1)
+    if t % groups != 0:
+        groups = 1
+    t_g = t // groups
+    capacity = int(max(1, round(t_g * k / e * cfg.capacity_factor)))
+
+    # Position of each (token, slot) within its expert via masked cumsum,
+    # computed independently per group.
+    flat_e = gate_e.reshape(groups, t_g * k)                  # (G, Tg*k)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)       # (G, Tg*k, E)
+    pos_in_e = jnp.cumsum(onehot, axis=1) - 1
+    pos = jnp.take_along_axis(
+        pos_in_e, flat_e[..., None], axis=2)[..., 0]          # (G, Tg*k)
+    keep = pos < capacity
+    slot = flat_e * capacity + jnp.where(keep, pos, 0)        # (G, Tg*k)
+
+    # Dispatch: local scatter into each group's (Ep*C, d) buffer.
+    src = jnp.repeat(xt.reshape(groups, t_g, d), k, axis=1)   # (G, Tg*k, d)
+    buf = jnp.zeros((groups, ep * capacity, d), xt.dtype)
+    buf = jax.vmap(lambda b_, s_, x_, m_: b_.at[s_].add(
+        jnp.where(m_[:, None], x_, 0)))(buf, slot, src, keep)
+    buf = buf.reshape(groups, ep, capacity, d)
+
+    # Expert FFN (batched over experts — EP shards this einsum; groups stay
+    # on the data axis, so the buf reshard is the A2A exchange).
+    g = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, p["gate"]))
+    u = jnp.einsum("gecd,edf->gecf", buf, p["up"])
+    out = jnp.einsum("gecf,efd->gecd", g * u, p["down"])
+    out = out.reshape(groups, ep * capacity, d)
+
+    # Combine: gather each kept slot back, weighted by its gate. Keep the
+    # activation dtype stable (gate weights are f32; a silent promotion here
+    # would flip the residual-stream dtype and break the layer-scan carry).
+    gate_flat = jnp.where(keep, gate_w.reshape(groups, t_g * k),
+                          0.0).astype(xt.dtype)
+    back = jax.vmap(lambda o_, s_: o_[s_])(out, slot) * gate_flat[..., None]
+    y = back.reshape(t, k, d).sum(axis=1)
+
+    if cfg.n_shared_experts:
+        sp = p["shared"]
+        sg = jax.nn.silu(jnp.einsum("td,df->tf", xt, sp["gate"]))
+        su = jnp.einsum("td,df->tf", xt, sp["up"])
+        y = y + jnp.einsum("tf,fd->td", sg * su, sp["down"])
+
+    return y.reshape(b, s, d).astype(x.dtype), aux

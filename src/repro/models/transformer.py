@@ -1,0 +1,354 @@
+"""Decoder LM assembly: block dispatch, scan-over-layers, KV/state caches.
+
+Layer stacking: ``cfg.block_cycle`` (e.g. ("m","m","m","m","m","a") for
+zamba2) repeats to cover ``num_layers``; parameters of each cycle position
+are STACKED over repetitions and the whole stack runs under one
+``lax.scan`` (small compiled HLO even at 126 layers; remat wraps the scan
+body). Caches mirror the same structure, scanned alongside.
+
+Everything is functional: params/caches are nested dicts; each init_* has a
+matching spec_* with the same tree structure (PartitionSpecs).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import attention as attn_mod
+from repro.models import mamba2 as mamba_mod
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    cross_entropy_loss, dtype_of, embed, init_embedding, init_mlp,
+    init_rmsnorm, mlp, rmsnorm, spec_embedding, spec_mlp, spec_rmsnorm,
+    unembed,
+)
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Single block (kind dispatch)
+# ---------------------------------------------------------------------------
+
+def init_block(key, kind: str, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    if kind == "a":
+        p: Params = {"ln1": init_rmsnorm(d, dtype)}
+        p["attn"] = (mla_mod.init_mla(k1, cfg, dtype) if cfg.use_mla
+                     else attn_mod.init_attention(k1, cfg, dtype))
+        p["ln2"] = init_rmsnorm(d, dtype)
+        p["ffn"] = (moe_mod.init_moe(k2, cfg, dtype) if cfg.moe
+                    else init_mlp(k2, d, cfg.d_ff, dtype))
+        return p
+    if kind == "m":
+        return {"ln": init_rmsnorm(d, dtype),
+                "mixer": mamba_mod.init_mamba(k1, cfg, dtype)}
+    if kind == "x":
+        p = {"ln": init_rmsnorm(d, dtype),
+             "mixer": xlstm_mod.init_mlstm(k1, cfg, dtype)}
+        if cfg.d_ff:
+            p["ln2"] = init_rmsnorm(d, dtype)
+            p["ffn"] = init_mlp(k2, d, cfg.d_ff, dtype)
+        return p
+    if kind == "s":
+        return {"ln": init_rmsnorm(d, dtype),
+                "mixer": xlstm_mod.init_slstm(k1, cfg, dtype)}
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+def spec_block(kind: str, cfg: ModelConfig) -> Params:
+    if kind == "a":
+        p: Params = {"ln1": spec_rmsnorm()}
+        p["attn"] = (mla_mod.spec_mla(cfg) if cfg.use_mla
+                     else attn_mod.spec_attention(cfg))
+        p["ln2"] = spec_rmsnorm()
+        p["ffn"] = moe_mod.spec_moe(cfg) if cfg.moe else spec_mlp(cfg.fsdp)
+        return p
+    if kind == "m":
+        return {"ln": spec_rmsnorm(), "mixer": mamba_mod.spec_mamba(cfg)}
+    if kind == "x":
+        p = {"ln": spec_rmsnorm(), "mixer": xlstm_mod.spec_mlstm(cfg)}
+        if cfg.d_ff:
+            p["ln2"] = spec_rmsnorm()
+            p["ffn"] = spec_mlp(cfg.fsdp)
+        return p
+    if kind == "s":
+        return {"ln": spec_rmsnorm(), "mixer": xlstm_mod.spec_slstm(cfg)}
+    raise ValueError(kind)
+
+
+def init_block_cache(kind: str, cfg: ModelConfig, batch: int, max_len: int,
+                     dtype):
+    if kind == "a":
+        return (mla_mod.init_mla_cache(cfg, batch, max_len, dtype)
+                if cfg.use_mla
+                else attn_mod.init_cache(cfg, batch, max_len, dtype))
+    if kind == "m":
+        return mamba_mod.init_mamba_state(cfg, batch, dtype)
+    if kind == "x":
+        return xlstm_mod.init_mlstm_state(cfg, batch)
+    if kind == "s":
+        return xlstm_mod.init_slstm_state(cfg, batch)
+    raise ValueError(kind)
+
+
+def spec_block_cache(kind: str, cfg: ModelConfig):
+    if kind == "a":
+        return mla_mod.spec_mla_cache() if cfg.use_mla else attn_mod.spec_cache(cfg)
+    if kind == "m":
+        return mamba_mod.spec_mamba_state()
+    if kind == "x":
+        return xlstm_mod.spec_mlstm_state()
+    if kind == "s":
+        return xlstm_mod.spec_slstm_state()
+    raise ValueError(kind)
+
+
+def apply_block(
+    x: jax.Array,
+    p: Params,
+    kind: str,
+    cfg: ModelConfig,
+    positions: jax.Array,
+    *,
+    cache=None,
+    cache_len=None,
+    causal: bool = True,
+    mode: str = "train",
+) -> Tuple[jax.Array, Any, jax.Array]:
+    """Returns (x, new_cache, aux_loss). ``mode`` controls stateful mixers:
+    train (no state), prefill (emit final state), decode (step the state)."""
+    aux = jnp.float32(0.0)
+    prefill_state = mode == "prefill"
+    mixer_state = cache if mode == "decode" else None
+    if kind == "a":
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        if cfg.use_mla:
+            y, new_cache = mla_mod.mla_attention(
+                h, p["attn"], cfg, positions, cache=cache, cache_len=cache_len)
+        else:
+            y, new_cache = attn_mod.attention(
+                h, p["attn"], cfg, positions, causal=causal,
+                cache=cache, cache_len=cache_len)
+        x = x + y
+        h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if cfg.moe:
+            y, aux = moe_mod.moe_ffn(h, p["ffn"], cfg)
+        else:
+            y = mlp(h, p["ffn"])
+        return x + y, new_cache, aux
+    if kind == "m":
+        h = rmsnorm(x, p["ln"], cfg.norm_eps)
+        y, new_cache = mamba_mod.mamba_mixer(
+            h, p["mixer"], cfg, state=mixer_state, return_state=prefill_state)
+        return x + y, new_cache, aux
+    if kind == "x":
+        h = rmsnorm(x, p["ln"], cfg.norm_eps)
+        y, new_cache = xlstm_mod.mlstm_mixer(
+            h, p["mixer"], cfg, state=mixer_state, return_state=prefill_state)
+        x = x + y
+        if cfg.d_ff:
+            h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+            x = x + mlp(h, p["ffn"])
+        return x, new_cache, aux
+    if kind == "s":
+        h = rmsnorm(x, p["ln"], cfg.norm_eps)
+        y, new_cache = xlstm_mod.slstm_mixer(
+            h, p["mixer"], cfg, state=mixer_state, return_state=prefill_state)
+        return x + y, new_cache, aux
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Stacked groups
+# ---------------------------------------------------------------------------
+
+def _groups(cfg: ModelConfig):
+    cyc, n, rem = cfg.layer_cycles
+    out = []
+    if n:
+        out.append((tuple(cyc), n))
+    if rem:
+        out.append((tuple(rem), 1))
+    return out
+
+
+def _stack_init(key, pattern, n_rep, cfg, dtype) -> Params:
+    reps = []
+    for r in range(n_rep):
+        kr = jax.random.fold_in(key, r)
+        reps.append({
+            f"b{j}": init_block(jax.random.fold_in(kr, j), kind, cfg, dtype)
+            for j, kind in enumerate(pattern)
+        })
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *reps)
+
+
+def _stack_spec(pattern, cfg) -> Params:
+    one = {f"b{j}": spec_block(kind, cfg) for j, kind in enumerate(pattern)}
+    # prepend the stacking axis (unsharded) to every leaf spec
+    return jax.tree_util.tree_map(
+        lambda s: P(None, *s), one,
+        is_leaf=lambda s: isinstance(s, P),
+    )
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    dtype = dtype_of(cfg.dtype)
+    k_emb, k_blocks, k_final = jax.random.split(key, 3)
+    p: Params = {
+        "embed": init_embedding(k_emb, cfg.vocab_size, cfg.d_model, dtype,
+                                cfg.tie_embeddings),
+        "final_norm": init_rmsnorm(cfg.d_model, dtype),
+    }
+    if cfg.frontend == "audio":
+        # stub projection for precomputed frames (identity-sized)
+        p["frontend"] = {"proj": jnp.eye(cfg.d_model, dtype=dtype)}
+    for gi, (pattern, n_rep) in enumerate(_groups(cfg)):
+        p[f"group_{gi}"] = _stack_init(
+            jax.random.fold_in(k_blocks, gi), pattern, n_rep, cfg, dtype)
+    return p
+
+
+def param_specs(cfg: ModelConfig) -> Params:
+    p: Params = {
+        "embed": spec_embedding(cfg.tie_embeddings, cfg.fsdp),
+        "final_norm": spec_rmsnorm(),
+    }
+    if cfg.frontend == "audio":
+        p["frontend"] = {"proj": P(None, "model")}
+    for gi, (pattern, n_rep) in enumerate(_groups(cfg)):
+        p[f"group_{gi}"] = _stack_spec(pattern, cfg)
+    return p
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    dtype = dtype_of(cfg.dtype)
+    c: Params = {}
+    for gi, (pattern, n_rep) in enumerate(_groups(cfg)):
+        reps = []
+        for _ in range(n_rep):
+            reps.append({
+                f"b{j}": init_block_cache(kind, cfg, batch, max_len, dtype)
+                for j, kind in enumerate(pattern)
+            })
+        c[f"group_{gi}"] = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *reps)
+    return c
+
+
+def cache_specs(cfg: ModelConfig) -> Params:
+    c: Params = {}
+    for gi, (pattern, n_rep) in enumerate(_groups(cfg)):
+        one = {f"b{j}": spec_block_cache(kind, cfg)
+               for j, kind in enumerate(pattern)}
+        c[f"group_{gi}"] = jax.tree_util.tree_map(
+            lambda s: P(None, *s), one,
+            is_leaf=lambda s: isinstance(s, P),
+        )
+    return c
+
+
+def _run_groups(
+    params: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    positions: jax.Array,
+    *,
+    caches: Optional[Params] = None,
+    cache_len=None,
+    causal: bool = True,
+    mode: str = "train",
+) -> Tuple[jax.Array, Optional[Params], jax.Array]:
+    aux_total = jnp.float32(0.0)
+    new_caches: Params = {}
+    for gi, (pattern, n_rep) in enumerate(_groups(cfg)):
+        gp = params[f"group_{gi}"]
+        gc = caches[f"group_{gi}"] if caches is not None else None
+
+        remat_blocks = cfg.remat == "full" and mode == "train"
+
+        def body(carry, xs):
+            from repro.dist.context import constrain_activations
+            xx, aux = carry
+            xx = constrain_activations(xx)
+            p_rep = xs[0]
+            c_rep = xs[1] if gc is not None else None
+            nc_rep = {}
+            for j, kind in enumerate(pattern):
+                blk_cache = c_rep[f"b{j}"] if c_rep is not None else None
+
+                def run_block(xx_, bp_, bc_, kind=kind):
+                    return apply_block(
+                        xx_, bp_, kind, cfg, positions,
+                        cache=bc_, cache_len=cache_len, causal=causal,
+                        mode=mode)
+
+                if remat_blocks:
+                    # per-BLOCK remat: bwd keeps one block's internals live
+                    # at a time even when the cycle pattern has many blocks
+                    run_block = jax.checkpoint(run_block)
+                xx, nc, a = run_block(xx, p_rep[f"b{j}"], blk_cache)
+                aux = aux + a
+                if nc is not None:
+                    nc_rep[f"b{j}"] = nc
+            return (xx, aux), (nc_rep if nc_rep else 0)
+        xs = (gp, gc) if gc is not None else (gp,)
+        (x, aux_total), ncs = jax.lax.scan(
+            lambda carry, xs_: body(carry, xs_), (x, aux_total), xs)
+        if caches is not None:
+            new_caches[f"group_{gi}"] = ncs
+    return x, (new_caches if caches is not None else None), aux_total
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+def forward_loss(
+    params: Params, cfg: ModelConfig, tokens: jax.Array, labels: jax.Array,
+) -> jax.Array:
+    """Mean next-token loss (tokens (B,S) int32; labels -1 masked)."""
+    x = embed(tokens, params["embed"])
+    positions = jnp.arange(tokens.shape[1])
+    x, _, aux = _run_groups(params, x, cfg, positions, mode="train")
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(x, params["embed"])
+    return cross_entropy_loss(logits, labels) + 0.01 * aux
+
+
+def prefill(
+    params: Params, cfg: ModelConfig, tokens: jax.Array, max_len: int,
+) -> Tuple[jax.Array, Params]:
+    """Fill caches with a prompt; returns (last-token logits, caches)."""
+    b, s = tokens.shape
+    x = embed(tokens, params["embed"])
+    positions = jnp.arange(s)
+    caches = init_caches(cfg, b, max_len)
+    x, caches, _ = _run_groups(params, x, cfg, positions,
+                               caches=caches, cache_len=None, mode="prefill")
+    x = rmsnorm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    return unembed(x, params["embed"])[:, 0], caches
+
+
+def decode_step(
+    params: Params, cfg: ModelConfig, caches: Params,
+    token: jax.Array, cache_len: jax.Array,
+) -> Tuple[jax.Array, Params]:
+    """One serving step: token (B, 1) given cache_len cached tokens."""
+    x = embed(token, params["embed"])
+    positions = cache_len + jnp.arange(1)
+    x, caches, _ = _run_groups(params, x, cfg, positions,
+                               caches=caches, cache_len=cache_len,
+                               mode="decode")
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return unembed(x, params["embed"])[:, 0], caches

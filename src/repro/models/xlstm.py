@@ -1,0 +1,277 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallelizable) and sLSTM (scalar
+memory with true recurrence) — the "x" and "s" entries of block_cycle.
+
+mLSTM maps exactly onto the SSD scan (DESIGN.md §2): with key k_t, value
+v_t, query q_t and gates i_t (input) / f_t (forget),
+
+    C_t = f_t C_{t-1} + i_t v_t k_t^T      == SSD with loga = log f,
+    n_t = f_t n_{t-1} + i_t k_t               xdt = [i*v ‖ i], B = k, C = q
+    y_t = (C_t q_t) / max(|n_t . q_t|, 1)
+
+— the normalizer n rides along as one extra value channel (P+1), so the
+same chunked/Pallas SSD kernel serves Mamba2 AND mLSTM.
+
+sLSTM keeps per-unit scalar cells with *recurrent* gate connections
+(R @ h_{t-1}); that recurrence is inherently sequential — lax.scan over
+time, O(1)-state decode (this is why xlstm-350m runs long_500k).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, init_rmsnorm, rmsnorm
+
+Params = Dict[str, Any]
+
+
+def _mdims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nh = cfg.ssm_heads or cfg.num_heads
+    p_dim = d_in // nh
+    return d_in, nh, p_dim
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    d_in, nh, p_dim = _mdims(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(ks[0], (d, d_in), dtype),
+        "wk": dense_init(ks[1], (d, d_in), dtype),
+        "wv": dense_init(ks[2], (d, d_in), dtype),
+        "wi": dense_init(ks[3], (d, nh), jnp.float32),
+        "wf": dense_init(ks[4], (d, nh), jnp.float32),
+        "wo_gate": dense_init(ks[5], (d, d_in), dtype),
+        "norm": init_rmsnorm(d_in, dtype),
+        "out_proj": dense_init(jax.random.fold_in(key, 7), (d_in, d), dtype),
+    }
+
+
+def spec_mlstm(cfg: ModelConfig) -> Params:
+    dax = "data" if cfg.fsdp else None
+    return {
+        "wq": P(dax, "model"), "wk": P(dax, "model"), "wv": P(dax, "model"),
+        "wi": P(None, "model"), "wf": P(None, "model"),
+        "wo_gate": P(dax, "model"),
+        "norm": {"scale": P("model")},
+        "out_proj": P("model", dax),
+    }
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> jax.Array:
+    d_in, nh, p_dim = _mdims(cfg)
+    return jnp.zeros((batch, nh, p_dim, p_dim + 1), jnp.float32)
+
+
+def spec_mlstm_state() -> P:
+    return P(("pod", "data"), "model", None, None)
+
+
+from repro.models.layers import named
+
+
+@named("mlstm_mixer")
+def mlstm_mixer(
+    x: jax.Array, p: Params, cfg: ModelConfig,
+    *, state: Optional[jax.Array] = None, return_state: bool = False,
+) -> Tuple[jax.Array, Optional[jax.Array]]:
+    bsz, s, d = x.shape
+    d_in, nh, p_dim = _mdims(cfg)
+    q = jnp.einsum("bsd,dk->bsk", x, p["wq"]).reshape(bsz, s, nh, p_dim)
+    k = jnp.einsum("bsd,dk->bsk", x, p["wk"]).reshape(bsz, s, nh, p_dim)
+    v = jnp.einsum("bsd,dk->bsk", x, p["wv"]).reshape(bsz, s, nh, p_dim)
+    k = k / (p_dim ** 0.5)
+    i_gate = jnp.exp(-jax.nn.softplus(-jnp.einsum("bsd,dh->bsh", x.astype(jnp.float32), p["wi"])))
+    f_gate = jax.nn.sigmoid(jnp.einsum("bsd,dh->bsh", x.astype(jnp.float32), p["wf"]))
+    loga = jnp.log(jnp.maximum(f_gate, 1e-6))                  # (B,S,nh)
+
+    # values extended with the normalizer channel
+    v_ext = jnp.concatenate(
+        [v.astype(jnp.float32), jnp.ones((bsz, s, nh, 1), jnp.float32)], -1
+    ) * i_gate[..., None]
+
+    bh = bsz * nh
+    xdt = v_ext.swapaxes(1, 2).reshape(bh, s, p_dim + 1)
+    loga_f = loga.swapaxes(1, 2).reshape(bh, s)
+    b_f = k.astype(jnp.float32).swapaxes(1, 2).reshape(bh, s, p_dim)
+    c_f = q.astype(jnp.float32).swapaxes(1, 2).reshape(bh, s, p_dim)
+
+    from repro.kernels.ssm_scan import ref as ssm_ref
+    new_state = None
+    if state is None:
+        y_ext, s_fin = ssm_ref.ssd_chunked_ref(xdt, loga_f, b_f, c_f,
+                                               chunk=cfg.ssm_chunk)
+        if return_state:
+            new_state = s_fin.reshape(bsz, nh, p_dim, p_dim + 1)
+    else:
+        y_one, new_s = ssm_ref.ssd_decode_step(
+            state.reshape(bh, p_dim, p_dim + 1),
+            xdt[:, 0], loga_f[:, 0], b_f[:, 0], c_f[:, 0],
+        )
+        y_ext = y_one[:, None]
+        new_state = new_s.reshape(bsz, nh, p_dim, p_dim + 1)
+
+    y = y_ext[..., :p_dim] / jnp.maximum(jnp.abs(y_ext[..., -1:]), 1.0)
+    y = y.reshape(bsz, nh, -1, p_dim).swapaxes(1, 2).reshape(bsz, -1, d_in)
+    o = jax.nn.sigmoid(jnp.einsum("bsd,dk->bsk", x, p["wo_gate"]))
+    y = rmsnorm(y.astype(x.dtype) * o, p["norm"], cfg.norm_eps)
+    return jnp.einsum("bsk,kd->bsd", y, p["out_proj"]), new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    k1, k2 = jax.random.split(key)
+    return {
+        "w": dense_init(k1, (d, 4 * d), jnp.float32),    # z, i, f, o
+        "r": dense_init(k2, (d, 4 * d), jnp.float32, scale=0.1),
+        "b": jnp.zeros((4 * d,), jnp.float32),
+    }
+
+
+def spec_slstm(cfg: ModelConfig) -> Params:
+    """sLSTM weights are REPLICATED over "model": the cell is a strict
+    time-recurrence whose per-step state h feeds the next step's h @ R —
+    any model-sharding of d turns that contraction into one all-reduce PER
+    TIME STEP (measured: 24.6k all-reduces / 220 GB on xlstm train_4k,
+    EXPERIMENTS.md §Perf iteration x3). Batch parallelism only; the cell is
+    4d^2 ~ 17 MB of weights, replication is free."""
+    dax = "data" if cfg.fsdp else None
+    return {"w": P(dax, None), "r": P(None, None), "b": P(None)}
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> Params:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"c": z, "n": z + 1e-6, "h": z}
+
+
+def spec_slstm_state() -> Params:
+    return {"c": P(("pod", "data"), "model"), "n": P(("pod", "data"), "model"),
+            "h": P(("pod", "data"), "model")}
+
+
+EPS = 1e-6
+
+
+def _slstm_step(carry, wx_t, r):
+    c, n, h = carry
+    gates = wx_t + h @ r
+    zp, ip, fp, op = jnp.split(gates, 4, axis=-1)
+    z_t = jnp.tanh(zp)
+    i_t = jax.nn.sigmoid(ip)       # exp(-softplus(-x)) == sigmoid(x)
+    f_t = jax.nn.sigmoid(fp)
+    o_t = jax.nn.sigmoid(op)
+    c = f_t * c + i_t * z_t
+    n = f_t * n + i_t
+    h = o_t * c / jnp.maximum(n, EPS)
+    return (c, n, h), (h, c, n)
+
+
+@jax.custom_vjp
+def _slstm_scan(wx_t_first, r, init):
+    """wx_t_first: (S, B, 4d). Returns ((c,n,h), hs (S,B,d)).
+
+    custom VJP so dR is ONE batched einsum over the stacked series instead
+    of a per-time-step partial — autodiff through the scan emits one
+    cross-batch all-reduce PER STEP for the recurrent-weight gradient
+    (208 GB/device measured on xlstm train_4k; §Perf xlstm iteration 4)."""
+    (c, n, h), (hs, cs, ns) = jax.lax.scan(
+        lambda carry, wx_t: _slstm_step(carry, wx_t, r), init, wx_t_first)
+    return (c, n, h), hs
+
+
+def _slstm_fwd(wx, r, init):
+    (c, n, h), (hs, cs, ns) = jax.lax.scan(
+        lambda carry, wx_t: _slstm_step(carry, wx_t, r), init, wx)
+    return ((c, n, h), hs), (wx, r, init, hs, cs, ns)
+
+
+def _slstm_bwd(res, grads):
+    wx, r, init, hs, cs, ns = res
+    (dcT, dnT, dhT), dhs = grads
+    c0, n0, h0 = init
+    s = wx.shape[0]
+    # previous-step series (t-1 values feeding step t)
+    h_prev = jnp.concatenate([h0[None], hs[:-1]], axis=0)
+    c_prev = jnp.concatenate([c0[None], cs[:-1]], axis=0)
+    n_prev = jnp.concatenate([n0[None], ns[:-1]], axis=0)
+    # recompute gate activations batched over time (cheap, local)
+    pre = wx + jnp.einsum("sbd,dk->sbk", h_prev, r)
+    zp, ip, fp, op = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(zp)
+    i = jax.nn.sigmoid(ip)
+    f = jax.nn.sigmoid(fp)
+    o = jax.nn.sigmoid(op)
+
+    def back(carry, inp):
+        dc, dn, dh = carry
+        dh_out, z_t, i_t, f_t, o_t, c_t, n_t, cp, np_ = inp
+        dh_t = dh + dh_out
+        nmax = jnp.maximum(n_t, EPS)
+        do = dh_t * c_t / nmax
+        dc_t = dc + dh_t * o_t / nmax
+        dn_t = dn - jnp.where(n_t > EPS,
+                              dh_t * o_t * c_t / (nmax * nmax), 0.0)
+        # c_t = f c_{t-1} + i z ;  n_t = f n_{t-1} + i
+        df = dc_t * cp + dn_t * np_
+        di = dc_t * z_t + dn_t
+        dz = dc_t * i_t
+        dpre = jnp.concatenate([
+            dz * (1 - z_t * z_t),
+            di * i_t * (1 - i_t),
+            df * f_t * (1 - f_t),
+            do * o_t * (1 - o_t),
+        ], axis=-1)
+        dh_prev = dpre @ r.T
+        dc_prev = dc_t * f_t
+        dn_prev = dn_t * f_t
+        return (dc_prev, dn_prev, dh_prev), dpre
+
+    (dc0, dn0, dh0), dpres = jax.lax.scan(
+        back, (dcT, dnT, dhT),
+        (dhs, z, i, f, o, cs, ns, c_prev, n_prev),
+        reverse=True)
+    # THE point: one local einsum + one all-reduce for dR
+    dr = jnp.einsum("sbd,sbk->dk", h_prev, dpres)
+    return dpres, dr, (dc0, dn0, dh0)
+
+
+_slstm_scan.defvjp(_slstm_fwd, _slstm_bwd)
+
+
+@named("slstm_mixer")
+def slstm_mixer(
+    x: jax.Array, p: Params, cfg: ModelConfig,
+    *, state: Optional[Params] = None, return_state: bool = False,
+) -> Tuple[jax.Array, Optional[Params]]:
+    bsz, s, d = x.shape
+    wx = jnp.einsum("bsd,dk->bsk", x.astype(jnp.float32), p["w"]) + p["b"]
+    # recurrent scan: keep per-step slices device-local (batch-sharded) —
+    # sequence-sharded scan inputs are pathological (dist.context docstring)
+    from repro.dist.context import constrain_scan_inputs
+    wx = constrain_scan_inputs(wx, batch_dim=0)
+
+    if state is None:
+        init = (jnp.zeros((bsz, d)), jnp.full((bsz, d), 1e-6),
+                jnp.zeros((bsz, d)))
+    else:
+        init = (state["c"], state["n"], state["h"])
+    (c, n, h), hs = _slstm_scan(wx.swapaxes(0, 1), p["r"], init)
+    y = hs.swapaxes(0, 1).astype(x.dtype)
+    keep = (state is not None) or return_state
+    new_state = {"c": c, "n": n, "h": h} if keep else None
+    return y, new_state

@@ -1,0 +1,160 @@
+"""Uniform model facade over the decoder-only and encoder-decoder stacks.
+
+Batch convention (everything is a dict of arrays):
+  * decoder-only : {"tokens": (B,S) i32, "labels": (B,S) i32}
+  * enc-dec      : {"frames": (B,S_src,d) f32 stub frontend embeddings,
+                    "tokens": (B,S_tgt) i32, "labels": (B,S_tgt) i32}
+
+Shape-cell semantics for enc-dec (seamless): a train/prefill cell of
+``seq_len`` splits it as S_src = S_tgt = seq_len // 2 (total context =
+seq_len); decode cells keep the decoder self-KV at seq_len per the grid
+definition and a fixed CROSS_SRC_LEN encoder memory (documented in
+DESIGN.md §5). VLM (chameleon) is early-fusion: VQ image tokens are ordinary
+vocabulary ids, so its batch is the decoder-only form.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import batch_spec
+from repro.models import encdec as encdec_mod
+from repro.models import transformer as transformer_mod
+from repro.models.config import ModelConfig, ShapeConfig
+
+CROSS_SRC_LEN = 4096   # encoder memory length for enc-dec decode cells
+
+
+def model_module(cfg: ModelConfig):
+    return encdec_mod if cfg.encdec else transformer_mod
+
+
+# ---------------------------------------------------------------------------
+# Batch construction (concrete arrays for smoke tests / examples)
+# ---------------------------------------------------------------------------
+
+def train_batch(cfg: ModelConfig, batch: int, seq: int, key) -> Dict[str, Any]:
+    k1, k2 = jax.random.split(key)
+    if cfg.encdec:
+        s_src = max(seq // 2, 1)
+        s_tgt = max(seq // 2, 1)
+        return {
+            "frames": jax.random.normal(k1, (batch, s_src, cfg.d_model),
+                                        jnp.float32),
+            "tokens": jax.random.randint(k2, (batch, s_tgt), 0,
+                                         cfg.vocab_size, jnp.int32),
+            "labels": jax.random.randint(k2, (batch, s_tgt), 0,
+                                         cfg.vocab_size, jnp.int32),
+        }
+    toks = jax.random.randint(k1, (batch, seq), 0, cfg.vocab_size, jnp.int32)
+    labels = jnp.concatenate(
+        [toks[:, 1:], jnp.full((batch, 1), -1, jnp.int32)], axis=1)
+    return {"tokens": toks, "labels": labels}
+
+
+def train_batch_specs(cfg: ModelConfig) -> Dict[str, P]:
+    if cfg.encdec:
+        return {"frames": batch_spec(None, None),
+                "tokens": batch_spec(None), "labels": batch_spec(None)}
+    return {"tokens": batch_spec(None), "labels": batch_spec(None)}
+
+
+# ---------------------------------------------------------------------------
+# Uniform step functions
+# ---------------------------------------------------------------------------
+
+def loss_fn(cfg: ModelConfig) -> Callable[[Any, Dict[str, Any]], jax.Array]:
+    mod = model_module(cfg)
+    if cfg.encdec:
+        def f(params, batch):
+            return mod.forward_loss(params, cfg, batch["frames"],
+                                    batch["tokens"], batch["labels"])
+        return f
+
+    def f(params, batch):
+        return mod.forward_loss(params, cfg, batch["tokens"], batch["labels"])
+    return f
+
+
+def prefill_fn(cfg: ModelConfig, max_len: int):
+    mod = model_module(cfg)
+    if cfg.encdec:
+        def f(params, batch):
+            return mod.prefill(params, cfg, batch["frames"], batch["tokens"],
+                               max_len)
+        return f
+
+    def f(params, batch):
+        return mod.prefill(params, cfg, batch["tokens"], max_len)
+    return f
+
+
+def decode_fn(cfg: ModelConfig):
+    mod = model_module(cfg)
+
+    def f(params, caches, token, cache_len):
+        return mod.decode_step(params, cfg, caches, token, cache_len)
+    return f
+
+
+def init_params(key, cfg: ModelConfig):
+    return model_module(cfg).init_params(key, cfg)
+
+
+def param_specs(cfg: ModelConfig):
+    return model_module(cfg).param_specs(cfg)
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int,
+                src_len: int = CROSS_SRC_LEN):
+    if cfg.encdec:
+        return encdec_mod.init_caches(cfg, batch, max_len, src_len)
+    return transformer_mod.init_caches(cfg, batch, max_len)
+
+
+def cache_specs(cfg: ModelConfig):
+    return model_module(cfg).cache_specs(cfg)
+
+
+# ---------------------------------------------------------------------------
+# Reduced ("smoke") configs — same family, tiny dims, for CPU tests
+# ---------------------------------------------------------------------------
+
+def reduce_config(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """Scale an arch config down to CPU-smoke size, preserving the family
+    structure (MoE stays MoE with fewer experts; MLA keeps latent ranks;
+    hybrid keeps its cycle)."""
+    small: Dict[str, Any] = dict(
+        num_layers=max(2, min(4, len(cfg.block_cycle))),
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=min(4, max(1, cfg.num_kv_heads * 4 // max(cfg.num_heads, 1))),
+        d_ff=0 if cfg.d_ff == 0 else 128,
+        vocab_size=512,
+        head_dim=16 if cfg.head_dim else 0,
+        dtype="float32",
+        remat="none",
+        fsdp=False,
+    )
+    if cfg.use_mla:
+        small.update(q_lora_rank=32 if cfg.q_lora_rank else 0,
+                     kv_lora_rank=16, qk_nope_dim=16, qk_rope_dim=8,
+                     v_head_dim=16)
+    if cfg.moe:
+        small.update(n_routed_experts=4, top_k=min(2, cfg.top_k),
+                     moe_d_ff=32,
+                     n_shared_experts=min(1, cfg.n_shared_experts),
+                     first_dense_layers=min(1, cfg.first_dense_layers))
+    if cfg.ssm_state:
+        small.update(ssm_state=16, ssm_heads=4, ssm_head_dim=0)
+    if cfg.encdec:
+        small.update(enc_layers=2, dec_layers=2, num_layers=4)
+    if len(cfg.block_cycle) > 1:
+        small["num_layers"] = 2 * len(cfg.block_cycle)
+    small.update(overrides)
+    return dataclasses.replace(cfg, **small)

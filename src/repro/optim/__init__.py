@@ -1,0 +1,8 @@
+"""Optimizers, LR schedules, gradient compression."""
+
+from repro.optim.optimizers import (  # noqa: F401
+    AdamWConfig, SGDConfig, init_opt_state, opt_update,
+)
+from repro.optim.schedules import (  # noqa: F401
+    cosine_warmup, linear_warmup, constant,
+)

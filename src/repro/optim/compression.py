@@ -1,0 +1,103 @@
+"""Gradient-compression policies, pluggable into the trainer.
+
+Two compressors:
+
+* ``HotnessSync`` — the paper's §4.2-III mechanism generalized to LM
+  embedding tables: rows are frequency-ranked (token counts play the role of
+  corpus occurrence counts); each sync period exchanges one row per hotness
+  block instead of the full table. This is DistGER's contribution running as
+  a first-class framework feature for every arch config (DESIGN.md §5).
+
+* ``TopKErrorFeedback`` — classic sparsified all-reduce with memory
+  (Stich et al.); framework-level trick for non-embedding tensors.
+
+Both are *policies*: they decide which rows/entries synchronize and carry
+their own state; the trainer applies them around the data-parallel mean.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class HotnessSync:
+    """State for hotness-block embedding sync.
+
+    ``block_starts``/``block_ends`` delimit equal-frequency rank ranges of
+    the frequency-sorted table (repro.core.corpus.FrequencyOrder for graph
+    corpora; token histograms for LM data)."""
+
+    block_starts: np.ndarray
+    block_ends: np.ndarray
+    period: int = 50
+    _step: int = 0
+
+    @classmethod
+    def from_counts(cls, counts: np.ndarray, period: int = 50) -> "HotnessSync":
+        """counts[rank] = occurrences, already sorted descending."""
+        counts = np.asarray(counts)
+        edges = np.flatnonzero(np.diff(counts)) + 1
+        starts = np.concatenate([[0], edges])
+        ends = np.concatenate([edges, [len(counts)]])
+        return cls(block_starts=starts, block_ends=ends, period=period)
+
+    def due(self) -> bool:
+        self._step += 1
+        return self._step % self.period == 0
+
+    def sample_rows(self, rng: np.random.Generator) -> np.ndarray:
+        u = rng.random(len(self.block_starts))
+        span = self.block_ends - self.block_starts
+        return (self.block_starts + np.floor(u * span)).astype(np.int64)
+
+    def bytes_per_period(self, dim: int, replicas: int) -> float:
+        return float(len(self.block_starts) * dim * 4 * replicas)
+
+    def full_bytes(self, num_rows: int, dim: int, replicas: int) -> float:
+        return float(num_rows * dim * 4 * replicas)
+
+
+@dataclasses.dataclass
+class TopKErrorFeedback:
+    """Error-feedback top-k sparsification state (one tree of residuals)."""
+
+    k_frac: float = 0.01
+    residual: Optional[Any] = None
+
+    def init(self, grads: Any) -> None:
+        self.residual = jax.tree_util.tree_map(
+            lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+    def compress(self, grads: Any) -> Tuple[Any, Any]:
+        """Returns (sparse_grads_to_allreduce, new_residual_tree)."""
+        if self.residual is None:
+            self.init(grads)
+
+        def one(g, r):
+            corrected = g.astype(jnp.float32) + r
+            flat = corrected.reshape(-1)
+            k = max(1, int(flat.shape[0] * self.k_frac))
+            _, idx = jax.lax.top_k(jnp.abs(flat), k)
+            sparse = jnp.zeros_like(flat).at[idx].set(flat[idx])
+            return sparse.reshape(g.shape).astype(g.dtype), \
+                (flat - sparse).reshape(g.shape)
+
+        pairs = jax.tree_util.tree_map(one, grads, self.residual)
+        sparse = jax.tree_util.tree_map(lambda p: p[0], pairs,
+                                        is_leaf=lambda x: isinstance(x, tuple))
+        resid = jax.tree_util.tree_map(lambda p: p[1], pairs,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        self.residual = resid
+        return sparse, resid
+
+    def wire_bytes(self, grads: Any) -> float:
+        """Index+value bytes per all-reduce vs dense."""
+        total = sum(x.size for x in jax.tree_util.tree_leaves(grads))
+        k = int(total * self.k_frac)
+        return float(k * 8)   # 4B value + 4B index

@@ -1,0 +1,149 @@
+"""Functional optimizers (AdamW / SGD-momentum) with dtype-configurable
+moments — bf16 moments halve optimizer HBM for the 405B config
+(cfg.opt_state_dtype), the standard frontier-scale memory recipe.
+
+State layout mirrors the param tree: {"m": tree, "v": tree, "count": ()}.
+Moment trees inherit the PARAMETER sharding specs (the caller passes the
+param spec tree through ``opt_specs``), so FSDP shards optimizer state the
+same way it shards weights (ZeRO style).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    moment_dtype: str = "float32"   # "bfloat16" for the 405B recipe
+    grad_clip: float = 1.0          # global-norm clip; 0 disables
+
+
+@dataclasses.dataclass(frozen=True)
+class SGDConfig:
+    momentum: float = 0.9
+    weight_decay: float = 0.0
+    moment_dtype: str = "float32"
+    grad_clip: float = 0.0
+
+
+def _mdt(cfg) -> Any:
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.moment_dtype]
+
+
+def init_opt_state(params: Any, cfg) -> Any:
+    dt = _mdt(cfg)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    if isinstance(cfg, AdamWConfig):
+        return {
+            "m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+    return {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def opt_specs(param_specs: Any, cfg) -> Any:
+    """Optimizer-state spec tree: moments shard exactly like the params."""
+    from jax.sharding import PartitionSpec as P
+    if isinstance(cfg, AdamWConfig):
+        return {"m": param_specs, "v": param_specs, "count": P()}
+    return {"m": param_specs, "count": P()}
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Tuple[Any, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def _named(scope):
+    import functools
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapped(*args, **kwargs):
+            with jax.named_scope(scope):
+                return fn(*args, **kwargs)
+        return wrapped
+    return deco
+
+
+@_named("optimizer")
+def opt_update(
+    grads: Any,
+    state: Any,
+    params: Any,
+    cfg,
+    lr: jax.Array,
+) -> Tuple[Any, Any, jax.Array]:
+    """One step. Returns (new_params, new_state, grad_norm). Math in f32,
+    stored moments in cfg.moment_dtype, params keep their own dtype."""
+    if cfg.grad_clip:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    else:
+        gnorm = global_norm(grads)
+    count = state["count"] + 1
+    dt = _mdt(cfg)
+
+    if isinstance(cfg, AdamWConfig):
+        b1, b2 = cfg.b1, cfg.b2
+        c = count.astype(jnp.float32)
+        bc1 = 1.0 - b1 ** c
+        bc2 = 1.0 - b2 ** c
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+            step = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + cfg.eps)
+            if cfg.weight_decay:
+                step = step + cfg.weight_decay * p.astype(jnp.float32)
+            newp = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+            return newp, m32.astype(dt), v32.astype(dt)
+
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state["m"])
+        flat_v = tdef.flatten_up_to(state["v"])
+        out = [upd(p, g, m, v) for p, g, m, v in
+               zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_v = tdef.unflatten([o[2] for o in out])
+        return new_p, {"m": new_m, "v": new_v, "count": count}, gnorm
+
+    # SGD with momentum
+    def upd(p, g, m):
+        g32 = g.astype(jnp.float32)
+        if cfg.weight_decay:
+            g32 = g32 + cfg.weight_decay * p.astype(jnp.float32)
+        m32 = cfg.momentum * m.astype(jnp.float32) + g32
+        newp = (p.astype(jnp.float32) - lr * m32).astype(p.dtype)
+        return newp, m32.astype(dt)
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state["m"])
+    out = [upd(p, g, m) for p, g, m in zip(flat_p, flat_g, flat_m)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    return new_p, {"m": new_m, "count": count}, gnorm

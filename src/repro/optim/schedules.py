@@ -1,0 +1,39 @@
+"""Learning-rate schedules (pure functions of the step)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    def f(step):
+        return jnp.float32(lr)
+    return f
+
+
+def linear_warmup(lr: float, warmup: int, total: int, end_frac: float = 0.0):
+    def f(step):
+        s = jnp.float32(step)
+        warm = s / jnp.maximum(warmup, 1)
+        frac = (s - warmup) / jnp.maximum(total - warmup, 1)
+        decay = 1.0 - (1.0 - end_frac) * jnp.clip(frac, 0.0, 1.0)
+        return jnp.float32(lr) * jnp.where(s < warmup, warm, decay)
+    return f
+
+
+def cosine_warmup(lr: float, warmup: int, total: int, min_frac: float = 0.1):
+    def f(step):
+        s = jnp.float32(step)
+        warm = s / jnp.maximum(warmup, 1)
+        frac = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.float32(lr) * jnp.where(s < warmup, warm, cos)
+    return f
+
+
+def word2vec_linear(lr: float, min_lr: float, total: int):
+    """The Skip-Gram convention: linear decay to min_lr over the corpus."""
+    def f(step):
+        frac = jnp.clip(jnp.float32(step) / jnp.maximum(total, 1), 0.0, 1.0)
+        return jnp.maximum(jnp.float32(lr) * (1 - frac), jnp.float32(min_lr))
+    return f

@@ -1,0 +1,1 @@
+"""Distributed runtime: trainer (fault-tolerant), server, elasticity."""

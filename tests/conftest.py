@@ -1,0 +1,28 @@
+import os
+import sys
+
+# Tests see the default single CPU device (the 512-device flag belongs ONLY
+# to the dry-run); keep JAX quiet and deterministic.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def small_graph():
+    from repro.graph.generators import rmat_graph
+    return rmat_graph(256, 8, seed=7)
+
+
+@pytest.fixture(scope="session")
+def medium_graph():
+    from repro.graph.generators import rmat_graph
+    return rmat_graph(1024, 10, seed=3)
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,98 @@
+"""Deliverable (f): every assigned architecture instantiates at REDUCED
+size and runs one forward/train step on CPU — shapes asserted, no NaNs.
+Decode path is exercised for every decoder-bearing arch; state-based archs
+additionally check prefill/decode consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_reduced
+from repro.models import zoo
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_train_step(arch):
+    cfg = get_reduced(arch)
+    key = jax.random.PRNGKey(0)
+    params = zoo.init_params(key, cfg)
+    batch = zoo.train_batch(cfg, 2, 16, jax.random.fold_in(key, 1))
+    loss, grads = jax.value_and_grad(zoo.loss_fn(cfg))(params, batch)
+    assert np.isfinite(float(loss)), arch
+    leaves = jax.tree_util.tree_leaves(grads)
+    assert all(np.isfinite(np.asarray(g, np.float32)).all() for g in leaves)
+    # one SGD step changes the loss
+    params2 = jax.tree_util.tree_map(
+        lambda p, g: (p.astype(jnp.float32)
+                      - 0.1 * g.astype(jnp.float32)).astype(p.dtype),
+        params, grads)
+    loss2 = zoo.loss_fn(cfg)(params2, batch)
+    assert np.isfinite(float(loss2))
+    assert float(loss2) != pytest.approx(float(loss), abs=1e-7)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_prefill_decode(arch):
+    cfg = get_reduced(arch)
+    key = jax.random.PRNGKey(1)
+    params = zoo.init_params(key, cfg)
+    b, s, max_len = 2, 8, 24
+    batch = zoo.train_batch(cfg, b, s, jax.random.fold_in(key, 1))
+    batch.pop("labels")
+    logits, caches = zoo.prefill_fn(cfg, max_len)(params, batch)
+    assert logits.shape == (b, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all(), arch
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    prompt_len = batch["tokens"].shape[1]
+    lg2, caches = zoo.decode_fn(cfg)(params, caches, tok,
+                                     jnp.int32(prompt_len))
+    assert lg2.shape == (b, cfg.vocab_size)
+    assert np.isfinite(np.asarray(lg2, np.float32)).all(), arch
+
+
+@pytest.mark.parametrize("arch", ["zamba2_7b", "xlstm_350m", "yi_6b",
+                                  "minicpm3_4b"])
+def test_decode_matches_full_forward(arch):
+    """Prefill(t0..tn) then decode(tn+1) must equal the full forward pass's
+    next-token logits — the KV/state cache correctness property."""
+    cfg = get_reduced(arch)
+    key = jax.random.PRNGKey(2)
+    params = zoo.init_params(key, cfg)
+    b, s = 2, 12
+    toks = jax.random.randint(jax.random.fold_in(key, 3), (b, s), 0,
+                              cfg.vocab_size, jnp.int32)
+    # full forward logits at the last position == prefill's last logits
+    logits_pre, caches = zoo.prefill_fn(cfg, s + 4)(
+        params, {"tokens": toks})
+    from repro.models import transformer as T
+    # recompute via prefill of the same tokens with one extra step
+    lg_a, caches_a = zoo.prefill_fn(cfg, s + 4)(params,
+                                                {"tokens": toks[:, :-1]})
+    lg_b, _ = zoo.decode_fn(cfg)(params, caches_a, toks[:, -1:],
+                                 jnp.int32(s - 1))
+    np.testing.assert_allclose(np.asarray(lg_b, np.float32),
+                               np.asarray(logits_pre, np.float32),
+                               atol=2e-2, rtol=2e-2)
+
+
+def test_moe_param_counts_match_grid():
+    """A2.7B really activates ~2.7B; deepseek-lite ~16B total."""
+    q = get_config("qwen2_moe_a2_7b")
+    assert q.active_param_count() / 1e9 == pytest.approx(2.7, abs=0.3)
+    d = get_config("deepseek_v2_lite_16b")
+    assert d.param_count() / 1e9 == pytest.approx(16, abs=1.5)
+    l = get_config("llama3_405b")
+    assert l.param_count() / 1e9 == pytest.approx(405, abs=8)
+
+
+def test_grid_cells_and_skips():
+    from repro.configs import grid_cells
+    cells = grid_cells()
+    assert len(cells) == 40
+    runnable = [(a, s) for a, s, ok, _ in cells if ok]
+    skipped = [(a, s) for a, s, ok, _ in cells if not ok]
+    assert len(runnable) == 32
+    assert all(s == "long_500k" for _, s in skipped)
+    assert ("zamba2_7b", "long_500k") in runnable
+    assert ("xlstm_350m", "long_500k") in runnable

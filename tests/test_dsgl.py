@@ -1,0 +1,118 @@
+"""DSGL learner (paper §4): correctness of the lifetime update, hotness
+sync cost claims, and end-to-end embedding quality on a tiny graph."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sync as sync_mod
+from repro.core.corpus import FrequencyOrder
+from repro.core.dsgl import (
+    DSGLConfig, init_embeddings, lifetime_step, negative_table,
+    sample_negatives,
+)
+
+
+def test_negative_table_is_cdf(rng):
+    ocn = np.array([100, 50, 20, 5, 1])
+    cdf = negative_table(ocn, 0.75)
+    assert np.all(np.diff(cdf) >= 0)
+    assert cdf[-1] == pytest.approx(1.0)
+    draws = sample_negatives(cdf, (20000,), rng)
+    # unigram^0.75: rank 0 must be sampled most
+    counts = np.bincount(draws, minlength=5)
+    assert counts[0] > counts[-1]
+
+
+@given(st.integers(1, 3), st.integers(6, 20))
+@settings(max_examples=10, deadline=None)
+def test_lifetime_step_moves_only_touched_rows(w_cnt, t_len):
+    n, d, k_neg, g = 64, 8, 3, 2
+    phi_in, phi_out = init_embeddings(n, d, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    walks = rng.integers(0, n // 2, size=(g, w_cnt, t_len)).astype(np.int32)
+    negs = rng.integers(n // 2, n, size=(g, t_len, k_neg)).astype(np.int32)
+    phi_in_before = np.asarray(phi_in).copy()
+    pin, pout, loss = lifetime_step(
+        phi_in.copy(), phi_out.copy(), jnp.asarray(walks), jnp.asarray(negs),
+        jnp.float32(0.05), 2)
+    touched_in = np.unique(walks)
+    untouched_in = np.setdiff1d(np.arange(n), touched_in)
+    np.testing.assert_array_equal(np.asarray(pin)[untouched_in],
+                                  phi_in_before[untouched_in])
+    assert np.isfinite(float(loss))
+
+
+def test_hotness_sync_moves_fewer_bytes_than_full():
+    """§4.2-III: O(ocn_max d m) vs O(|V| d m)."""
+    n, d, m = 512, 16, 4
+    rng = np.random.default_rng(0)
+    replicas = []
+    for s in range(m):
+        key = jax.random.PRNGKey(s)
+        replicas.append(init_embeddings(n, d, key))
+    # power-law-ish occurrence counts -> hotness blocks
+    ocn = np.sort(rng.zipf(2.0, n))[::-1].astype(np.int64)
+    order = FrequencyOrder.from_ocn(ocn)
+    starts, ends = order.hotness_blocks()
+    _, hot_bytes = sync_mod.hotness_block_sync(replicas, starts, ends, rng)
+    _, full_bytes = sync_mod.full_sync(replicas)
+    assert hot_bytes < full_bytes
+    # blocks = distinct occurrence counts << |V|
+    assert len(starts) < n // 4
+
+
+def test_hotness_sync_converges_replicas():
+    n, d, m = 64, 8, 3
+    rng = np.random.default_rng(2)
+    replicas = [init_embeddings(n, d, jax.random.PRNGKey(s)) for s in range(m)]
+    starts = np.arange(n)        # degenerate: every row its own block
+    ends = starts + 1
+    new_reps, _ = sync_mod.hotness_block_sync(replicas, starts, ends, rng)
+    for r in new_reps[1:]:
+        np.testing.assert_allclose(np.asarray(r[0]),
+                                   np.asarray(new_reps[0][0]), atol=1e-6)
+
+
+def test_training_reduces_loss(small_graph):
+    from repro.core.api import EmbedConfig, sample_corpus
+    from repro.core.dsgl import train_dsgl
+    corpus = sample_corpus(small_graph,
+                           EmbedConfig(dim=16, max_len=30, min_len=8))
+    order = FrequencyOrder.from_ocn(corpus.ocn)
+    cfg = DSGLConfig(dim=16, window=4, negatives=3, epochs=2,
+                     batch_groups=16)
+    phi_in, phi_out, metrics = train_dsgl(corpus, order, cfg,
+                                          collect_metrics=True)
+    losses = metrics["loss"]
+    assert len(losses) >= 2
+    first = np.mean(losses[: max(len(losses) // 4, 1)])
+    last = np.mean(losses[-max(len(losses) // 4, 1):])
+    assert last < first
+    assert not np.isnan(np.asarray(phi_in)).any()
+
+
+def test_kernel_and_ref_training_paths_agree(small_graph):
+    """use_kernel=True (Pallas interpret) must train identically to the ref
+    path given the same inputs."""
+    from repro.core.api import EmbedConfig, sample_corpus
+    corpus = sample_corpus(small_graph,
+                           EmbedConfig(dim=8, max_len=20, min_len=6))
+    order = FrequencyOrder.from_ocn(corpus.ocn)
+    walks = order.relabel_walks(corpus.walks)[:8]
+    n = len(order.to_rank)
+    phi_in, phi_out = init_embeddings(n, 8, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    wb = jnp.asarray(walks[:4].reshape(2, 2, -1))
+    neg = jnp.asarray(rng.integers(0, n, size=(2, walks.shape[1], 3)),
+                      jnp.int32)
+    out_ref = lifetime_step(phi_in.copy(), phi_out.copy(), wb, neg,
+                            jnp.float32(0.025), 3, False)
+    out_ker = lifetime_step(phi_in.copy(), phi_out.copy(), wb, neg,
+                            jnp.float32(0.025), 3, True)
+    np.testing.assert_allclose(np.asarray(out_ref[0]), np.asarray(out_ker[0]),
+                               atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(out_ref[1]), np.asarray(out_ker[1]),
+                               atol=2e-4, rtol=2e-4)

@@ -1,0 +1,112 @@
+"""InCoM (paper §3.1): the O(1) incremental updates must EXACTLY match the
+full-path recomputation — Theorem 1 and Eq. 12/13 are algebraic identities,
+so these are equality properties, not approximations."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import incom, info
+
+
+def _entropy_ref(path):
+    """H(W) per Eq. 4 (log2), recomputed from scratch."""
+    vals, counts = np.unique(path, return_counts=True)
+    p = counts / len(path)
+    return float(-(p * np.log2(p)).sum())
+
+
+@st.composite
+def walks(draw):
+    n_nodes = draw(st.integers(2, 12))
+    length = draw(st.integers(2, 60))
+    return draw(st.lists(st.integers(0, n_nodes - 1),
+                         min_size=length, max_size=length))
+
+
+@given(walks())
+@settings(max_examples=60, deadline=None)
+def test_incremental_entropy_matches_fullpath(walk):
+    """Theorem 1: running H after appending each node == batch recompute."""
+    max_len = len(walk) + 1
+    path = jnp.full((1, max_len), -1, jnp.int32)
+    path = path.at[0, 0].set(walk[0])
+    s = incom.InfoState.init(1)
+    for v in walk[1:]:
+        s, path = incom.accept_update(s, path, jnp.array([v], jnp.int32))
+    got = float(s.H[0])
+    want = _entropy_ref(walk)
+    assert got == pytest.approx(want, abs=1e-3)
+
+
+@given(walks())
+@settings(max_examples=40, deadline=None)
+def test_incremental_r2_matches_series_pearson(walk):
+    """Eq. 12/13: running R^2 == Pearson^2 over the full (L, H-prefix) series."""
+    max_len = len(walk) + 1
+    path = jnp.full((1, max_len), -1, jnp.int32)
+    path = path.at[0, 0].set(walk[0])
+    s = incom.InfoState.init(1)
+    h_series = [0.0]
+    for v in walk[1:]:
+        s, path = incom.accept_update(s, path, jnp.array([v], jnp.int32))
+        h_series.append(float(s.H[0]))
+    got = float(incom.r_squared(s)[0])
+    l_series = np.arange(1, len(h_series) + 1, dtype=np.float64)
+    r = info.pearson_r(np.array(h_series), l_series)
+    assert got == pytest.approx(r * r, abs=2e-3)
+
+
+def test_count_in_path_masked():
+    path = jnp.array([[3, 1, 3, 7, -1, -1]], jnp.int32)
+    length = jnp.array([4.0])
+    assert int(incom.count_in_path(path, length.astype(jnp.int32),
+                                   jnp.array([3]))[0]) == 2
+    # beyond-length entries never count
+    assert int(incom.count_in_path(path, jnp.array([2]),
+                                   jnp.array([3]))[0]) == 1
+
+
+def test_message_is_constant_size_80_bytes():
+    """Example 1: the InCoM message is 80 B regardless of walk length; the
+    HuGE-D full-path message grows as 24 + 8L."""
+    assert incom.MSG_BYTES == 80
+    assert int(incom.fullpath_msg_bytes(jnp.int32(80))) == 24 + 8 * 80
+    # 8.3x claim at L = 80
+    assert float(incom.fullpath_msg_bytes(jnp.int32(80))) / incom.MSG_BYTES \
+        == pytest.approx(8.3, abs=0.1)
+
+
+def test_message_pack_unpack_roundtrip():
+    s = incom.InfoState.init(4)
+    s = incom.stats_step(s, jnp.ones(4) * 0.5, jnp.ones(4) * 2.0)
+    msg = incom.pack_message(jnp.arange(4), jnp.arange(4) * 10, s)
+    assert msg.shape == (4, incom.MSG_WIDTH)
+    wid, nid, s2 = incom.unpack_message(msg)
+    np.testing.assert_array_equal(np.asarray(wid), np.arange(4))
+    np.testing.assert_array_equal(np.asarray(nid), np.arange(4) * 10)
+    for f in ("H", "L", "EH", "EL", "EHL", "EH2", "EL2"):
+        np.testing.assert_allclose(
+            np.asarray(getattr(s2, f)), np.asarray(getattr(s, f)), rtol=1e-6)
+
+
+@given(st.lists(st.floats(0.0, 8.0), min_size=3, max_size=40))
+@settings(max_examples=40, deadline=None)
+def test_running_stats_match_batch_means(hs):
+    """Eq. 13 incremental means == numpy batch means over the same series."""
+    s = incom.InfoState.init(1)
+    ls = []
+    for i, h in enumerate(hs):
+        l_new = float(s.L[0]) + 1.0
+        s = incom.stats_step(s, jnp.array([h], jnp.float32),
+                             jnp.array([l_new], jnp.float32))
+        ls.append(l_new)
+    series_h = np.array([0.0] + list(hs))
+    series_l = np.array([1.0] + ls)
+    np.testing.assert_allclose(float(s.EH[0]), series_h.mean(), rtol=2e-4,
+                               atol=1e-5)
+    np.testing.assert_allclose(float(s.EL[0]), series_l.mean(), rtol=2e-4)
+    np.testing.assert_allclose(float(s.EHL[0]), (series_h * series_l).mean(),
+                               rtol=2e-3, atol=1e-4)

@@ -1,0 +1,170 @@
+"""Per-kernel shape/dtype sweeps: Pallas kernels (interpret=True on CPU)
+vs their pure-jnp ref.py oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref
+from repro.kernels.sgns import ops as sg_ops, ref as sg_ref
+from repro.kernels.ssm_scan import ops as ssm_ops, ref as ssm_ref
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,h,s,d", [(1, 1, 128, 64), (2, 2, 256, 32),
+                                     (1, 4, 512, 64)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_shapes(b, h, s, d, causal):
+    key = jax.random.PRNGKey(b * 100 + h * 10 + s)
+    q, k, v = (jax.random.normal(jax.random.fold_in(key, i), (b, h, s, d),
+                                 jnp.float32) for i in range(3))
+    got = fa_ops.flash_attention_pallas(q, k, v, causal=causal,
+                                        interpret=True)
+    want = fa_ref.mha_reference(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_flash_attention_wrapper_pads_ragged_seq():
+    """The public ops wrapper pads non-tile-multiple lengths (causal)."""
+    key = jax.random.PRNGKey(77)
+    q, k, v = (jax.random.normal(jax.random.fold_in(key, i),
+                                 (2, 1, 384, 128), jnp.float32)
+               for i in range(3))
+    got = fa_ops.flash_attention(q, k, v, causal=True, interpret=True)
+    want = fa_ref.mha_reference(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-3, rtol=2e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    key = jax.random.PRNGKey(0)
+    q, k, v = (jax.random.normal(jax.random.fold_in(key, i),
+                                 (1, 2, 256, 64), dtype) for i in range(3))
+    got = fa_ops.flash_attention_pallas(q, k, v, causal=True, interpret=True)
+    want = fa_ref.mha_reference(q, k, v, causal=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-3
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=tol, rtol=tol)
+
+
+def test_flash_attention_decode_offset():
+    """q_offset (decode with cache) must equal masked reference."""
+    key = jax.random.PRNGKey(1)
+    kv_len, q_len = 256, 128
+    q = jax.random.normal(key, (1, 2, q_len, 64), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 2, kv_len, 64))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 2, kv_len, 64))
+    got = fa_ops.flash_attention_pallas(q, k, v, causal=True,
+                                        q_offset=kv_len - q_len,
+                                        interpret=True)
+    want = fa_ref.mha_reference(q, k, v, causal=True,
+                                q_offset=kv_len - q_len)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-3)
+
+
+def test_chunked_equals_reference_long():
+    key = jax.random.PRNGKey(2)
+    q, k, v = (jax.random.normal(jax.random.fold_in(key, i),
+                                 (1, 2, 640, 32), jnp.float32)
+               for i in range(3))
+    got = fa_ref.mha_chunked(q, k, v, causal=True)
+    want = fa_ref.mha_reference(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan (Mamba2 / mLSTM)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bh,s,p,n", [(2, 64, 16, 8), (4, 128, 32, 16),
+                                      (1, 200, 64, 32), (3, 96, 8, 64)])
+def test_ssd_chunked_matches_sequential(bh, s, p, n):
+    key = jax.random.PRNGKey(bh + s)
+    xdt = jax.random.normal(key, (bh, s, p), jnp.float32)
+    loga = -jax.random.uniform(jax.random.fold_in(key, 1), (bh, s)) * 0.2
+    b = jax.random.normal(jax.random.fold_in(key, 2), (bh, s, n))
+    c = jax.random.normal(jax.random.fold_in(key, 3), (bh, s, n))
+    y_ref, s_ref = ssm_ref.ssd_scan_reference(xdt, loga, b, c)
+    y_chk, s_chk = ssm_ref.ssd_chunked_ref(xdt, loga, b, c, chunk=32)
+    np.testing.assert_allclose(np.asarray(y_chk), np.asarray(y_ref),
+                               atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(s_chk), np.asarray(s_ref),
+                               atol=2e-3, rtol=2e-3)
+
+
+@pytest.mark.parametrize("chunk", [16, 64, 128])
+def test_ssd_pallas_kernel_sweep(chunk):
+    bh, s, p, n = 2, 128, 16, 8
+    key = jax.random.PRNGKey(chunk)
+    xdt = jax.random.normal(key, (bh, s, p), jnp.float32)
+    loga = -jax.random.uniform(jax.random.fold_in(key, 1), (bh, s)) * 0.1
+    b = jax.random.normal(jax.random.fold_in(key, 2), (bh, s, n))
+    c = jax.random.normal(jax.random.fold_in(key, 3), (bh, s, n))
+    y_ref, s_ref = ssm_ref.ssd_scan_reference(xdt, loga, b, c)
+    y_k, s_k = ssm_ops.ssd_chunked_pallas(xdt, loga, b, c, chunk=chunk,
+                                          interpret=True)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_ref),
+                               atol=3e-3, rtol=3e-3)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_ref),
+                               atol=3e-3, rtol=3e-3)
+
+
+def test_ssd_decode_matches_scan_tail():
+    """Stepping the recurrence one token must continue the scan exactly."""
+    bh, s, p, n = 2, 33, 8, 4
+    key = jax.random.PRNGKey(5)
+    xdt = jax.random.normal(key, (bh, s, p), jnp.float32)
+    loga = -jax.random.uniform(jax.random.fold_in(key, 1), (bh, s)) * 0.3
+    b = jax.random.normal(jax.random.fold_in(key, 2), (bh, s, n))
+    c = jax.random.normal(jax.random.fold_in(key, 3), (bh, s, n))
+    y_all, _ = ssm_ref.ssd_scan_reference(xdt, loga, b, c)
+    _, s_prefix = ssm_ref.ssd_scan_reference(
+        xdt[:, :-1], loga[:, :-1], b[:, :-1], c[:, :-1])
+    y_last, _ = ssm_ref.ssd_decode_step(
+        s_prefix, xdt[:, -1], loga[:, -1], b[:, -1], c[:, -1])
+    np.testing.assert_allclose(np.asarray(y_last), np.asarray(y_all[:, -1]),
+                               atol=2e-4, rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# SGNS lifetime kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("w,t,d,k,window", [(2, 16, 32, 5, 3),
+                                            (1, 24, 16, 4, 5),
+                                            (3, 12, 64, 2, 2)])
+def test_sgns_pallas_matches_ref(w, t, d, k, window):
+    key = jax.random.PRNGKey(w * t)
+    ctx = jax.random.normal(key, (w, t, d), jnp.float32) * 0.1
+    out = jax.random.normal(jax.random.fold_in(key, 1), (w, t, d)) * 0.1
+    neg = jax.random.normal(jax.random.fold_in(key, 2), (t, k, d)) * 0.1
+    valid = jax.random.uniform(jax.random.fold_in(key, 3), (w, t)) > 0.2
+    lr = jnp.float32(0.01)
+    ref_out = sg_ref.sgns_lifetime_ref(ctx, out, neg, valid, lr, window)
+    ker_out = sg_ops.sgns_lifetime_batch(
+        ctx[None], out[None], neg[None], valid[None], lr, window)
+    for a, b, name in zip(ker_out, ref_out, ("ctx", "out", "neg", "loss")):
+        np.testing.assert_allclose(np.asarray(a)[0], np.asarray(b),
+                                   atol=5e-4, rtol=5e-4, err_msg=name)
+
+
+def test_sgns_batch_wrapper_matches_ref():
+    g, w, t, d, k = 2, 2, 12, 16, 3
+    key = jax.random.PRNGKey(9)
+    ctx = jax.random.normal(key, (g, w, t, d), jnp.float32) * 0.1
+    out = jax.random.normal(jax.random.fold_in(key, 1), (g, w, t, d)) * 0.1
+    neg = jax.random.normal(jax.random.fold_in(key, 2), (g, t, k, d)) * 0.1
+    valid = jnp.ones((g, w, t), bool)
+    lr = jnp.float32(0.025)
+    got = sg_ops.sgns_lifetime_batch(ctx, out, neg, valid, lr, 4)
+    want = sg_ref.sgns_lifetime_batch_ref(ctx, out, neg, valid, lr, 4)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=5e-4, rtol=5e-4)

@@ -1,0 +1,82 @@
+"""MLA: the absorbed (weight-folded, MQA-over-latent) formulation must
+equal the naive per-head materialization of K/V from the latent."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import mla as mla_mod
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope, rmsnorm
+
+
+def _cfg(q_lora: int = 0):
+    return ModelConfig(
+        name="mla-test", family="dense", num_layers=1, d_model=64,
+        num_heads=4, num_kv_heads=4, d_ff=128, vocab_size=64,
+        use_mla=True, q_lora_rank=q_lora, kv_lora_rank=24, qk_nope_dim=16,
+        qk_rope_dim=8, v_head_dim=16, dtype="float32", remat="none",
+        attn_impl="ref")
+
+
+def _naive_mla(x, p, cfg, positions):
+    """Reference: materialize per-head K/V from the latent, run standard
+    multi-head attention with the shared RoPE key appended."""
+    b, s, d = x.shape
+    h = cfg.num_heads
+    qn, qr = mla_mod._queries(x, p, cfg, positions)        # (B,H,S,*)
+    ckv = rmsnorm(jnp.einsum("bsd,dr->bsr", x, p["wkv_down"]),
+                  p["kv_norm"], cfg.norm_eps)
+    krope = apply_rope(
+        jnp.einsum("bsd,dk->bsk", x, p["wk_rope"])[:, None],
+        positions, cfg.rope_theta)[:, 0]                   # (B,S,rope)
+    k_nope = jnp.einsum("bsr,rhk->bhsk", ckv, p["wk_up"])  # (B,H,S,nope)
+    v = jnp.einsum("bsr,rhk->bhsk", ckv, p["wv_up"])       # (B,H,S,vh)
+    k_rope_b = jnp.broadcast_to(krope[:, None],
+                                (b, h, s, cfg.qk_rope_dim))
+    q_full = jnp.concatenate([qn, qr], -1)
+    k_full = jnp.concatenate([k_nope, k_rope_b], -1)
+    scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+    scores = jnp.einsum("bhsk,bhtk->bhst", q_full, k_full) * scale
+    mask = jnp.arange(s)[:, None] >= jnp.arange(s)[None, :]
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    y = jnp.einsum("bhst,bhtk->bhsk", w, v)
+    return jnp.einsum("bhsk,hkd->bsd", y, p["wo"])
+
+
+def _check(cfg):
+    key = jax.random.PRNGKey(0)
+    p = mla_mod.init_mla(key, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 12, cfg.d_model))
+    positions = jnp.arange(12)
+    got, _ = mla_mod.mla_attention(x, p, cfg, positions)
+    want = _naive_mla(x, p, cfg, positions)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_absorbed_equals_naive_no_qlora():
+    _check(_cfg(q_lora=0))          # deepseek-v2-lite style
+
+
+def test_absorbed_equals_naive_with_qlora():
+    _check(_cfg(q_lora=32))         # minicpm3 style
+
+
+def test_mla_decode_matches_prefill_tail():
+    cfg = _cfg()
+    key = jax.random.PRNGKey(2)
+    p = mla_mod.init_mla(key, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(key, 3), (1, 9, cfg.d_model))
+    # full pass
+    full, _ = mla_mod.mla_attention(x, p, cfg, jnp.arange(9))
+    # prefill 8 then decode the 9th
+    cache = mla_mod.init_mla_cache(cfg, 1, 16, jnp.float32)
+    _, cache = mla_mod.mla_attention(x[:, :8], p, cfg, jnp.arange(8),
+                                     cache=cache)
+    got, _ = mla_mod.mla_attention(x[:, 8:], p, cfg, jnp.arange(8, 9),
+                                   cache=cache, cache_len=jnp.int32(8))
+    np.testing.assert_allclose(np.asarray(got[:, 0]),
+                               np.asarray(full[:, -1]),
+                               atol=2e-4, rtol=2e-4)

@@ -1,0 +1,71 @@
+"""MPGP streaming partitioner (paper §3.2): invariants + quality claims."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.mpgp import (
+    balanced_only_partition, hash_partition, mpgp_partition,
+    mpgp_partition_parallel, stream_order,
+)
+
+
+def _locality(graph, assignment):
+    """Fraction of edges whose endpoints share a partition."""
+    src = np.repeat(np.arange(graph.num_nodes),
+                    np.diff(np.asarray(graph.indptr)))
+    dst = np.asarray(graph.indices)
+    return float(np.mean(assignment[src] == assignment[dst]))
+
+
+@pytest.mark.parametrize("m", [2, 4])
+def test_all_nodes_assigned_and_balanced(small_graph, m):
+    res = mpgp_partition(small_graph, m, gamma=2.0)
+    a = res.assignment
+    assert a.shape == (small_graph.num_nodes,)
+    assert a.min() >= 0 and a.max() < m
+    counts = res.counts()
+    # dynamic balance term keeps partitions within the gamma slack
+    assert counts.max() <= 2.0 * small_graph.num_nodes / m + 1
+
+
+def test_mpgp_beats_balanced_only_on_locality(medium_graph):
+    """The paper's central partitioning claim (Fig. 10c): proximity-aware
+    placement keeps more random-walk transitions local than load-balancing
+    alone."""
+    m = 4
+    mp = mpgp_partition(medium_graph, m, gamma=2.0)
+    bal = balanced_only_partition(medium_graph, m)
+    hsh = hash_partition(medium_graph, m)
+    loc_mpgp = _locality(medium_graph, mp.assignment)
+    loc_bal = _locality(medium_graph, bal.assignment)
+    loc_hash = _locality(medium_graph, hsh.assignment)
+    assert loc_mpgp > loc_bal
+    assert loc_mpgp > loc_hash
+
+
+@pytest.mark.parametrize("order", ["random", "natural", "bfs", "dfs",
+                                   "bfs+degree", "dfs+degree"])
+def test_stream_orders_cover_all_nodes(small_graph, order):
+    o = stream_order(small_graph, order, seed=0)
+    assert sorted(o.tolist()) == list(range(small_graph.num_nodes))
+
+
+def test_parallel_mpgp_consistent(medium_graph):
+    res = mpgp_partition_parallel(medium_graph, 4, num_segments=4, gamma=2.0)
+    a = res.assignment
+    assert a.shape == (medium_graph.num_nodes,)
+    assert set(np.unique(a)) <= set(range(4))
+    # parallel variant must stay within a reasonable locality band of seq
+    seq = mpgp_partition(medium_graph, 4, gamma=2.0)
+    assert _locality(medium_graph, a) > 0.5 * _locality(
+        medium_graph, seq.assignment)
+
+
+@given(st.integers(2, 6))
+@settings(max_examples=6, deadline=None)
+def test_partition_counts_sum_to_nodes(m):
+    from repro.graph.generators import rmat_graph
+    g = rmat_graph(128, 6, seed=m)
+    res = mpgp_partition(g, m, gamma=2.0)
+    assert int(res.counts().sum()) == g.num_nodes

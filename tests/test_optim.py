@@ -1,0 +1,93 @@
+"""Optimizers, schedules, compression policies."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim.compression import HotnessSync, TopKErrorFeedback
+from repro.optim.optimizers import (
+    AdamWConfig, SGDConfig, clip_by_global_norm, global_norm,
+    init_opt_state, opt_update,
+)
+from repro.optim.schedules import (
+    constant, cosine_warmup, linear_warmup, word2vec_linear,
+)
+
+
+def test_adamw_first_step_is_lr_sized():
+    """With bias correction, |step 1| == lr per coordinate (up to eps)."""
+    params = {"w": jnp.ones((4,))}
+    cfg = AdamWConfig(weight_decay=0.0, grad_clip=0.0)
+    state = init_opt_state(params, cfg)
+    grads = {"w": jnp.full((4,), 0.5)}
+    new_p, state, gn = opt_update(grads, state, params, cfg,
+                                  jnp.float32(0.1))
+    np.testing.assert_allclose(np.asarray(params["w"] - new_p["w"]),
+                               0.1 * np.ones(4), rtol=1e-4)
+    assert int(state["count"]) == 1
+
+
+def test_adamw_bf16_moments_roundtrip():
+    params = {"w": jnp.ones((8,), jnp.bfloat16)}
+    cfg = AdamWConfig(moment_dtype="bfloat16")
+    state = init_opt_state(params, cfg)
+    assert state["m"]["w"].dtype == jnp.bfloat16
+    grads = {"w": jnp.full((8,), 0.1, jnp.bfloat16)}
+    new_p, state, _ = opt_update(grads, state, params, cfg, jnp.float32(0.01))
+    assert new_p["w"].dtype == jnp.bfloat16
+    assert state["v"]["w"].dtype == jnp.bfloat16
+
+
+def test_sgd_momentum_accumulates():
+    params = {"w": jnp.zeros((2,))}
+    cfg = SGDConfig(momentum=0.9, grad_clip=0.0)
+    state = init_opt_state(params, cfg)
+    g = {"w": jnp.ones((2,))}
+    p1, state, _ = opt_update(g, state, params, cfg, jnp.float32(1.0))
+    p2, state, _ = opt_update(g, state, p1, cfg, jnp.float32(1.0))
+    # second step = 1 + 0.9 -> total 2.9
+    np.testing.assert_allclose(np.asarray(-p2["w"]), [2.9, 2.9], rtol=1e-5)
+
+
+def test_global_norm_clip():
+    grads = {"a": jnp.full((3,), 4.0), "b": jnp.zeros((2,))}
+    clipped, norm = clip_by_global_norm(grads, 1.0)
+    assert float(norm) == pytest.approx(np.sqrt(48.0))
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+
+@given(st.integers(0, 5000))
+@settings(max_examples=30, deadline=None)
+def test_schedules_bounded(step):
+    for sched in (constant(0.1), linear_warmup(0.1, 100, 5000),
+                  cosine_warmup(0.1, 100, 5000),
+                  word2vec_linear(0.025, 1e-4, 5000)):
+        v = float(sched(jnp.int32(step)))
+        assert 0.0 <= v <= 0.1 + 1e-6
+
+
+def test_hotness_sync_blocks_from_counts():
+    counts = np.array([9, 9, 5, 5, 5, 2, 1, 1, 1, 1])
+    hs = HotnessSync.from_counts(counts, period=2)
+    assert len(hs.block_starts) == 4          # distinct counts: 9,5,2,1
+    rows = hs.sample_rows(np.random.default_rng(0))
+    assert len(rows) == 4
+    for r, (s, e) in zip(rows, zip(hs.block_starts, hs.block_ends)):
+        assert s <= r < e
+    assert hs.bytes_per_period(16, 4) < hs.full_bytes(10, 16, 4)
+    assert not hs.due() and hs.due()           # period = 2
+
+
+def test_topk_error_feedback_preserves_mass():
+    """Sparsified + residual == original (error feedback loses nothing)."""
+    t = TopKErrorFeedback(k_frac=0.25)
+    g = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(16,))
+                          .astype(np.float32))}
+    sparse, resid = t.compress(g)
+    np.testing.assert_allclose(
+        np.asarray(sparse["w"], np.float32) + np.asarray(resid["w"]),
+        np.asarray(g["w"]), rtol=1e-6)
+    nz = int((np.asarray(sparse["w"]) != 0).sum())
+    assert nz == 4

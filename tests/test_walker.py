@@ -1,0 +1,92 @@
+"""Batched walk engine: termination, path validity, mode equivalence,
+message accounting (paper §2.3/§3.1 claims)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.mpgp import mpgp_partition
+from repro.core.transition import make_policy
+from repro.core.walker import WalkSpec, run_walk_batch, walks_to_numpy
+
+
+def _run(graph, spec, n=32, seed=0, part=None):
+    graph = graph.with_edge_cm()
+    sources = jnp.arange(n, dtype=jnp.int32) % graph.num_nodes
+    key = jax.random.PRNGKey(seed)
+    policy = make_policy("huge")
+    part_j = jnp.asarray(part) if part is not None else None
+    return run_walk_batch(graph, sources, key, policy, spec, part_j)
+
+
+def test_walks_terminate_and_paths_are_edges(small_graph):
+    spec = WalkSpec(max_len=48, min_len=8, info_mode="incom", reg_start=16)
+    st = _run(small_graph, spec)
+    paths, lengths = walks_to_numpy(st)
+    assert not bool(np.asarray(st.active).any())
+    indptr = np.asarray(small_graph.indptr)
+    indices = np.asarray(small_graph.indices)
+    for row, ln in zip(paths, lengths):
+        assert 1 <= ln <= spec.max_len
+        for a, b in zip(row[: ln - 1], row[1:ln]):
+            assert b in indices[indptr[a]: indptr[a + 1]], (a, b)
+        assert (row[ln:] == -1).all()
+
+
+def test_fixed_mode_walks_have_fixed_length(small_graph):
+    spec = WalkSpec(max_len=20, info_mode="fixed", fixed_len=20)
+    st = _run(small_graph, spec)
+    _, lengths = walks_to_numpy(st)
+    # dead-end lanes may stop early; all others must hit exactly fixed_len
+    deg = np.diff(np.asarray(small_graph.indptr))
+    assert (lengths == 20).mean() > 0.9
+
+
+def test_incom_and_fullpath_modes_agree_on_h(small_graph):
+    """The O(1) and O(L) information paths are the same mathematics: with
+    identical RNG they accept identical nodes and produce identical H."""
+    kw = dict(max_len=32, min_len=6, mu=0.995, reg_start=1)
+    st_inc = _run(small_graph, WalkSpec(info_mode="incom", **kw), seed=3)
+    st_ful = _run(small_graph, WalkSpec(info_mode="fullpath", **kw), seed=3)
+    p1, l1 = walks_to_numpy(st_inc)
+    p2, l2 = walks_to_numpy(st_ful)
+    np.testing.assert_array_equal(l1, l2)
+    np.testing.assert_array_equal(p1, p2)
+    np.testing.assert_allclose(np.asarray(st_inc.info.H),
+                               np.asarray(st_ful.info.H), atol=1e-3)
+
+
+def test_message_bytes_constant_vs_linear(medium_graph):
+    """Example 1: InCoM messages are constant 80 B; HuGE-D's grow as
+    24 + 8L. At routine walk lengths (L -> 40..80) the full-path message is
+    several x larger. (With very SHORT adaptive walks the crossover runs the
+    other way — crossings at L < 7 cost < 80 B — which is why the engine
+    measures both; see EXPERIMENTS.md.)"""
+    part = mpgp_partition(medium_graph, 4, gamma=2.0).assignment
+    # mu = -1 disables early termination: walks run to max_len (routine).
+    kw = dict(max_len=40, min_len=8, mu=-1.0, reg_start=16)
+    st_inc = _run(medium_graph, WalkSpec(info_mode="incom", **kw),
+                  n=64, seed=1, part=part)
+    st_ful = _run(medium_graph, WalkSpec(info_mode="fullpath", **kw),
+                  n=64, seed=1, part=part)
+    assert int(st_inc.msg_count) > 0 and int(st_ful.msg_count) > 0
+    per_inc = float(st_inc.msg_bytes) / int(st_inc.msg_count)
+    per_ful = float(st_ful.msg_bytes) / int(st_ful.msg_count)
+    assert per_inc == pytest.approx(80.0)
+    assert per_ful > per_inc
+    # at L = 80 the ratio reaches 8.3x (Example 1)
+    from repro.core import incom
+    assert float(incom.fullpath_msg_bytes(jnp.int32(80))) / 80.0 \
+        == pytest.approx(8.3, abs=0.1)
+
+
+def test_partition_locality_reduces_crossings(medium_graph):
+    """MPGP vs hash partition: fewer cross-machine messages (Fig. 10c)."""
+    from repro.core.mpgp import hash_partition
+    spec = WalkSpec(max_len=32, min_len=8, info_mode="incom", reg_start=16)
+    part_m = mpgp_partition(medium_graph, 4, gamma=2.0).assignment
+    part_h = hash_partition(medium_graph, 4).assignment
+    st_m = _run(medium_graph, spec, n=128, seed=5, part=part_m)
+    st_h = _run(medium_graph, spec, n=128, seed=5, part=part_h)
+    assert int(st_m.msg_count) < int(st_h.msg_count)
