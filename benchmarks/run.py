@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
 import traceback
@@ -32,6 +33,62 @@ BENCHES = {
     "classification": classification.run,     # Fig. 9
 }
 
+REPO_ROOT = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _walk_summary() -> dict:
+    """Walker supersteps/s + cross-partition message volume on a small
+    partitioned corpus — the walk half of the BENCH_train trajectory."""
+    import numpy as np
+    import jax
+    from repro.core.transition import make_policy
+    from repro.core.walker import WalkSpec, batch_stats, run_walk_batch
+    from repro.graph.generators import rmat_graph
+
+    g = rmat_graph(2048, 10, seed=3).with_edge_cm()
+    part = np.arange(g.num_nodes) % 4
+    spec = WalkSpec(max_len=80, min_len=8, mu=0.995, info_mode="incom",
+                    reg_start=16)
+    sources = np.arange(512, dtype=np.int32) % g.num_nodes
+    policy = make_policy("huge")
+    import jax.numpy as jnp
+    part_dev = jnp.asarray(part, jnp.int32)
+    st = run_walk_batch(g, jnp.asarray(sources), jax.random.PRNGKey(0),
+                        policy, spec, part_dev)
+    jax.block_until_ready(st.path)                        # compile + warm
+    best = float("inf")
+    for r in range(3):
+        t0 = time.time()
+        st = run_walk_batch(g, jnp.asarray(sources), jax.random.PRNGKey(r),
+                            policy, spec, part_dev)
+        jax.block_until_ready(st.path)
+        best = min(best, time.time() - t0)
+    stats = batch_stats(st)
+    return {
+        "supersteps_per_s": stats["supersteps"] / best,
+        "msg_count": stats["msg_count"],
+        "msg_bytes": stats["msg_bytes"],
+    }
+
+
+def _emit_bench_train(train_rec: dict) -> None:
+    """Repo-root BENCH_train.json: train + walk efficiency trajectory so
+    perf regressions are visible in review from this PR onward."""
+    bench = {
+        "train": {
+            "steps_per_s_fused": train_rec.get("steps_per_s_fused"),
+            "steps_per_s_seed": train_rec.get("steps_per_s_seed"),
+            "speedup_fused_vs_seed": train_rec.get("speedup_fused_vs_seed"),
+            "residency_nodes": train_rec.get("residency_nodes"),
+            "nodes_per_s": train_rec.get("nodes_per_s"),
+        },
+        "walk": _walk_summary(),
+    }
+    path = os.path.join(REPO_ROOT, "BENCH_train.json")
+    with open(path, "w") as f:
+        json.dump(bench, f, indent=1, default=float)
+    print(f"wrote {path}", flush=True)
+
 
 def main() -> int:
     p = argparse.ArgumentParser()
@@ -52,6 +109,8 @@ def main() -> int:
                        if isinstance(v, (int, float, str))}
             print(f"    done in {dt:.1f}s :: "
                   f"{json.dumps(summary, default=float)[:300]}", flush=True)
+            if name == "train_efficiency" and args.only == name:
+                _emit_bench_train(rec)
         except Exception as e:
             failures += 1
             print(f"    FAILED: {type(e).__name__}: {e}", flush=True)

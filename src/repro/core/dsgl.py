@@ -14,11 +14,21 @@ other walks — turning K+1 dot products into one (W·2w) x (W+K) level-3
 matmul per position (MXU-shaped).
 
 Improvement-III (hotness-block synchronization) lives in
-``repro.core.sync`` and is driven from ``train_dsgl``.
+``repro.core.sync`` and is fused into ``train_chunk``; the shard_map/psum
+form is ``repro.dist.collectives.hotness_sync_spmd``.
+
+Device residency: the whole training hot path runs inside ONE jit per
+chunk of ``sync_period`` lifetimes — negatives are drawn on-device from a
+precomputed Vose alias table (``AliasTable``), the shard replicas are a
+leading array axis processed together (no Python loop over replicas), the
+chunk is a ``lax.scan`` over lifetimes with the embedding matrices donated,
+and the write-back scatter-averages straight into the donated matrices
+without materializing any dense (N, d) temporary.
 
 Race semantics: as in the paper (Hogwild heritage), duplicate rows inside a
-lifetime and across shards are updated without locks; deltas are
-scatter-added on write-back.
+lifetime and across shards are updated without locks; duplicate buffer rows
+of one batch are AVERAGED on write-back (summing would multiply a hub
+node's step by its duplicate count and diverge — see ``_scatter_average``).
 """
 
 from __future__ import annotations
@@ -45,7 +55,8 @@ class DSGLConfig:
     lr: float = 0.025
     min_lr: float = 1e-4
     neg_power: float = 0.75     # unigram^0.75 negative-sampling distribution
-    sync_period: int = 50       # lifetimes between hotness syncs
+    sync_period: int = 50       # lifetimes between hotness syncs (also the
+                                # lax.scan chunk fused into one dispatch)
     seed: int = 0
     use_kernel: bool = False    # route the inner update through Pallas sgns
 
@@ -59,8 +70,15 @@ def init_embeddings(
     return phi_in, phi_out
 
 
+# ---------------------------------------------------------------------------
+# Negative sampling
+# ---------------------------------------------------------------------------
+
+
 def negative_table(ocn_sorted: np.ndarray, power: float) -> np.ndarray:
-    """Cumulative unigram^power distribution over frequency ranks."""
+    """Cumulative unigram^power distribution over frequency ranks (the
+    host-side CDF form — kept as the distribution oracle the on-device
+    alias table is tested against)."""
     w = np.asarray(ocn_sorted, dtype=np.float64) ** power
     if w.sum() == 0:
         w = np.ones_like(w)
@@ -72,8 +90,71 @@ def negative_table(ocn_sorted: np.ndarray, power: float) -> np.ndarray:
 def sample_negatives(
     cdf: np.ndarray, shape: Tuple[int, ...], rng: np.random.Generator
 ) -> np.ndarray:
+    """Host-side CDF inversion (numpy searchsorted) — oracle/baseline only;
+    the training hot path samples on-device via ``sample_alias``."""
     u = rng.random(shape)
     return np.searchsorted(cdf, u).astype(np.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class AliasTable:
+    """Vose alias table over frequency ranks: O(1) on-device draws.
+
+    ``prob[i]`` is the acceptance probability of slot i, ``alias[i]`` the
+    fallback rank — one uniform slot + one uniform accept/reject per draw,
+    all inside jit (vs the host searchsorted + re-upload per step of the
+    CDF path)."""
+
+    prob: jax.Array    # (n,) f32
+    alias: jax.Array   # (n,) i32
+
+    def tree_flatten(self):
+        return (self.prob, self.alias), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    AliasTable,
+    lambda t: t.tree_flatten(),
+    AliasTable.tree_unflatten,
+)
+
+
+def build_alias_table(ocn_sorted: np.ndarray, power: float) -> AliasTable:
+    """Vose's algorithm over the unigram^power weights (host, build-once)."""
+    w = np.asarray(ocn_sorted, dtype=np.float64) ** power
+    if w.sum() == 0:
+        w = np.ones_like(w)
+    n = len(w)
+    scaled = w / w.sum() * n
+    prob = np.ones(n, dtype=np.float64)
+    alias = np.arange(n, dtype=np.int64)
+    small = [i for i in range(n) if scaled[i] < 1.0]
+    large = [i for i in range(n) if scaled[i] >= 1.0]
+    while small and large:
+        s, l = small.pop(), large.pop()
+        prob[s] = scaled[s]
+        alias[s] = l
+        scaled[l] = (scaled[l] + scaled[s]) - 1.0
+        (small if scaled[l] < 1.0 else large).append(l)
+    for i in small + large:   # numerical leftovers: accept always
+        prob[i] = 1.0
+    return AliasTable(prob=jnp.asarray(prob, jnp.float32),
+                      alias=jnp.asarray(alias, jnp.int32))
+
+
+def sample_alias(
+    table: AliasTable, key: jax.Array, shape: Tuple[int, ...]
+) -> jax.Array:
+    """Draw int32 ranks ~ unigram^power, fully on-device / jit-safe."""
+    n = table.prob.shape[0]
+    k_slot, k_acc = jax.random.split(key)
+    slot = jax.random.randint(k_slot, shape, 0, n, dtype=jnp.int32)
+    u = jax.random.uniform(k_acc, shape, jnp.float32)
+    return jnp.where(u < table.prob[slot], slot, table.alias[slot])
 
 
 # ---------------------------------------------------------------------------
@@ -81,6 +162,50 @@ def sample_negatives(
 # The math lives in repro.kernels.sgns: ref.py is the pure-jnp oracle and
 # kernel.py the fused Pallas version; both share one source of truth.
 # ---------------------------------------------------------------------------
+
+
+def _lifetime_math(ctx0, out0, neg0, valid, lr, window: int, use_kernel: bool):
+    """Run the fused per-lifetime update on gathered (G, ...) buffers."""
+    if use_kernel:
+        from repro.kernels.sgns import ops as sgns_ops
+        return sgns_ops.sgns_lifetime_batch(ctx0, out0, neg0, valid, lr, window)
+    from repro.kernels.sgns import ref as sgns_ref
+    return sgns_ref.sgns_lifetime_batch_ref(ctx0, out0, neg0, valid, lr, window)
+
+
+def _scatter_average(base, ids, deltas, mask):
+    """base.at[ids].add of duplicate-averaged deltas, allocation-free.
+
+    Duplicate buffer rows of the same embedding row (hub nodes appear in
+    many walks of one batch — power-law!) are AVERAGED, not summed: each
+    occurrence contributes delta / count(row). Equivalent to the dense
+    scatter-mean (sum then divide) but touches only the scattered rows of
+    the donated ``base`` — no (N, d) zero temporary, no dense divide."""
+    n_rows = base.shape[0]
+    ones = jnp.where(mask, 1.0, 0.0)
+    cnt = jnp.zeros((n_rows,), jnp.float32).at[ids].add(ones)
+    inv = jnp.where(mask, 1.0 / jnp.maximum(cnt[ids], 1.0), 0.0)
+    return base.at[ids].add(deltas * inv[:, None])
+
+
+def _write_back(phi_in, phi_out, safe_walks, negs, valid,
+                ctx_buf, ctx0, out_buf, out0, neg_buf, neg0):
+    """Scatter the buffer deltas of one replica back into its matrices."""
+    flat_ids = safe_walks.reshape(-1)
+    d_in = (ctx_buf - ctx0).reshape(flat_ids.shape[0], -1)
+    d_out = (out_buf - out0).reshape(flat_ids.shape[0], -1)
+    mask = valid.reshape(-1)
+    neg_ids = negs.reshape(-1)
+    d_neg = (neg_buf - neg0).reshape(neg_ids.shape[0], -1)
+
+    phi_in = _scatter_average(phi_in, flat_ids, d_in, mask)
+    # phi_out receives deltas from both walk-token rows and negative rows;
+    # average across the union so a hot node's total step stays bounded.
+    out_ids = jnp.concatenate([flat_ids, neg_ids])
+    out_deltas = jnp.concatenate([d_out, d_neg], axis=0)
+    out_mask = jnp.concatenate([mask, jnp.ones_like(neg_ids, bool)])
+    phi_out = _scatter_average(phi_out, out_ids, out_deltas, out_mask)
+    return phi_in, phi_out
 
 
 @functools.partial(jax.jit, static_argnames=("window", "use_kernel"),
@@ -95,54 +220,99 @@ def lifetime_step(
     use_kernel: bool = False,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Process G lifetimes: gather buffers -> scan -> write back deltas."""
-    g_cnt, w_cnt, t_len = walks.shape
     safe_walks = jnp.maximum(walks, 0)
     valid = walks >= 0
 
-    ctx_buf0 = phi_in[safe_walks]                          # (G, W, T, d)
-    out_buf0 = phi_out[safe_walks]                         # (G, W, T, d)
-    neg_buf0 = phi_out[negs]                               # (G, T, K, d)
+    ctx0 = phi_in[safe_walks]                          # (G, W, T, d)
+    out0 = phi_out[safe_walks]                         # (G, W, T, d)
+    neg0 = phi_out[negs]                               # (G, T, K, d)
 
-    if use_kernel:
-        from repro.kernels.sgns import ops as sgns_ops
-        ctx_buf, out_buf, neg_buf, loss = sgns_ops.sgns_lifetime_batch(
-            ctx_buf0, out_buf0, neg_buf0, valid, lr, window
-        )
-    else:
-        from repro.kernels.sgns import ref as sgns_ref
-        ctx_buf, out_buf, neg_buf, loss = sgns_ref.sgns_lifetime_batch_ref(
-            ctx_buf0, out_buf0, neg_buf0, valid, lr, window
-        )
-
-    # Write-back: duplicate buffer rows of the same embedding row (hub nodes
-    # appear in many walks of one batch — power-law!) are AVERAGED, not
-    # summed. Summing multiplies a hot row's step by its duplicate count and
-    # diverges exponentially; averaging is the parallel-SGD semantics of the
-    # paper's racy cross-thread write-back, and is stable.
-    n_rows = phi_in.shape[0]
-    flat_ids = safe_walks.reshape(-1)
-    d_in = (ctx_buf - ctx_buf0).reshape(flat_ids.shape[0], -1)
-    d_out = (out_buf - out_buf0).reshape(flat_ids.shape[0], -1)
-    mask = valid.reshape(-1)
-    neg_ids = negs.reshape(-1)
-    d_neg = (neg_buf - neg_buf0).reshape(neg_ids.shape[0], -1)
-
-    def scatter_mean(base, ids, deltas, m):
-        ones = jnp.where(m, 1.0, 0.0)
-        cnt = jnp.zeros((n_rows,), jnp.float32).at[ids].add(ones)
-        summed = jnp.zeros_like(base).at[ids].add(
-            jnp.where(m[:, None], deltas, 0.0)
-        )
-        return base + summed / jnp.maximum(cnt, 1.0)[:, None]
-
-    phi_in = scatter_mean(phi_in, flat_ids, d_in, mask)
-    # phi_out receives deltas from both walk-token rows and negative rows;
-    # average across the union so a hot node's total step stays bounded.
-    out_ids = jnp.concatenate([flat_ids, neg_ids])
-    out_deltas = jnp.concatenate([d_out, d_neg], axis=0)
-    out_mask = jnp.concatenate([mask, jnp.ones_like(neg_ids, bool)])
-    phi_out = scatter_mean(phi_out, out_ids, out_deltas, out_mask)
+    ctx_buf, out_buf, neg_buf, loss = _lifetime_math(
+        ctx0, out0, neg0, valid, lr, window, use_kernel)
+    phi_in, phi_out = _write_back(
+        phi_in, phi_out, safe_walks, negs, valid,
+        ctx_buf, ctx0, out_buf, out0, neg_buf, neg0)
     return phi_in, phi_out, jnp.sum(loss)
+
+
+# ---------------------------------------------------------------------------
+# Fused multi-lifetime chunk over stacked shard replicas
+# ---------------------------------------------------------------------------
+
+
+def _replica_step(phi_in, phi_out, walks, negs, lr, window: int,
+                  use_kernel: bool):
+    """One lifetime batch over STACKED replicas: phi (S, N, d),
+    walks (S, G, W, T), negs (S, G, T, K). The shard axis is merged into
+    the group axis for the math (one kernel launch for all replicas) and
+    vmapped for the per-replica gathers / write-backs."""
+    s_cnt, g_cnt, w_cnt, t_len = walks.shape
+    safe_walks = jnp.maximum(walks, 0)
+    valid = walks >= 0
+
+    gather = jax.vmap(lambda table, ids: table[ids])
+    ctx0 = gather(phi_in, safe_walks)                  # (S, G, W, T, d)
+    out0 = gather(phi_out, safe_walks)
+    neg0 = gather(phi_out, negs)                       # (S, G, T, K, d)
+
+    dim = ctx0.shape[-1]
+    k_neg = neg0.shape[-2]
+    merge = lambda a, *tail: a.reshape(s_cnt * g_cnt, *tail)
+    ctx_buf, out_buf, neg_buf, loss = _lifetime_math(
+        merge(ctx0, w_cnt, t_len, dim), merge(out0, w_cnt, t_len, dim),
+        merge(neg0, t_len, k_neg, dim), merge(valid, w_cnt, t_len),
+        lr, window, use_kernel)
+    unmerge = lambda a: a.reshape(s_cnt, g_cnt, *a.shape[1:])
+
+    phi_in, phi_out = jax.vmap(_write_back)(
+        phi_in, phi_out, safe_walks, negs, valid,
+        unmerge(ctx_buf), ctx0, unmerge(out_buf), out0,
+        unmerge(neg_buf), neg0)
+    return phi_in, phi_out, loss.reshape(s_cnt, g_cnt).sum(axis=1)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "negatives", "use_kernel", "sync"),
+    donate_argnums=(0, 1))
+def train_chunk(
+    phi_in: jax.Array,        # (S, N, d) stacked replica matrices (donated)
+    phi_out: jax.Array,       # (S, N, d) (donated)
+    walks: jax.Array,         # (C, S, G, W, T) int32 — C lifetimes fused
+    neg_table: AliasTable,    # on-device alias table
+    sync_rows: jax.Array,     # (R,) int32 sampled hotness rows
+    key: jax.Array,           # PRNG key for the chunk's negative draws
+    lrs: jax.Array,           # (C,) f32 per-lifetime learning rates
+    window: int,
+    negatives: int,
+    use_kernel: bool = False,
+    sync: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """The device-resident hot path: scan C lifetimes in ONE dispatch.
+
+    Negatives are drawn on-device inside the scan (no per-step host
+    sampling or H2D), the shard-replica axis is processed by one merged
+    kernel launch per step, and when ``sync`` is set the chunk ends with
+    the Improvement-III hotness-row exchange across the replica axis.
+    Returns (phi_in', phi_out', losses (C, S))."""
+    s_cnt = phi_in.shape[0]
+    _, _, g_cnt, _, t_len = walks.shape
+
+    def step(carry, inp):
+        pi, po, k = carry
+        wb, lr = inp
+        k, sub = jax.random.split(k)
+        negs = sample_alias(neg_table, sub, (s_cnt, g_cnt, t_len, negatives))
+        pi, po, loss = _replica_step(pi, po, wb, negs, lr, window, use_kernel)
+        return (pi, po, k), loss
+
+    (phi_in, phi_out, _), losses = jax.lax.scan(
+        step, (phi_in, phi_out, key), (walks, lrs))
+
+    if sync and s_cnt > 1:
+        from repro.core.sync import hotness_sync_stacked
+        phi_in, phi_out = hotness_sync_stacked(phi_in, phi_out, sync_rows)
+    return phi_in, phi_out, losses
 
 
 # ---------------------------------------------------------------------------
@@ -176,66 +346,65 @@ def train_dsgl(
     """Train Skip-Gram embeddings over the corpus (rank space).
 
     ``num_shards`` > 1 runs the paper's distributed regime: the corpus is
-    split across shard replicas, each trains locally, and replicas exchange
-    hotness-block synchronizations every ``cfg.sync_period`` lifetimes
-    (Improvement-III, ``repro.core.sync``). Returns (phi_in, phi_out) in
-    RANK space (row 0 = hottest node); use ``order.to_rank`` to map ids.
+    split across shard replicas — a leading axis of the stacked embedding
+    matrices, trained together inside the jitted chunk — and replicas
+    exchange hotness-block synchronizations every ``cfg.sync_period``
+    lifetimes (Improvement-III). Returns (phi_in, phi_out) in RANK space
+    (row 0 = hottest node); use ``order.to_rank`` to map ids.
     """
     from repro.core import sync as sync_mod
 
     n = len(order.to_rank)
     walks_rank = order.relabel_walks(corpus.walks)
-    cdf = negative_table(order.sorted_ocn, cfg.neg_power)
+    neg_table = build_alias_table(order.sorted_ocn, cfg.neg_power)
     rng = np.random.default_rng(cfg.seed)
     key = jax.random.PRNGKey(cfg.seed)
 
-    # Per-shard replicas (num_shards == 1 -> plain single training).
-    replicas = []
-    for s in range(num_shards):
-        key, k = jax.random.split(key)
-        replicas.append(init_embeddings(n, cfg.dim, k))
+    keys = jax.random.split(key, num_shards + 1)
+    key = keys[0]
+    replicas = [init_embeddings(n, cfg.dim, k) for k in keys[1:]]
+    phi_in = jnp.stack([r[0] for r in replicas])       # (S, N, d)
+    phi_out = jnp.stack([r[1] for r in replicas])
 
     shard_walks = [walks_rank[s::num_shards] for s in range(num_shards)]
     starts, ends = order.hotness_blocks()
     metrics = {"loss": [], "sync_bytes": 0.0, "steps": 0}
+    do_sync = num_shards > 1
+    chunk = max(cfg.sync_period, 1)
 
-    t_len = walks_rank.shape[1]
     for epoch in range(cfg.epochs):
         batches = [
             _group_walks(sw, cfg.multi_windows, cfg.batch_groups, rng)
             for sw in shard_walks
         ]
         n_steps = min(b.shape[0] for b in batches)
+        stacked = np.stack([b[:n_steps] for b in batches], axis=1)
         total = max(cfg.epochs * n_steps, 1)
-        for step in range(n_steps):
-            frac = (epoch * n_steps + step) / total
-            lr = jnp.float32(max(cfg.lr * (1 - frac), cfg.min_lr))
-            for s in range(num_shards):
-                phi_in, phi_out = replicas[s]
-                wb = jnp.asarray(batches[s][step])
-                neg = jnp.asarray(
-                    sample_negatives(cdf, (cfg.batch_groups, t_len, cfg.negatives), rng)
-                )
-                phi_in, phi_out, loss = lifetime_step(
-                    phi_in, phi_out, wb, neg, lr, cfg.window, cfg.use_kernel
-                )
-                replicas[s] = (phi_in, phi_out)
-                if collect_metrics:
-                    metrics["loss"].append(float(loss))
-            metrics["steps"] += 1
-            if num_shards > 1 and (step + 1) % cfg.sync_period == 0:
-                replicas, nbytes = sync_mod.hotness_block_sync(
-                    replicas, starts, ends, rng
-                )
-                metrics["sync_bytes"] += nbytes
+        for c0 in range(0, n_steps, chunk):
+            c1 = min(c0 + chunk, n_steps)
+            fracs = (epoch * n_steps + np.arange(c0, c1)) / total
+            lrs = jnp.asarray(
+                np.maximum(cfg.lr * (1.0 - fracs), cfg.min_lr), jnp.float32)
+            wb = jnp.asarray(stacked[c0:c1])           # ONE H2D per chunk
+            rows = (jnp.asarray(
+                sync_mod.sample_hotness_rows(starts, ends, rng), jnp.int32)
+                if do_sync else jnp.zeros(0, jnp.int32))
+            key, sub = jax.random.split(key)
+            phi_in, phi_out, losses = train_chunk(
+                phi_in, phi_out, wb, neg_table, rows, sub, lrs,
+                cfg.window, cfg.negatives, cfg.use_kernel, do_sync)
+            metrics["steps"] += c1 - c0
+            if do_sync:
+                metrics["sync_bytes"] += float(
+                    rows.size * cfg.dim * 4 * num_shards * 2)
+            if collect_metrics:
+                metrics["loss"].extend(
+                    float(v) for v in np.asarray(losses).reshape(-1))
 
     if num_shards > 1:
-        replicas, nbytes = sync_mod.hotness_block_sync(replicas, starts, ends, rng)
-        metrics["sync_bytes"] += nbytes
-        phi_in = jnp.mean(jnp.stack([r[0] for r in replicas]), axis=0)
-        phi_out = jnp.mean(jnp.stack([r[1] for r in replicas]), axis=0)
+        phi_in, phi_out = jnp.mean(phi_in, axis=0), jnp.mean(phi_out, axis=0)
     else:
-        phi_in, phi_out = replicas[0]
+        phi_in, phi_out = phi_in[0], phi_out[0]
 
     if collect_metrics:
         return phi_in, phi_out, metrics

@@ -14,8 +14,11 @@ averages exactly those rows across all shard replicas:
 ``full_sync`` is the baseline the paper compares against. Both return the
 byte volume they moved so benchmarks can reproduce the §4.2-III claim.
 
-This module is the *logical* (replica-list) form used by trainers and
-benchmarks anywhere; ``repro.dist.collectives`` provides the shard_map/psum
+This module holds the *logical* forms: the replica-list API used by
+benchmarks and tests, and ``hotness_sync_stacked`` — the same exchange over
+a stacked (S, N, d) replica axis, pure jnp and jit-safe, which is what
+``core.dsgl.train_chunk`` fuses into the training dispatch.
+``repro.dist.collectives.hotness_sync_spmd`` provides the shard_map/psum
 form of the same exchange for the SPMD dry-run.
 """
 
@@ -66,6 +69,21 @@ def hotness_block_sync(
     dim = int(replicas[0][0].shape[1])
     nbytes = float(rows.size * dim * 4 * m * 2)
     return new_replicas, nbytes
+
+
+def hotness_sync_stacked(
+    phi_in: jax.Array,     # (S, N, d) stacked replica matrices
+    phi_out: jax.Array,    # (S, N, d)
+    rows: jax.Array,       # (R,) int32 sampled hotness rows
+) -> Tuple[jax.Array, jax.Array]:
+    """Average the sampled rows across the leading replica axis and write
+    them back into every replica — the jit-fusable form of
+    ``hotness_block_sync`` (called from inside ``dsgl.train_chunk``)."""
+    def exchange(phi):
+        mean_rows = jnp.mean(phi[:, rows], axis=0)         # (R, d)
+        return phi.at[:, rows].set(
+            jnp.broadcast_to(mean_rows, (phi.shape[0],) + mean_rows.shape))
+    return exchange(phi_in), exchange(phi_out)
 
 
 def full_sync(replicas: List[Replica]) -> Tuple[List[Replica], float]:

@@ -19,7 +19,7 @@ import dataclasses
 import queue
 import threading
 import time
-from typing import Callable, Dict, Iterator, Optional
+from typing import Callable, Dict, Iterator, Optional, Sequence
 
 import numpy as np
 
@@ -90,6 +90,23 @@ class WalkCorpusStream:
         sel = order[lo:lo + per]
         return self.walks[sel].reshape(
             self.group_size, self.multi_windows, self.walks.shape[1])
+
+    def chunk_at(self, epoch: int, step: int, chunk: int) -> np.ndarray:
+        """``chunk`` consecutive batches stacked to (C, G, W, T) — the unit
+        the device-resident trainer uploads ONCE per fused-scan dispatch
+        (``core.dsgl.train_chunk``) instead of once per lifetime."""
+        return np.stack(
+            [self.batch_at(epoch, step + c) for c in range(chunk)])
+
+
+def stacked_shard_chunk(
+    streams: "Sequence[WalkCorpusStream]", epoch: int, step: int, chunk: int
+) -> np.ndarray:
+    """Chunks from every shard's stream stacked to (C, S, G, W, T) — the
+    replica-axis layout ``train_chunk`` consumes (shard s trains on its own
+    corpus slice; the leading C axis is the fused lax.scan)."""
+    return np.stack(
+        [s.chunk_at(epoch, step, chunk) for s in streams], axis=1)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,23 @@
+"""repro.dist — the SPMD distribution layer.
+
+Four small modules, one contract each:
+
+* ``sharding``    — PartitionSpec vocabulary (batch/model axes) and spec
+                    resolution against a concrete mesh (drop missing axes,
+                    drop non-divisible dims) -> NamedSharding trees.
+* ``context``     — an ambient (mesh, seq_shard) context so model code can
+                    pin activations / scan inputs / grad trees without
+                    threading a mesh argument through every layer.
+* ``collectives`` — shard_map/psum forms of the paper's exchanges: the
+                    hotness-block embedding sync (§4.2-III) and a top-k
+                    compressed all-reduce with error feedback.
+* ``pipeline``    — GPipe-style microbatch pipeline over a mesh axis
+                    (ppermute ring), used by the pipeline-parallel configs.
+
+Everything here is importable on a single CPU device: specs resolve to
+no-op shardings and the context helpers are identity when no mesh is
+active, so the same model code runs from laptop tests to the 512-chip
+dry-run unchanged.
+"""
+
+from repro.dist import collectives, context, pipeline, sharding  # noqa: F401

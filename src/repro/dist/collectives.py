@@ -1,0 +1,72 @@
+"""shard_map/psum forms of the paper's cross-replica exchanges.
+
+``hotness_sync_spmd`` is the SPMD realization of §4.2-III: every device
+holds its own replica of the frequency-ordered embedding matrices; one sync
+period averages exactly the sampled hotness rows across the replica axis
+(O(blocks · d · m) bytes, not O(|V| · d · m)). ``repro.core.sync`` holds
+the logical replica-list form with identical semantics.
+
+``compressed_allreduce`` is a top-|g| sparsified all-reduce with error
+feedback (residual carried to the next step) — the gradient-volume analogue
+of the hotness idea, available to the LM training configs.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def hotness_sync_spmd(
+    phi_in: jax.Array,    # (N, d) f32 — this replica's matrix (replicated spec)
+    phi_out: jax.Array,   # (N, d) f32
+    rows: jax.Array,      # (R,) int32 sampled hotness rows
+    mesh: Mesh,
+    axis: str,
+) -> Tuple[jax.Array, jax.Array, float]:
+    """Average the sampled rows across the ``axis`` replicas and write them
+    back into both matrices. Returns (phi_in', phi_out', bytes_moved)."""
+    m = int(mesh.shape[axis])
+
+    def body(pi, po, r):
+        mean_in = jax.lax.pmean(pi[r], axis)
+        mean_out = jax.lax.pmean(po[r], axis)
+        return pi.at[r].set(mean_in), po.at[r].set(mean_out)
+
+    pi2, po2 = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), P(), P()), out_specs=(P(), P()),
+        check_rep=False,
+    )(phi_in, phi_out, rows)
+    dim = int(phi_in.shape[-1])
+    nbytes = float(int(rows.shape[0]) * dim * 4 * m * 2)
+    return pi2, po2, nbytes
+
+
+def compressed_allreduce(
+    grad: jax.Array,      # per-shard gradient block
+    error: jax.Array,     # per-shard error-feedback residual (same shape)
+    ratio: float,         # fraction of entries to keep (0 < ratio <= 1)
+    axis: str,
+) -> Tuple[jax.Array, jax.Array]:
+    """Top-k sparsified all-reduce with error feedback.
+
+    Must be called INSIDE shard_map: keeps the largest-|.| ``ratio`` fraction
+    of (grad + error), pmeans only those entries across ``axis``, and returns
+    the dense synced result plus the residual to carry forward. The sparse
+    part + residual always equals grad + error exactly (no signal is lost,
+    only delayed)."""
+    acc = grad + error
+    flat = acc.reshape(-1)
+    k = max(int(ratio * flat.shape[0]), 1)
+    topk = jax.lax.top_k(jnp.abs(flat), k)[0]
+    thresh = topk[-1]
+    mask = (jnp.abs(flat) >= thresh).astype(acc.dtype).reshape(acc.shape)
+    sparse = acc * mask
+    residual = acc - sparse
+    synced = jax.lax.pmean(sparse, axis)
+    return synced, residual

@@ -1,0 +1,87 @@
+"""Ambient activation-sharding context.
+
+Model code deep inside a scan cannot reasonably thread a mesh argument
+through every layer, so the jit *caller* opens ``activation_sharding(mesh)``
+and the layers call the ``constrain_*`` helpers, which become
+``with_sharding_constraint`` under the active mesh and exact no-ops when no
+mesh is active (single-device tests, benches).
+
+Two layout rules are encoded here:
+
+* **Megatron-SP** (``seq_shard=True``): between blocks, (B, S, d)
+  activations shard the sequence dim over "model" so norms/residuals are
+  TP-parallel; inside attention/FFN the matmuls re-gather as needed.
+* **Scan inputs stay batch-sharded**: a recurrent scan whose per-step
+  slices are sequence-sharded is pathological (every step would be a
+  cross-device slice); ``constrain_scan_inputs`` pins the batch dim to the
+  batch axes and replicates everything else.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.dist.sharding import BATCH_AXES, resolve_spec
+
+_STATE = threading.local()
+
+
+def current_context() -> Optional[Tuple[Mesh, bool]]:
+    return getattr(_STATE, "ctx", None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, seq_shard: bool = True):
+    """Activate (mesh, seq_shard) for all ``constrain_*`` calls below —
+    spanning jit *tracing*, so open it around ``jax.jit(...)`` / ``lower``."""
+    prev = current_context()
+    _STATE.ctx = (mesh, bool(seq_shard))
+    try:
+        yield mesh
+    finally:
+        _STATE.ctx = prev
+
+
+def _constrain(x: jax.Array, spec: P) -> jax.Array:
+    ctx = current_context()
+    if ctx is None:
+        return x
+    mesh, _ = ctx
+    resolved = resolve_spec(spec, mesh, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, resolved))
+
+
+def constrain_activations(x: jax.Array) -> jax.Array:
+    """Pin a (B, S, d) inter-block activation: batch over (pod, data) and —
+    when Megatron-SP is on — sequence over "model"."""
+    ctx = current_context()
+    if ctx is None:
+        return x
+    _, seq_shard = ctx
+    entries: list = [BATCH_AXES] + [None] * (x.ndim - 1)
+    if seq_shard and x.ndim >= 3:
+        entries[1] = "model"
+    return _constrain(x, P(*entries))
+
+
+def constrain_scan_inputs(x: jax.Array, batch_dim: int = 0) -> jax.Array:
+    """Pin a scan input to batch-sharded-only layout so every step slice is
+    device-local (see module docstring)."""
+    if current_context() is None:
+        return x
+    entries: list = [None] * x.ndim
+    entries[batch_dim] = BATCH_AXES
+    return _constrain(x, P(*entries))
+
+
+def constrain_tree(tree: Any, specs: Any) -> Any:
+    """``with_sharding_constraint`` a whole tree (e.g. grads against the
+    param specs during gradient accumulation)."""
+    if current_context() is None:
+        return tree
+    return jax.tree_util.tree_map(_constrain, tree, specs)

@@ -1,0 +1,106 @@
+"""PartitionSpec vocabulary + resolution against a concrete mesh.
+
+The repo writes *production* specs everywhere — batch dims over
+``("pod", "data")``, tensor dims over ``"model"`` — and resolves them at
+jit-boundary time against whatever mesh is actually present. Resolution
+drops axes the mesh does not have (a 1-pod mesh has no "pod" axis) and
+axes that do not divide the dimension they shard, so one spec tree serves
+every mesh from a single CPU device to the 512-chip multi-pod dry-run.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Production tensor-parallel degree: the "model" axis of the v5e pod mesh.
+# Divisibility padding decisions (expert counts, vocab rows) key off this.
+PRODUCTION_MODEL_AXIS = 16
+
+# Every batch-parallel dim composes the pod and data axes so pod count
+# scales purely additively (launch.mesh docstring).
+BATCH_AXES = ("pod", "data")
+
+AxisEntry = Union[None, str, Tuple[str, ...]]
+
+
+def batch_spec(*rest: AxisEntry) -> P:
+    """P((pod, data), *rest) — the canonical batch-leading spec."""
+    return P(BATCH_AXES, *rest)
+
+
+def mesh_axis_size(mesh: Mesh, axis: AxisEntry) -> int:
+    """Total device count behind an axis entry (None -> 1, tuples multiply).
+    Axes the mesh lacks count as 1, mirroring ``resolve_spec``'s drop."""
+    if axis is None:
+        return 1
+    if isinstance(axis, str):
+        return int(mesh.shape.get(axis, 1))
+    return int(np.prod([mesh_axis_size(mesh, a) for a in axis], dtype=np.int64))
+
+
+def _entry_names(entry: AxisEntry) -> Tuple[str, ...]:
+    if entry is None:
+        return ()
+    if isinstance(entry, str):
+        return (entry,)
+    return tuple(entry)
+
+
+def resolve_spec(spec: P, mesh: Mesh,
+                 shape: Optional[Sequence[int]] = None) -> P:
+    """Resolve a production spec against a concrete mesh.
+
+    Per dimension entry: keep only axis names the mesh has; if ``shape`` is
+    given and the surviving axes' total size does not divide that dim, drop
+    the whole entry (replicate) rather than produce an invalid sharding.
+    Single-name tuples collapse to the bare name so resolved specs compare
+    equal to hand-written ones (P("data"), not P(("data",)))."""
+    entries = []
+    for i, entry in enumerate(tuple(spec)):
+        names = [a for a in _entry_names(entry) if a in mesh.shape]
+        if names and shape is not None:
+            total = int(np.prod([mesh.shape[a] for a in names], dtype=np.int64))
+            if int(shape[i]) % total != 0:
+                names = []
+        if not names:
+            entries.append(None)
+        elif len(names) == 1:
+            entries.append(names[0])
+        else:
+            entries.append(tuple(names))
+    return P(*entries)
+
+
+def resolve_specs(tree: Any, mesh: Mesh) -> Any:
+    """``resolve_spec`` over a pytree of PartitionSpecs."""
+    return jax.tree_util.tree_map(
+        lambda s: resolve_spec(s, mesh),
+        tree, is_leaf=lambda s: isinstance(s, P))
+
+
+def _leaf_shape(leaf: Any) -> Tuple[int, ...]:
+    shape = getattr(leaf, "shape", None)
+    if shape is None:
+        shape = np.shape(leaf)
+    return tuple(int(s) for s in shape)
+
+
+def sharding_tree(specs: Any, mesh: Mesh, shapes: Any) -> Any:
+    """Resolve a spec tree against a shape tree -> NamedSharding tree.
+
+    ``specs`` may be a single PartitionSpec (broadcast over every leaf of
+    ``shapes``) or a tree whose P leaves align with the shape leaves —
+    covering both ``sharding_tree(batch_spec("model"), mesh, logits_shape)``
+    and full param/opt trees."""
+    def resolve_leaf(spec: P, leaf: Any) -> NamedSharding:
+        return NamedSharding(mesh, resolve_spec(spec, mesh, _leaf_shape(leaf)))
+
+    if isinstance(specs, P):
+        return jax.tree_util.tree_map(
+            lambda leaf: resolve_leaf(specs, leaf), shapes)
+    return jax.tree_util.tree_map(resolve_leaf, specs, shapes,
+                                  is_leaf=lambda s: isinstance(s, P))

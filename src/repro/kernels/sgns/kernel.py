@@ -32,6 +32,10 @@ from jax.experimental import pallas as pl
 MAX_EXP = 6.0
 
 
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
 def _sgns_kernel(
     ctx_ref,    # (1, W, Tp, d)  phi_in rows, time-padded by w on both sides
     out_ref,    # (1, W, Tp, d)  phi_out rows (same padding)
@@ -120,8 +124,13 @@ def sgns_lifetime_pallas(
     neg: jax.Array,       # (G, T, K, d)
     valid_pad: jax.Array, # (G, W, T+2w) int32
     lr: jax.Array,        # (1, 1) f32
-    *, window: int, t_len: int, interpret: bool = True,
+    *, window: int, t_len: int, interpret: bool | None = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    # Auto-detect like ops.py: compiled on TPU, interpreter elsewhere.
+    # (A literal `interpret=True` default silently ran the interpreter on
+    # TPU for direct callers.)
+    if interpret is None:
+        interpret = not on_tpu()
     g_cnt, w_cnt, t_pad, dim = ctx_pad.shape
     k = neg.shape[2]
     grid = (g_cnt,)

@@ -13,11 +13,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.sgns.kernel import sgns_lifetime_pallas
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+from repro.kernels.sgns.kernel import on_tpu, sgns_lifetime_pallas
 
 
 @functools.partial(jax.jit, static_argnames=("window", "interpret"))
@@ -32,7 +28,7 @@ def sgns_lifetime_batch(
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Fused lifetime update for G groups. Returns (ctx, out, neg, loss(G,))."""
     if interpret is None:
-        interpret = not _on_tpu()
+        interpret = not on_tpu()
     g_cnt, w_cnt, t_len, dim = ctx.shape
     w = window
     pad = ((0, 0), (0, 0), (w, w), (0, 0))

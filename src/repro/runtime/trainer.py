@@ -1,7 +1,8 @@
-"""Fault-tolerant LM trainer: sharded train step, checkpoint/restart,
-failure injection, straggler-mitigated input pipeline.
+"""Fault-tolerant trainers: the LM trainer (sharded step, checkpoint/
+restart, failure injection, straggler-mitigated input pipeline) and the
+device-resident DSGL embedding trainer.
 
-The step function is the same one the dry-run lowers (launch/steps.py);
+The LM step function is the same one the dry-run lowers (launch/steps.py);
 this module adds the *runtime* posture around it:
 
 * step-granular checkpoints (params + opt state + data cursor + RNG),
@@ -11,6 +12,12 @@ this module adds the *runtime* posture around it:
   would drive — resume from the latest checkpoint, replay nothing;
 * data fetches go through ``BackupShardFetcher`` (speculative backup after
   a deadline) so one slow host does not stall the step (straggler policy).
+
+``DSGLTrainer`` is the embedding-side runtime: per-shard walk streams
+assemble (C, S, G, W, T) chunks on a prefetch thread while the device runs
+the previous chunk's fused ``train_chunk`` scan — host work and device
+work overlap, and the device never waits on per-step negative sampling or
+uploads (the NOMAD overlap argument, on one process).
 """
 
 from __future__ import annotations
@@ -158,3 +165,125 @@ class Trainer:
                 restarts += 1
                 if restarts > max_restarts:
                     raise
+
+
+# ---------------------------------------------------------------------------
+# Device-resident DSGL embedding trainer
+# ---------------------------------------------------------------------------
+
+
+class DSGLTrainer:
+    """Chunked, prefetched driver around ``core.dsgl.train_chunk``.
+
+    Host side: one ``WalkCorpusStream`` per shard replica; a ``Prefetcher``
+    thread stacks the next (C, S, G, W, T) chunk while the device runs the
+    current one. Device side: stacked replica matrices stay resident across
+    the whole run — per chunk there is exactly one walk upload, one fused
+    scan over C lifetimes (negatives drawn in-jit from the alias table) and,
+    in the sharded regime, one hotness-row exchange.
+    """
+
+    def __init__(self, walks_rank: np.ndarray, order, cfg,
+                 *, num_shards: int = 1, prefetch_depth: int = 2):
+        from repro.core import sync as sync_mod
+        from repro.core.dsgl import build_alias_table, init_embeddings
+        from repro.data.pipeline import WalkCorpusStream, stacked_shard_chunk
+
+        self.cfg = cfg
+        self.num_shards = num_shards
+        self.order = order
+        self.chunk = max(cfg.sync_period, 1)
+        self.streams = [
+            WalkCorpusStream(
+                walks=walks_rank, group_size=cfg.batch_groups,
+                multi_windows=cfg.multi_windows, seed=cfg.seed,
+                shard_id=s, num_shards=num_shards)
+            for s in range(num_shards)
+        ]
+        self._stack = stacked_shard_chunk
+        self._sync = sync_mod
+        self.starts, self.ends = order.hotness_blocks()
+        self.neg_table = build_alias_table(order.sorted_ocn, cfg.neg_power)
+        self.prefetch_depth = prefetch_depth
+
+        n = len(order.to_rank)
+        key = jax.random.PRNGKey(cfg.seed)
+        keys = jax.random.split(key, num_shards + 1)
+        self.key = keys[0]
+        reps = [init_embeddings(n, cfg.dim, k) for k in keys[1:]]
+        self.phi_in = jnp.stack([r[0] for r in reps])
+        self.phi_out = jnp.stack([r[1] for r in reps])
+
+    def steps_per_epoch(self) -> int:
+        return min(s.steps_per_epoch() for s in self.streams)
+
+    def _lrs(self, global_step: int, count: int, total: int) -> jnp.ndarray:
+        fracs = (global_step + np.arange(count)) / max(total, 1)
+        return jnp.asarray(
+            np.maximum(self.cfg.lr * (1.0 - fracs), self.cfg.min_lr),
+            jnp.float32)
+
+    def run(self) -> Dict[str, Any]:
+        from repro.core.dsgl import train_chunk
+        from repro.data.pipeline import Prefetcher
+
+        cfg = self.cfg
+        spe = self.steps_per_epoch()
+        total = cfg.epochs * spe
+        rng = np.random.default_rng(cfg.seed)
+
+        # Chunk schedule clamped at epoch boundaries (each epoch is its own
+        # shuffle; a chunk must not wrap into re-trained duplicates of the
+        # previous epoch or overrun the configured step count).
+        schedule = [
+            (epoch, step0, min(step0 + self.chunk, spe) - step0)
+            for epoch in range(cfg.epochs)
+            for step0 in range(0, spe, self.chunk)
+        ]
+
+        def fetch(chunk_idx: int) -> np.ndarray:
+            epoch, step0, count = schedule[chunk_idx % len(schedule)]
+            return self._stack(self.streams, epoch, step0, count)
+
+        prefetcher = Prefetcher(fetch, depth=self.prefetch_depth)
+        losses: list = []
+        t0 = time.perf_counter()
+        sync_bytes = 0.0
+        do_sync = self.num_shards > 1
+        try:
+            for c, (epoch, step0, count) in enumerate(schedule):
+                _, chunk_np = prefetcher.next()
+                wb = jnp.asarray(chunk_np)
+                rows = (jnp.asarray(self._sync.sample_hotness_rows(
+                    self.starts, self.ends, rng), jnp.int32)
+                    if do_sync else jnp.zeros(0, jnp.int32))
+                self.key, sub = jax.random.split(self.key)
+                self.phi_in, self.phi_out, loss = train_chunk(
+                    self.phi_in, self.phi_out, wb, self.neg_table, rows, sub,
+                    self._lrs(epoch * spe + step0, count, total),
+                    cfg.window, cfg.negatives, cfg.use_kernel, do_sync)
+                losses.append(loss)
+                if do_sync:
+                    sync_bytes += float(
+                        rows.size * cfg.dim * 4 * self.num_shards * 2)
+        finally:
+            prefetcher.close()
+        jax.block_until_ready(self.phi_in)
+        wall = time.perf_counter() - t0
+        steps = total
+        return {
+            "steps": steps,
+            "steps_per_s": steps / max(wall, 1e-9),
+            "loss": [float(v) for v in
+                     np.concatenate([np.asarray(l).reshape(-1)
+                                     for l in losses])],
+            "sync_bytes": sync_bytes,
+            "wall_s": wall,
+        }
+
+    def embeddings(self):
+        """(phi_in, phi_out) in rank space, replica-averaged."""
+        if self.num_shards > 1:
+            return (jnp.mean(self.phi_in, axis=0),
+                    jnp.mean(self.phi_out, axis=0))
+        return self.phi_in[0], self.phi_out[0]

@@ -6,6 +6,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # dev-only dep (requirements-dev.txt); skip, don't error
 from hypothesis import given, settings, strategies as st
 
 from repro.core import incom, info

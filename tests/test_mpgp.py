@@ -2,6 +2,8 @@
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # dev-only dep (requirements-dev.txt); skip, don't error
 from hypothesis import given, settings, strategies as st
 
 from repro.core.mpgp import (

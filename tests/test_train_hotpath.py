@@ -1,0 +1,293 @@
+"""Device-resident DSGL hot path (no hypothesis dependency — this file
+covers the training pipeline even where dev deps are absent):
+
+* Pallas kernel vs ref.py parity across (window, W, K, T) shapes,
+* alias-table sampler vs CDF-searchsorted distribution equivalence
+  (chi-square tolerance),
+* allocation-free write-back vs the dense scatter-mean oracle on
+  duplicate-heavy batches,
+* train_chunk (fused scan + stacked replicas + in-jit negatives + fused
+  hotness sync) vs the per-step single-replica path,
+* the end-to-end trainer still learns.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sync as sync_mod
+from repro.core.corpus import FrequencyOrder
+from repro.core.dsgl import (
+    DSGLConfig, build_alias_table, init_embeddings, lifetime_step,
+    negative_table, sample_alias, sample_negatives, train_chunk, train_dsgl,
+)
+from repro.kernels.sgns import ops as sg_ops, ref as sg_ref
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel vs pure-jnp oracle across shapes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("window,w_cnt,k_neg,t_len", [
+    (1, 1, 1, 6),
+    (2, 2, 3, 9),
+    (3, 2, 5, 17),
+    (4, 4, 2, 12),
+    (5, 3, 4, 21),
+])
+def test_sgns_kernel_matches_ref_shapes(window, w_cnt, k_neg, t_len):
+    dim, g_cnt = 16, 2
+    key = jax.random.PRNGKey(window * 100 + t_len)
+    ks = jax.random.split(key, 4)
+    ctx = jax.random.normal(ks[0], (g_cnt, w_cnt, t_len, dim)) * 0.1
+    out = jax.random.normal(ks[1], (g_cnt, w_cnt, t_len, dim)) * 0.1
+    neg = jax.random.normal(ks[2], (g_cnt, t_len, k_neg, dim)) * 0.1
+    # ragged validity: walk w of group g ends at a different position
+    lens = jax.random.randint(ks[3], (g_cnt, w_cnt), t_len // 2, t_len + 1)
+    valid = jnp.arange(t_len)[None, None, :] < lens[:, :, None]
+    lr = jnp.float32(0.04)
+    want = sg_ref.sgns_lifetime_batch_ref(ctx, out, neg, valid, lr, window)
+    got = sg_ops.sgns_lifetime_batch(ctx, out, neg, valid, lr, window)
+    for w, g in zip(want[:3], got[:3]):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(got[3]), np.asarray(want[3]),
+                               rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Alias table vs CDF searchsorted
+# ---------------------------------------------------------------------------
+
+def test_alias_table_matches_cdf_distribution():
+    """Chi-square: on-device Vose draws and host searchsorted draws must
+    come from the same unigram^0.75 distribution."""
+    rng = np.random.default_rng(0)
+    ocn = np.sort(rng.zipf(1.8, 64))[::-1].astype(np.int64)
+    cdf = negative_table(ocn, 0.75)
+    table = build_alias_table(ocn, 0.75)
+    n, draws = len(ocn), 200_000
+
+    got = np.asarray(sample_alias(table, jax.random.PRNGKey(1), (draws,)))
+    assert got.dtype == np.int32 and got.min() >= 0 and got.max() < n
+
+    w = ocn.astype(np.float64) ** 0.75
+    p = w / w.sum()
+    counts = np.bincount(got, minlength=n)
+    expected = p * draws
+    chi2 = float(np.sum((counts - expected) ** 2 / np.maximum(expected, 1e-9)))
+    # dof = n - 1 = 63; mean 63, std ~11 — 63 + 5*sigma is a generous but
+    # real bound (a wrong table overshoots by orders of magnitude).
+    assert chi2 < 63 + 5 * np.sqrt(2 * 63), chi2
+
+    # and the host CDF draws pass the same test against the same expectation
+    host = sample_negatives(cdf, (draws,), np.random.default_rng(2))
+    hc = np.bincount(host, minlength=n)
+    chi2_host = float(np.sum((hc - expected) ** 2 / np.maximum(expected, 1e-9)))
+    assert chi2_host < 63 + 5 * np.sqrt(2 * 63), chi2_host
+
+
+def test_alias_table_probability_mass_exact():
+    """The alias table must encode the distribution EXACTLY: summing slot
+    masses recovers unigram^power up to float tolerance."""
+    ocn = np.array([1000, 400, 50, 50, 3, 1], np.int64)
+    t = build_alias_table(ocn, 0.75)
+    prob = np.asarray(t.prob, np.float64)
+    alias = np.asarray(t.alias)
+    n = len(ocn)
+    mass = prob / n
+    for i in range(n):
+        mass[alias[i]] += (1.0 - prob[i]) / n
+    w = ocn.astype(np.float64) ** 0.75
+    np.testing.assert_allclose(mass, w / w.sum(), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Write-back: allocation-free scatter-average vs dense scatter-mean oracle
+# ---------------------------------------------------------------------------
+
+def _dense_scatter_mean(base, ids, deltas, mask):
+    """The seed implementation: two dense (N, d) temporaries per call."""
+    n_rows = base.shape[0]
+    ones = jnp.where(mask, 1.0, 0.0)
+    cnt = jnp.zeros((n_rows,), jnp.float32).at[ids].add(ones)
+    summed = jnp.zeros_like(base).at[ids].add(
+        jnp.where(mask[:, None], deltas, 0.0))
+    return base + summed / jnp.maximum(cnt, 1.0)[:, None]
+
+
+def test_writeback_matches_dense_scatter_mean_on_duplicates():
+    from repro.core.dsgl import _scatter_average
+    rng = np.random.default_rng(3)
+    n, d, rows = 32, 8, 4096
+    base = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    # duplicate-heavy: power-law ids so hub rows appear hundreds of times
+    ids = jnp.asarray(np.minimum(rng.zipf(1.5, rows) - 1, n - 1), jnp.int32)
+    deltas = jnp.asarray(rng.normal(size=(rows, d)), jnp.float32)
+    mask = jnp.asarray(rng.random(rows) < 0.9)
+
+    got = _scatter_average(base, ids, deltas, mask)
+    want = _dense_scatter_mean(base, ids, deltas, mask)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+    # untouched rows must be BITWISE untouched (no dense add over N)
+    touched = np.unique(np.asarray(ids)[np.asarray(mask)])
+    untouched = np.setdiff1d(np.arange(n), touched)
+    np.testing.assert_array_equal(np.asarray(got)[untouched],
+                                  np.asarray(base)[untouched])
+
+
+def test_lifetime_step_moves_only_touched_rows():
+    n, d, k_neg, g, w_cnt, t_len = 64, 8, 3, 2, 2, 12
+    phi_in, phi_out = init_embeddings(n, d, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    walks = rng.integers(0, n // 2, size=(g, w_cnt, t_len)).astype(np.int32)
+    negs = rng.integers(n // 2, n, size=(g, t_len, k_neg)).astype(np.int32)
+    before = np.asarray(phi_in).copy()
+    pin, pout, loss = lifetime_step(
+        phi_in.copy(), phi_out.copy(), jnp.asarray(walks), jnp.asarray(negs),
+        jnp.float32(0.05), 2)
+    untouched = np.setdiff1d(np.arange(n), np.unique(walks))
+    np.testing.assert_array_equal(np.asarray(pin)[untouched],
+                                  before[untouched])
+    assert np.isfinite(float(loss))
+
+
+# ---------------------------------------------------------------------------
+# Fused chunk vs per-step path; stacked replicas; fused hotness sync
+# ---------------------------------------------------------------------------
+
+def test_train_chunk_matches_per_step_path():
+    """One scan chunk with in-jit negatives must reproduce the per-step
+    lifetime_step sequence bit-for-bit given the same negative draws."""
+    n, d, g, w_cnt, t_len, k_neg, window = 48, 8, 3, 2, 10, 3, 2
+    rng = np.random.default_rng(0)
+    walks = rng.integers(0, n, size=(4, 1, g, w_cnt, t_len)).astype(np.int32)
+    walks[0, 0, 0, 0, -3:] = -1                    # ragged padding
+    table = build_alias_table(np.arange(n, 0, -1), 0.75)
+    lrs = jnp.linspace(0.05, 0.01, 4, dtype=jnp.float32)
+    key = jax.random.PRNGKey(7)
+    phi_in, phi_out = init_embeddings(n, d, jax.random.PRNGKey(1))
+
+    got_in, got_out, losses = train_chunk(
+        phi_in[None].copy(), phi_out[None].copy(), jnp.asarray(walks),
+        table, jnp.zeros(0, jnp.int32), key, lrs, window, k_neg)
+    assert losses.shape == (4, 1)
+
+    # replay: identical key schedule -> identical negatives -> same result
+    pi, po = phi_in.copy(), phi_out.copy()
+    k = key
+    for c in range(4):
+        k, sub = jax.random.split(k)
+        negs = sample_alias(table, sub, (1, g, t_len, k_neg))[0]
+        pi, po, _ = lifetime_step(pi, po, jnp.asarray(walks[c, 0]), negs,
+                                  lrs[c], window)
+    np.testing.assert_allclose(np.asarray(got_in[0]), np.asarray(pi),
+                               atol=1e-6, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(got_out[0]), np.asarray(po),
+                               atol=1e-6, rtol=1e-6)
+
+
+def test_train_chunk_stacked_replicas_match_independent_runs():
+    """S replicas trained in one stacked chunk == each trained alone (until
+    a sync mixes them)."""
+    n, d, g, w_cnt, t_len, k_neg, window, s_cnt = 40, 4, 2, 2, 8, 2, 2, 3
+    rng = np.random.default_rng(5)
+    walks = rng.integers(0, n, size=(3, s_cnt, g, w_cnt, t_len)).astype(np.int32)
+    table = build_alias_table(np.arange(n, 0, -1) ** 2, 0.75)
+    lrs = jnp.full((3,), 0.03, jnp.float32)
+    key = jax.random.PRNGKey(11)
+    stacks = [init_embeddings(n, d, jax.random.PRNGKey(s + 20))
+              for s in range(s_cnt)]
+    phi_in = jnp.stack([s[0] for s in stacks])
+    phi_out = jnp.stack([s[1] for s in stacks])
+
+    got_in, got_out, _ = train_chunk(
+        phi_in.copy(), phi_out.copy(), jnp.asarray(walks), table,
+        jnp.zeros(0, jnp.int32), key, lrs, window, k_neg)
+
+    for s in range(s_cnt):
+        pi, po = stacks[s][0].copy(), stacks[s][1].copy()
+        k = key
+        for c in range(3):
+            k, sub = jax.random.split(k)
+            negs = sample_alias(table, sub, (s_cnt, g, t_len, k_neg))[s]
+            pi, po, _ = lifetime_step(pi, po, jnp.asarray(walks[c, s]), negs,
+                                      lrs[c], window)
+        np.testing.assert_allclose(np.asarray(got_in[s]), np.asarray(pi),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_train_chunk_sync_averages_rows_across_replicas():
+    n, d, s_cnt = 16, 4, 3
+    rng = np.random.default_rng(2)
+    phi_in = jnp.asarray(rng.normal(size=(s_cnt, n, d)), jnp.float32)
+    phi_out = jnp.asarray(rng.normal(size=(s_cnt, n, d)), jnp.float32)
+    rows = jnp.asarray([0, 3, 9], jnp.int32)
+    pi, po = sync_mod.hotness_sync_stacked(phi_in, phi_out, rows)
+    want = np.mean(np.asarray(phi_in)[:, [0, 3, 9]], axis=0)
+    for s in range(s_cnt):
+        np.testing.assert_allclose(np.asarray(pi)[s, [0, 3, 9]], want,
+                                   atol=1e-6)
+    # non-sampled rows untouched
+    np.testing.assert_array_equal(np.asarray(pi)[:, 1], np.asarray(phi_in)[:, 1])
+    np.testing.assert_array_equal(np.asarray(po)[:, 1], np.asarray(phi_out)[:, 1])
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: the reworked trainer still learns, sharded regime converges
+# ---------------------------------------------------------------------------
+
+def test_training_reduces_loss_device_resident(small_graph):
+    from repro.core.api import EmbedConfig, sample_corpus
+    corpus = sample_corpus(small_graph,
+                           EmbedConfig(dim=16, max_len=30, min_len=8))
+    order = FrequencyOrder.from_ocn(corpus.ocn)
+    cfg = DSGLConfig(dim=16, window=4, negatives=3, epochs=2,
+                     batch_groups=16)
+    phi_in, phi_out, metrics = train_dsgl(corpus, order, cfg,
+                                          collect_metrics=True)
+    losses = metrics["loss"]
+    assert len(losses) >= 2
+    first = np.mean(losses[: max(len(losses) // 4, 1)])
+    last = np.mean(losses[-max(len(losses) // 4, 1):])
+    assert last < first
+    assert not np.isnan(np.asarray(phi_in)).any()
+
+
+def test_dsgl_trainer_runtime(small_graph):
+    """The prefetched runtime driver: chunks stream through train_chunk,
+    embeddings come out replica-averaged and finite, throughput is
+    reported."""
+    from repro.core.api import EmbedConfig, sample_corpus
+    from repro.runtime.trainer import DSGLTrainer
+    corpus = sample_corpus(small_graph,
+                           EmbedConfig(dim=8, max_len=20, min_len=6))
+    order = FrequencyOrder.from_ocn(corpus.ocn)
+    walks_rank = order.relabel_walks(corpus.walks)
+    cfg = DSGLConfig(dim=8, window=3, negatives=2, epochs=1,
+                     batch_groups=8, sync_period=3)
+    trainer = DSGLTrainer(walks_rank, order, cfg, num_shards=2)
+    out = trainer.run()
+    assert out["steps"] >= trainer.steps_per_epoch()
+    assert out["steps_per_s"] > 0
+    assert out["sync_bytes"] > 0
+    phi_in, phi_out = trainer.embeddings()
+    assert phi_in.shape == (len(order.to_rank), 8)
+    assert np.isfinite(np.asarray(phi_in)).all()
+    assert np.isfinite(np.asarray(out["loss"])).all()
+
+
+def test_sharded_training_runs_and_syncs(small_graph):
+    from repro.core.api import EmbedConfig, sample_corpus
+    corpus = sample_corpus(small_graph,
+                           EmbedConfig(dim=8, max_len=20, min_len=6))
+    order = FrequencyOrder.from_ocn(corpus.ocn)
+    cfg = DSGLConfig(dim=8, window=3, negatives=2, epochs=1,
+                     batch_groups=8, sync_period=2)
+    phi_in, phi_out, metrics = train_dsgl(
+        corpus, order, cfg, num_shards=2, collect_metrics=True)
+    assert phi_in.shape == (len(order.to_rank), 8)
+    assert metrics["sync_bytes"] > 0
+    assert not np.isnan(np.asarray(phi_in)).any()
