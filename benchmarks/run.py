@@ -38,7 +38,13 @@ REPO_ROOT = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
 
 def _walk_summary() -> dict:
     """Walker supersteps/s + cross-partition message volume on a small
-    partitioned corpus — the walk half of the BENCH_train trajectory."""
+    partitioned corpus — the walk half of the BENCH_train trajectory.
+
+    The timing runs the dense engine (the k=1 instantiation of the BSP
+    program) so ``supersteps_per_s`` stays comparable with the numbers
+    recorded before the sharded refactor; the message fields come from one
+    4-shard run of the same workload, where they are MEASURED from the
+    exchanged tensors."""
     import numpy as np
     import jax
     from repro.core.transition import make_policy
@@ -52,23 +58,74 @@ def _walk_summary() -> dict:
     sources = np.arange(512, dtype=np.int32) % g.num_nodes
     policy = make_policy("huge")
     import jax.numpy as jnp
-    part_dev = jnp.asarray(part, jnp.int32)
     st = run_walk_batch(g, jnp.asarray(sources), jax.random.PRNGKey(0),
-                        policy, spec, part_dev)
+                        policy, spec)
     jax.block_until_ready(st.path)                        # compile + warm
     best = float("inf")
     for r in range(3):
         t0 = time.time()
         st = run_walk_batch(g, jnp.asarray(sources), jax.random.PRNGKey(r),
-                            policy, spec, part_dev)
+                            policy, spec)
         jax.block_until_ready(st.path)
         best = min(best, time.time() - t0)
     stats = batch_stats(st)
+    st4 = run_walk_batch(g, jnp.asarray(sources), jax.random.PRNGKey(0),
+                         policy, spec, jnp.asarray(part, jnp.int32))
+    stats4 = batch_stats(st4)
     return {
         "supersteps_per_s": stats["supersteps"] / best,
-        "msg_count": stats["msg_count"],
-        "msg_bytes": stats["msg_bytes"],
+        "msg_count": stats4["msg_count"],
+        "msg_bytes": stats4["msg_bytes"],
+        "msg_bytes_analytic": stats4["msg_bytes_analytic"],
     }
+
+
+def _emit_bench_walk(walk_rec: dict) -> None:
+    """Repo-root BENCH_walk.json: the sharded-engine trajectory — stacked
+    supersteps/s at k=1/k=4, measured-vs-analytic message bytes, and the
+    walk→train overlap efficiency of the fused streaming pipeline."""
+    sharded = walk_rec.get("sharded", {})
+    bench = {
+        "engine": {
+            "supersteps_per_s_k1": sharded.get("k1_dense", {}).get("supersteps_per_s"),
+            "supersteps_per_s_k1_bsp": sharded.get("k1_bsp", {}).get("supersteps_per_s"),
+            "supersteps_per_s_k4": sharded.get("k4", {}).get("supersteps_per_s"),
+            "msg_bytes_measured_k4": sharded.get("k4", {}).get("msg_bytes_measured"),
+            "msg_bytes_analytic_k4": sharded.get("k4", {}).get("msg_bytes_analytic"),
+            "bytes_per_msg_k4": sharded.get("k4", {}).get("bytes_per_msg"),
+        },
+        "overlap": walk_rec.get("overlap", {}),
+        "per_superstep_growth": {
+            "incom": walk_rec.get("growth_incom"),
+            "fullpath": walk_rec.get("growth_fullpath"),
+        },
+        # Same workload as the BENCH_train walk summary (512 walkers on the
+        # 2048-node rmat), reusing the measurements walk_efficiency already
+        # took rather than re-benchmarking.
+        "seed_workload": {
+            "supersteps_per_s": sharded.get("k1_dense", {}).get(
+                "supersteps_per_s"),
+            "msg_count": sharded.get("k4", {}).get("msg_count"),
+            "msg_bytes": sharded.get("k4", {}).get("msg_bytes_measured"),
+            "msg_bytes_analytic": sharded.get("k4", {}).get(
+                "msg_bytes_analytic"),
+        },
+    }
+    # Frozen reference: the single-device engine's number recorded by the
+    # previous PR's BENCH_train run (if present on this checkout).
+    train_path = os.path.join(REPO_ROOT, "BENCH_train.json")
+    if os.path.exists(train_path):
+        with open(train_path) as f:
+            prev = json.load(f)
+        ref = prev.get("walk", {}).get("supersteps_per_s")
+        bench["engine"]["seed_reference_supersteps_per_s"] = ref
+        k1 = bench["engine"].get("supersteps_per_s_k1")
+        if ref and k1:
+            bench["engine"]["k1_vs_seed"] = k1 / ref
+    path = os.path.join(REPO_ROOT, "BENCH_walk.json")
+    with open(path, "w") as f:
+        json.dump(bench, f, indent=1, default=float)
+    print(f"wrote {path}", flush=True)
 
 
 def _emit_bench_train(train_rec: dict) -> None:
@@ -111,6 +168,8 @@ def main() -> int:
                   f"{json.dumps(summary, default=float)[:300]}", flush=True)
             if name == "train_efficiency" and args.only == name:
                 _emit_bench_train(rec)
+            if name == "walk_efficiency" and args.only == name:
+                _emit_bench_walk(rec)
         except Exception as e:
             failures += 1
             print(f"    FAILED: {type(e).__name__}: {e}", flush=True)

@@ -16,8 +16,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import save
+from repro.core.shard_engine import run_walk_sharded
 from repro.core.transition import make_policy
-from repro.core.walker import WalkSpec, run_walk_batch
+from repro.core.walker import WalkSpec, batch_stats, run_walk_batch
 from repro.graph.generators import rmat_graph
 
 
@@ -38,6 +39,85 @@ def _time_mode(graph, mode: str, max_len: int, n_walkers: int = 256,
         best = min(best, time.perf_counter() - t0)
     supersteps = int(st.supersteps)
     return best / max(supersteps, 1)
+
+
+_SHARD_SPEC = WalkSpec(max_len=80, min_len=8, mu=0.995, info_mode="incom",
+                       reg_start=16)
+
+
+def _time_engine(graph, runner, n_walkers: int = 512, reps: int = 3) -> Dict:
+    """Supersteps/s + measured/analytic traffic for one engine execution."""
+    sources = jnp.arange(n_walkers, dtype=jnp.int32) % graph.num_nodes
+    st = runner(sources, jax.random.PRNGKey(0))
+    jax.block_until_ready(st.path)              # compile + warm
+    best = float("inf")
+    for r in range(reps):
+        t0 = time.perf_counter()
+        st = runner(sources, jax.random.PRNGKey(r + 1))
+        jax.block_until_ready(st.path)
+        best = min(best, time.perf_counter() - t0)
+    s = batch_stats(st)
+    return {
+        "supersteps_per_s": s["supersteps"] / max(best, 1e-9),
+        "msg_count": s["msg_count"],
+        "msg_bytes_measured": s["msg_bytes"],
+        "msg_bytes_analytic": s["msg_bytes_analytic"],
+        "bytes_per_msg": s["msg_bytes"] / max(s["msg_count"], 1),
+    }
+
+
+def _time_sharded(graph, part, k: int, n_walkers: int = 512,
+                  reps: int = 3) -> Dict:
+    policy = make_policy("huge")
+    part_j = jnp.asarray(part, jnp.int32)
+    return _time_engine(
+        graph,
+        lambda src, key: run_walk_sharded(graph, src, key, policy,
+                                          _SHARD_SPEC, part_j, k),
+        n_walkers, reps)
+
+
+def _time_dense(graph, n_walkers: int = 512, reps: int = 3) -> Dict:
+    policy = make_policy("huge")
+    return _time_engine(
+        graph,
+        lambda src, key: run_walk_batch(graph, src, key, policy, _SHARD_SPEC),
+        n_walkers, reps)
+
+
+def _overlap_efficiency(quick: bool = True) -> Dict:
+    """Walk→train overlap: streamed pipeline wall vs fully serialized wall
+    on the identical workload (same walks, same train schedule)."""
+    from repro.core.api import EmbedConfig, make_walk_plan
+    from repro.core.dsgl import DSGLConfig
+    from repro.core.mpgp import mpgp_partition
+    from repro.runtime.trainer import StreamingEmbedPipeline
+
+    n = 1024 if quick else 4096
+    g = rmat_graph(n, 10, seed=3).with_edge_cm()
+    cfg = EmbedConfig(dim=32, epochs=1, max_len=40, min_len=10, window=6,
+                      negatives=4, delta=1e-3)
+    policy, spec, rounds = make_walk_plan(cfg)
+    rounds["max_rounds"] = 4 if quick else 8
+    dcfg = DSGLConfig(dim=32, window=6, negatives=4, seed=0, multi_windows=2)
+    part = mpgp_partition(g, 2).assignment
+    out = {}
+    # First pass of each mode pays all jit compiles; time the second.
+    for mode, overlap in (("streamed", True), ("serialized", False)):
+        best = float("inf")
+        for rep in range(2):
+            pipe = StreamingEmbedPipeline(
+                g, policy, spec, dict(rounds), dcfg,
+                assignment=part, num_shards=2, overlap=overlap)
+            res = pipe.run()
+            if rep > 0:
+                best = min(best, res["wall_s"])
+        out[f"wall_{mode}_s"] = best
+        out["rounds"] = res["rounds"]
+        out["train_steps"] = res["steps"]
+    out["overlap_efficiency"] = (
+        out["wall_serialized_s"] / max(out["wall_streamed_s"], 1e-9))
+    return out
 
 
 def run(quick: bool = True) -> Dict:
@@ -64,5 +144,20 @@ def run(quick: bool = True) -> Dict:
     rec["adaptive_mean_len"] = float(lengths.mean())
     rec["routine_len"] = 80
     rec["len_reduction_pct"] = 100.0 * (1 - lengths.mean() / 80.0)
+
+    # --- partition-sharded BSP engine: k=1 vs k=4, measured traffic --------
+    # "k1_dense" is the engine's k=1 fast path (run_walk_batch, no exchange
+    # machinery); "k1_bsp" runs the full BSP loop on one shard, so the
+    # difference is the measured cost of message packing + the collective.
+    from repro.core.mpgp import mpgp_partition
+    part4 = mpgp_partition(g, 4, gamma=2.0).assignment
+    rec["sharded"] = {
+        "k1_dense": _time_dense(g),
+        "k1_bsp": _time_sharded(g, np.zeros(g.num_nodes, np.int32), 1),
+        "k4": _time_sharded(g, part4, 4),
+    }
+
+    # --- walk→train overlap (fused streaming pipeline) ---------------------
+    rec["overlap"] = _overlap_efficiency(quick)
     save("walk_efficiency", rec)
     return rec

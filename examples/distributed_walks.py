@@ -34,7 +34,9 @@ def main() -> None:
         stats = batch_stats(st)
         per_msg = stats["msg_bytes"] / max(stats["msg_count"], 1)
         print(f"{name:24s} crossings={stats['msg_count']:6d}  "
-              f"bytes/msg={per_msg:5.1f}  mean_len={stats['mean_len']:.1f}")
+              f"bytes/msg={per_msg:5.1f}  mean_len={stats['mean_len']:.1f}  "
+              f"measured==analytic: "
+              f"{stats['msg_bytes'] == stats['msg_bytes_analytic']}")
 
     print("\nInCoM message = 80 B constant (walker_id, steps, node, H, L, "
           "E(H), E(L), E(HL), E(H^2), E(L^2))")

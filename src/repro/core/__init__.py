@@ -2,8 +2,15 @@
 # walks, MPGP streaming partitioning, and DSGL distributed Skip-Gram.
 from repro.core import incom, info
 from repro.core.api import EmbedConfig, embed_graph, sample_corpus
-from repro.core.corpus import Corpus, FrequencyOrder, generate_corpus
+from repro.core.corpus import (
+    Corpus,
+    CorpusRing,
+    FrequencyOrder,
+    generate_corpus,
+    ring_append,
+)
 from repro.core.huge_d import distger_spec, huge_d_spec, routine_spec
+from repro.core.shard_engine import make_walk_mesh, run_walk_sharded
 from repro.core.termination import WalkCountController
 from repro.core.transition import (
     DeepwalkPolicy,
@@ -20,8 +27,12 @@ __all__ = [
     "embed_graph",
     "sample_corpus",
     "Corpus",
+    "CorpusRing",
     "FrequencyOrder",
     "generate_corpus",
+    "ring_append",
+    "make_walk_mesh",
+    "run_walk_sharded",
     "distger_spec",
     "huge_d_spec",
     "routine_spec",

@@ -70,25 +70,51 @@ def embed_graph(
     *,
     num_shards: int = 1,
     return_corpus: bool = False,
+    streaming: bool = True,
 ):
-    """partition -> information-oriented walks -> DSGL -> embeddings.
+    """partition -> sharded info-oriented walks -> streamed DSGL -> embeddings.
 
-    Returns (phi_in, phi_out) in ORIGINAL node-id space, plus optional corpus.
-    Imports are deferred so this module stays import-light.
+    The default path is the fused pipeline (``StreamingEmbedPipeline``):
+    walks run on the partition-sharded BSP engine, finished rounds append
+    into a device-resident corpus ring, and DSGL training consumes ring
+    slots directly — round r trains while round r+1 walks, and nothing
+    round-trips through host numpy between sampling and learning.
+    ``streaming=False`` keeps the legacy two-phase path (sample the whole
+    corpus, then ``train_dsgl`` in frequency-rank space).
+
+    Returns (phi_in, phi_out) in ORIGINAL node-id space, plus optional
+    corpus. Imports are deferred so this module stays import-light.
     """
     from repro.core.mpgp import mpgp_partition
-    from repro.core.dsgl import DSGLConfig, train_dsgl
+    from repro.core.dsgl import DSGLConfig
 
     part = None
     if num_shards > 1:
         part = mpgp_partition(graph, num_shards).assignment
-    corpus = sample_corpus(graph, cfg, part=part)
-    order = FrequencyOrder.from_ocn(corpus.ocn)
     dsgl_cfg = DSGLConfig(
         dim=cfg.dim, window=cfg.window, negatives=cfg.negatives,
         epochs=cfg.epochs, lr=cfg.lr, multi_windows=cfg.multi_windows,
         seed=cfg.seed,
     )
+
+    if streaming:
+        from repro.runtime.trainer import StreamingEmbedPipeline
+
+        policy, spec, rounds = make_walk_plan(cfg)
+        pipe = StreamingEmbedPipeline(
+            graph, policy, spec, rounds, dsgl_cfg,
+            assignment=part, num_shards=num_shards)
+        out = pipe.run()
+        phi_in = np.asarray(out["phi_in"])     # node space already
+        phi_out = np.asarray(out["phi_out"])
+        if return_corpus:
+            return phi_in, phi_out, pipe.corpus()
+        return phi_in, phi_out
+
+    from repro.core.dsgl import train_dsgl
+
+    corpus = sample_corpus(graph, cfg, part=part)
+    order = FrequencyOrder.from_ocn(corpus.ocn)
     phi_in_rank, phi_out_rank = train_dsgl(corpus, order, dsgl_cfg,
                                            num_shards=num_shards)
     # Back to original node-id space.

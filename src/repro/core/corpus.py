@@ -1,10 +1,19 @@
-"""Corpus generation and frequency-ordered relabeling (paper §4.2-I).
+"""Corpus generation: device-resident ring + frequency relabeling (§4.2-I).
 
-``generate_corpus`` drives the walker engine round-by-round: each round runs
-one information-oriented walk from every source node, then the Eq. 7
-controller decides whether another round is needed. The result is a padded
-(num_walks, max_len) array of node ids plus per-walk lengths and the node
-occurrence counts ``ocn`` (needed by both Eq. 6 and the hotness machinery).
+The sampler's native output is a ``CorpusRing`` — a device-resident buffer
+that finished walk batches are appended into without ever leaving the
+accelerator: paths land in ring slots via one scatter, per-node occurrence
+counts (``ocn``, needed by Eq. 6/7 and the hotness machinery) accumulate by
+a fused scatter-add. The streaming trainer
+(``repro.runtime.trainer.StreamingEmbedPipeline``) consumes ring slots as
+stacked shard chunks directly, so walk→train never round-trips through host
+numpy; round r+1's append region is disjoint from round r's read region,
+which is what makes the walk/train double-buffering safe.
+
+``generate_corpus`` remains the compatibility shim: it drives the same
+ring + sharded engine round-by-round (Eq. 7 ΔD controller) and materializes
+a host-side ``Corpus`` at the API boundary for callers that want numpy
+(tests, benchmarks, ``sample_corpus``).
 
 ``FrequencyOrder`` relabels nodes in descending corpus frequency so the
 embedding matrices can be laid out hot-rows-first (Improvement-I): row 0 of
@@ -15,7 +24,7 @@ fast memory and makes hotness-*block* boundaries contiguous index ranges.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +32,7 @@ import numpy as np
 
 from repro.core.termination import WalkCountController
 from repro.core.transition import Policy, make_policy
-from repro.core.walker import WalkSpec, batch_stats, run_walk_batch, walks_to_numpy
+from repro.core.walker import WalkSpec, batch_stats, run_walk_batch
 from repro.graph.csr import CSRGraph
 
 
@@ -55,6 +64,110 @@ def count_occurrences(
     return np.bincount(flat, minlength=num_nodes).astype(np.int64)
 
 
+# ---------------------------------------------------------------------------
+# Device-resident corpus ring
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class CorpusRing:
+    """Finished walks, resident on device.
+
+    ``walks[cursor:cursor+b]`` is where the next batch lands (wrapping);
+    ``ocn`` tracks per-node occurrences of everything ever appended, and
+    ``total`` the number of appended walks (may exceed capacity once the
+    ring wraps and old rounds are retired).
+    """
+
+    walks: jax.Array      # (capacity, T) int32, -1 padded
+    lengths: jax.Array    # (capacity,) int32
+    ocn: jax.Array        # (|V|,) int32
+    cursor: jax.Array     # () int32 — next write slot
+    total: jax.Array      # () int32 — walks ever appended
+
+    def tree_flatten(self):
+        return (self.walks, self.lengths, self.ocn, self.cursor,
+                self.total), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @classmethod
+    def create(cls, capacity: int, max_len: int, num_nodes: int) -> "CorpusRing":
+        # ocn is int32 (JAX default without x64): total occurrences are
+        # bounded by capacity * max_len (one count per token slot), so
+        # refuse configurations that could silently wrap a hot node's count.
+        if capacity * max_len >= 2**31:
+            raise ValueError(
+                f"CorpusRing capacity {capacity} x max_len {max_len} can "
+                "overflow int32 occurrence counts; shard the corpus or "
+                "enable jax_enable_x64 and widen ocn")
+        return cls(
+            walks=jnp.full((capacity, max_len), -1, jnp.int32),
+            lengths=jnp.zeros((capacity,), jnp.int32),
+            ocn=jnp.zeros((num_nodes,), jnp.int32),
+            cursor=jnp.zeros((), jnp.int32),
+            total=jnp.zeros((), jnp.int32),
+        )
+
+    @property
+    def capacity(self) -> int:
+        return int(self.walks.shape[0])
+
+    @property
+    def num_filled(self) -> int:
+        return int(min(int(self.total), self.capacity))
+
+
+def _ring_append(ring: CorpusRing, paths: jax.Array,
+                 lengths: jax.Array) -> CorpusRing:
+    b = paths.shape[0]
+    cap = ring.walks.shape[0]
+    slots = jnp.mod(ring.cursor + jnp.arange(b, dtype=jnp.int32), cap)
+    valid = paths >= 0
+    ocn = ring.ocn.at[jnp.maximum(paths, 0).reshape(-1)].add(
+        valid.reshape(-1).astype(jnp.int32))
+    return CorpusRing(
+        walks=ring.walks.at[slots].set(paths.astype(jnp.int32)),
+        lengths=ring.lengths.at[slots].set(lengths.astype(jnp.int32)),
+        ocn=ocn,
+        cursor=jnp.mod(ring.cursor + b, cap),
+        total=ring.total + b,
+    )
+
+
+# Two jit wrappers over one implementation. Production callers (the
+# streaming pipeline and generate_corpus) drop their old ring reference at
+# the call site and use the donated form: XLA aliases the buffers when no
+# queued consumer (e.g. a trainer gather over earlier rounds) still holds
+# them and falls back to a defensive copy when one does, so donation is
+# always value-safe and skips the O(capacity) copy in the steady state.
+# The functional form is for callers that intentionally keep the
+# pre-append version alive (tests, ad-hoc snapshots).
+ring_append = jax.jit(_ring_append)
+ring_append_donated = jax.jit(_ring_append, donate_argnums=(0,))
+
+
+def ring_to_numpy(ring: CorpusRing) -> Tuple[np.ndarray, np.ndarray]:
+    """Materialize the filled slots (oldest -> newest) on host — the API
+    boundary for numpy consumers; the hot path never calls this."""
+    n = ring.num_filled
+    walks = np.asarray(ring.walks)
+    lengths = np.asarray(ring.lengths)
+    if int(ring.total) > ring.capacity:               # wrapped: rotate
+        c = int(ring.cursor)
+        order = np.concatenate([np.arange(c, ring.capacity), np.arange(c)])
+        walks, lengths = walks[order], lengths[order]
+    return walks[:n], lengths[:n].astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+# Round-driven sampler (compatibility shim over ring + sharded engine)
+# ---------------------------------------------------------------------------
+
+
 def generate_corpus(
     graph: CSRGraph,
     *,
@@ -68,7 +181,12 @@ def generate_corpus(
     part: Optional[np.ndarray] = None,
     sources: Optional[np.ndarray] = None,
 ) -> Corpus:
-    """End-to-end sampler: rounds of walks until Delta D_r <= delta."""
+    """End-to-end sampler: rounds of walks until Delta D_r <= delta.
+
+    Thin shim over the sharded engine + device ring: walks accumulate on
+    device; the host sees only the (|V|,) ``ocn`` per round (controller
+    input) and one final materialization into the numpy ``Corpus``.
+    """
     if isinstance(policy, str):
         policy = make_policy(policy)
     spec = spec or WalkSpec()
@@ -81,16 +199,25 @@ def generate_corpus(
         sources = np.arange(n, dtype=np.int32)
     degrees = np.asarray(graph.degrees(), dtype=np.int64)
     part_dev = None if part is None else jnp.asarray(part, jnp.int32)
+    num_shards = 1 if part is None else int(np.max(np.asarray(part))) + 1
 
     controller = WalkCountController(
         delta=delta, min_rounds=min_rounds, max_rounds=max_rounds
     )
     key = jax.random.PRNGKey(seed)
-    all_walks: List[np.ndarray] = []
-    all_lengths: List[np.ndarray] = []
-    ocn = np.zeros(n, dtype=np.int64)
+    # This shim materializes EVERY walk for its numpy Corpus, so the ring
+    # must retain all rounds; when that exceeds the device-side int32/
+    # memory budget, spill each round to host instead (the pre-ring
+    # behavior — acceptable here because the output is host numpy anyway).
+    capacity = max_rounds * len(sources)
+    on_device = capacity * spec.max_len < 2**31
+    if on_device:
+        ring = CorpusRing.create(capacity, spec.max_len, n)
+    else:
+        host_walks, host_lengths = [], []
+        ocn_host = np.zeros(n, dtype=np.int64)
     agg = {"supersteps": 0, "accepts": 0, "rejects": 0,
-           "msg_count": 0, "msg_bytes": 0.0}
+           "msg_count": 0, "msg_bytes": 0.0, "msg_bytes_analytic": 0.0}
 
     keep_walking = True
     while keep_walking:
@@ -99,24 +226,37 @@ def generate_corpus(
             chunk = sources[start : start + walker_batch]
             round_key, k = jax.random.split(round_key)
             st = run_walk_batch(
-                graph, jnp.asarray(chunk, jnp.int32), k, policy, spec, part_dev
+                graph, jnp.asarray(chunk, jnp.int32), k, policy, spec,
+                part_dev, num_shards=num_shards if part is not None else None,
             )
-            walks, lengths = walks_to_numpy(st)
-            all_walks.append(walks)
-            all_lengths.append(lengths)
-            ocn += count_occurrences(walks, lengths, n)
+            if on_device:
+                ring = ring_append_donated(ring, st.path,
+                                           st.info.L.astype(jnp.int32))
+            else:
+                w = np.asarray(st.path)
+                l = np.asarray(st.info.L, dtype=np.int64)
+                host_walks.append(w)
+                host_lengths.append(l)
+                ocn_host += count_occurrences(w, l, n)
             s = batch_stats(st)
             for field in ("supersteps", "accepts", "rejects", "msg_count"):
                 agg[field] += s[field]
             agg["msg_bytes"] += s["msg_bytes"]
-        keep_walking = controller.update(degrees, ocn)
+            agg["msg_bytes_analytic"] += s["msg_bytes_analytic"]
+        ocn_now = np.asarray(ring.ocn) if on_device else ocn_host
+        keep_walking = controller.update(degrees, ocn_now)
 
-    walks = np.concatenate(all_walks, axis=0)
-    lengths = np.concatenate(all_lengths, axis=0)
+    if on_device:
+        walks, lengths = ring_to_numpy(ring)
+        ocn_out = np.asarray(ring.ocn, dtype=np.int64)
+    else:
+        walks = np.concatenate(host_walks, axis=0)
+        lengths = np.concatenate(host_lengths, axis=0)
+        ocn_out = ocn_host
     agg["mean_len"] = float(lengths.mean()) if len(lengths) else 0.0
     agg["d_history"] = list(controller.history)
     return Corpus(
-        walks=walks, lengths=lengths, ocn=ocn,
+        walks=walks, lengths=lengths, ocn=ocn_out,
         rounds=controller.rounds, stats=agg,
     )
 

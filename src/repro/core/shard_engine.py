@@ -1,0 +1,320 @@
+"""Partition-sharded BSP walk engine (paper §3: walker-centric + InCoM).
+
+Walkers live on the shard that owns their CURRENT node per the MPGP
+``assignment``; one superstep is:
+
+  phase A (at owner(cur))   candidate draw + walking-backtracking
+                            acceptance (``walker.propose``);
+  exchange                  walkers whose accepted node belongs to another
+                            shard pack the paper's constant-size InCoM
+                            message and hand off via a collective;
+  phase B (at owner(cand))  n(v) from the LOCAL path fragment, Theorem 1 /
+                            Eq. 13 info update, path append, Eq. 5
+                            termination (``walker.absorb``).
+
+Path storage follows the paper's ownership argument: node v's visits are
+always appended on owner(v)'s fragment, so n(v) is a local count and the
+walk itself never has to travel — only the 10-field / 80-byte message does
+(Example 1). The final corpus path is the elementwise union of the shard
+fragments (every position is written by exactly one shard). The fullpath
+(HuGE-D) baseline instead carries the whole walk in its message: 24 + 8L
+bytes, measured from the actual routed path payload.
+
+Message layout: exactly ``incom.MSG_FIELDS`` (10 fields). The walker's step
+count is globally known (BSP superstep index), so the ``steps`` slot
+carries the sender's pre-step node instead — the predecessor that
+second-order policies (node2vec) need on arrival — keeping the hand-off at
+the paper's 80 bytes (DESIGN.md §9). ``reg_window`` mode appends the K-entry
+H ring (80 + 8K bytes), matching ``incom.windowed_r_squared``'s cost note.
+
+Two executions of the SAME per-shard program:
+
+* ``vmap(..., axis_name="shards")`` — stacked emulation: k logical shards
+  as a leading array axis on one device; ``lax.psum`` realizes the
+  exchange. Always available, used by tests for shard-count invariance.
+* ``shard_map`` over a k-device mesh — the SPMD form with real collectives
+  (``make_walk_mesh``). Bit-identical by construction: per-lane RNG
+  (``walker.step_uniforms``) and per-lane math do not depend on layout.
+
+``msg_count``/``msg_bytes`` are derived from the packed message tensors
+the exchange moves: per hand-off, the FIELD COUNT of the packed payload x
+the paper's 8 B/field accounting (Example 1) — so a packing regression
+(an extra field, a whole-batch ship) moves the number away from
+``msg_bytes_analytic``, which carries the independent closed form.
+Physical wire bytes differ: payloads are f32/i32 (4 B/field) and the
+stacked emulation's psum is dense over all B lanes; the hand-off COUNT
+and field inventory are what is measured, the 8 B/field model prices
+them (DESIGN.md §9).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import incom
+from repro.core import walker as wk
+from repro.core.transition import Policy
+from repro.graph.csr import CSRGraph
+
+AXIS = "shards"   # the walk-shard mesh / vmap axis name
+
+
+def make_walk_mesh(num_shards: int) -> Optional[Mesh]:
+    """A ("shards",)-mesh over local devices, or None when the host does
+    not have ``num_shards`` devices (callers then use the stacked
+    emulation, which is the same program under vmap)."""
+    from repro.dist.collectives import local_mesh
+    return local_mesh(num_shards, AXIS)
+
+
+# ---------------------------------------------------------------------------
+# The per-shard BSP program (executed under vmap OR shard_map, axis="shards")
+# ---------------------------------------------------------------------------
+
+
+def _shard_program(
+    graph: CSRGraph,
+    owner: jax.Array,        # (|V|,) int32 partition id per node (replicated)
+    sources: jax.Array,      # (B,) int32 (replicated; lanes are global slots)
+    root_key: jax.Array,
+    policy: Policy,
+    spec: wk.WalkSpec,
+):
+    """Full walk loop for ONE shard; collectives over axis ``AXIS``."""
+    b = sources.shape[0]
+    ids = jnp.arange(b, dtype=jnp.int32)
+    sid = lax.axis_index(AXIS)
+    fullpath = spec.info_mode == "fullpath"
+    h_len = spec.max_len if fullpath else 1
+    k_ring = max(spec.reg_window, 1)
+    cap = spec.supersteps_cap()
+
+    resident0 = owner[sources] == sid
+    # Fragment init: the source node's first visit is recorded at ITS owner.
+    path0 = jnp.full((b, spec.max_len), -1, jnp.int32)
+    path0 = path0.at[:, 0].set(jnp.where(resident0, sources, -1))
+
+    st0 = dict(
+        cur=sources,
+        prev=sources,
+        resident=resident0,
+        active=jnp.ones((b,), bool),
+        info=incom.InfoState.init(b),
+        path=path0,
+        h=jnp.zeros((b, h_len), jnp.float32),
+        ring=jnp.zeros((b, k_ring), jnp.float32),
+        t=jnp.zeros((), jnp.int32),
+        accepts=jnp.zeros((), jnp.int32),
+        rejects=jnp.zeros((), jnp.int32),
+        msg_count=jnp.zeros((), jnp.int32),
+        msg_bytes=jnp.zeros((), jnp.float32),
+        msg_bytes_analytic=jnp.zeros((), jnp.float32),
+    )
+
+    def cond(st):
+        live = jnp.sum((st["resident"] & st["active"]).astype(jnp.int32))
+        return (lax.psum(live, AXIS) > 0) & (st["t"] < cap)
+
+    def body(st):
+        u1, u2 = wk.step_uniforms(root_key, st["t"], b)
+        cand, _, accept_raw, has_nbrs = wk.propose(
+            graph, policy, st["cur"], st["prev"], u1, u2)
+        live = st["resident"] & st["active"]
+        accept = live & accept_raw
+        dead_end = live & ~has_nbrs
+        mig = accept & (owner[cand] != sid)
+        stay = accept & ~mig
+
+        path = st["path"]
+        if fullpath:
+            # The HuGE-D message carries the walk INCLUDING the accepted
+            # node (24 + 8*l_new bytes), so append at the origin; phase B's
+            # re-append at the same slot is idempotent.
+            idx = jnp.clip(st["info"].L.astype(jnp.int32), 0, spec.max_len - 1)
+            path = jnp.where(accept[:, None], path.at[ids, idx].set(cand), path)
+
+        # ---- pack + hand off (the measured exchange) ------------------------
+        from repro.dist.collectives import psum_union
+
+        info = st["info"]
+        mig_i = mig.astype(jnp.int32)
+        msg_i = jnp.stack([ids, st["cur"], cand], axis=1)
+        msg_f = jnp.stack(
+            [info.H, info.L, info.EH, info.EL, info.EHL, info.EH2, info.EL2],
+            axis=1)
+        payload = {"i": msg_i, "f": msg_f}
+        if spec.reg_window:
+            payload["ring"] = st["ring"]
+        if fullpath:
+            payload.update({"path": path, "h": st["h"]})
+        arrivals = psum_union(payload, mig, AXIS)     # exact: <=1 sender/lane
+        arr_i, arr_f = arrivals["i"], arrivals["f"]
+        arr_ring = arrivals.get("ring", st["ring"])
+        arrived = lax.psum(mig_i, AXIS) > 0           # (B,) any shard sent
+        if fullpath:
+            arr_path, arr_h = arrivals["path"], arrivals["h"]
+        # Fields the hand-off actually ships, derived from the packed
+        # tensors (NOT from the Example-1 closed form — packing an extra
+        # field would move measured away from analytic and fail the tests).
+        # In fullpath mode the walk itself is the payload: the 3 id fields
+        # + one entry per shipped path position; the 7-stat ride-along is
+        # excluded per the paper's 24+8L accounting (module docstring).
+        shipped_fields = msg_i.shape[1] + msg_f.shape[1] + (
+            arrivals["ring"].shape[1] if "ring" in payload else 0)
+
+        incoming = arrived & (owner[arr_i[:, 2]] == sid)
+        proc = stay | incoming
+
+        # ---- merge arrivals into local lane state --------------------------
+        sel = lambda a, b_: jnp.where(incoming, a, b_)
+        cand_b = sel(arr_i[:, 2], cand)
+        sender_cur = sel(arr_i[:, 1], st["cur"])      # walker's pre-step node
+        info_b = incom.InfoState(
+            H=sel(arr_f[:, 0], info.H), L=sel(arr_f[:, 1], info.L),
+            EH=sel(arr_f[:, 2], info.EH), EL=sel(arr_f[:, 3], info.EL),
+            EHL=sel(arr_f[:, 4], info.EHL), EH2=sel(arr_f[:, 5], info.EH2),
+            EL2=sel(arr_f[:, 6], info.EL2))
+        ring_b = jnp.where(incoming[:, None], arr_ring, st["ring"])
+        if fullpath:
+            path_b = jnp.where(incoming[:, None], arr_path, path)
+            h_b = jnp.where(incoming[:, None], arr_h, st["h"])
+        else:
+            path_b, h_b = path, st["h"]
+
+        info2, path2, h2, ring2, done_now = wk.absorb(
+            spec, info_b, path_b, h_b, ring_b, cand_b, proc)
+
+        # ---- residence / activity -------------------------------------------
+        resident2 = (st["resident"] & ~mig) | incoming
+        cur2 = jnp.where(proc, cand_b, st["cur"])
+        prev2 = jnp.where(proc, sender_cur, st["prev"])
+        active2 = jnp.where(proc, ~done_now,
+                            jnp.where(dead_end, False, st["active"]))
+
+        # ---- measured + analytic traffic ------------------------------------
+        n_out = jnp.sum(mig_i)
+        if fullpath:
+            shipped = jnp.sum(((path >= 0) & mig[:, None]).astype(jnp.int32))
+            add_meas = (8.0 * msg_i.shape[1]) * n_out + 8.0 * shipped
+            add_an = jnp.sum(jnp.where(
+                mig, incom.fullpath_msg_bytes(info.L + 1.0), 0.0))
+        else:
+            add_meas = jnp.float32(8.0 * shipped_fields) * n_out
+            add_an = jnp.float32(incom.MSG_BYTES + 8 * (spec.reg_window or 0)
+                                 ) * n_out
+
+        return dict(
+            cur=cur2, prev=prev2, resident=resident2, active=active2,
+            info=info2, path=path2, h=h2, ring=ring2,
+            t=st["t"] + 1,
+            accepts=st["accepts"] + jnp.sum(accept).astype(jnp.int32),
+            rejects=st["rejects"]
+            + jnp.sum(live & has_nbrs & ~accept_raw).astype(jnp.int32),
+            msg_count=st["msg_count"] + n_out,
+            msg_bytes=st["msg_bytes"] + add_meas,
+            msg_bytes_analytic=st["msg_bytes_analytic"] + add_an,
+        )
+
+    return lax.while_loop(cond, body, st0)
+
+
+# ---------------------------------------------------------------------------
+# Drivers: stacked emulation (vmap) and SPMD (shard_map)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("policy", "spec", "num_shards"))
+def _run_stacked(graph, owner, sources, root_key, policy, spec, num_shards):
+    def per_shard(_marker):
+        return _shard_program(graph, owner, sources, root_key, policy, spec)
+
+    return jax.vmap(per_shard, axis_name=AXIS)(jnp.arange(num_shards))
+
+
+def _run_spmd(graph, owner, sources, root_key, policy, spec,
+              num_shards: int, mesh: Mesh):
+    from jax.experimental.shard_map import shard_map
+
+    def per_shard(graph_, owner_, sources_, key_, _marker):
+        out = _shard_program(graph_, owner_, sources_, key_, policy, spec)
+        return jax.tree_util.tree_map(lambda x: x[None], out)
+
+    fn = shard_map(
+        per_shard, mesh=mesh,
+        in_specs=(P(), P(), P(), P(), P(AXIS)),
+        out_specs=P(AXIS),
+        check_rep=False,
+    )
+    return fn(graph, owner, sources, root_key, jnp.arange(num_shards))
+
+
+def _merge(out, spec: wk.WalkSpec, root_key) -> wk.WalkerBatchState:
+    """Combine the (k, ...) per-shard outputs into one WalkerBatchState."""
+    res = out["resident"]                                    # (k, B)
+    pick = lambda x: jnp.sum(jnp.where(res, x, 0), axis=0)   # 1 resident/lane
+    pickf = lambda x: jnp.sum(
+        jnp.where(res[..., None], x, 0), axis=0)
+    if spec.info_mode == "fullpath":
+        # The walk travels whole; only the final resident copy is current.
+        path = jnp.max(jnp.where(res[..., None], out["path"], -1), axis=0)
+    else:
+        # Fragment union: each position was written by exactly one owner.
+        path = jnp.max(out["path"], axis=0)
+    info = incom.InfoState(
+        H=pick(out["info"].H), L=pick(out["info"].L),
+        EH=pick(out["info"].EH), EL=pick(out["info"].EL),
+        EHL=pick(out["info"].EHL), EH2=pick(out["info"].EH2),
+        EL2=pick(out["info"].EL2))
+    return wk.WalkerBatchState(
+        cur=pick(out["cur"].astype(jnp.int32)),
+        prev=pick(out["prev"].astype(jnp.int32)),
+        path=path,
+        info=info,
+        h_series=pickf(out["h"]),
+        hring=pickf(out["ring"]),
+        active=jnp.any(out["resident"] & out["active"], axis=0),
+        key=root_key,
+        supersteps=out["t"][0],
+        accepts=jnp.sum(out["accepts"]),
+        rejects=jnp.sum(out["rejects"]),
+        msg_count=jnp.sum(out["msg_count"]),
+        msg_bytes=jnp.sum(out["msg_bytes"]),
+        msg_bytes_analytic=jnp.sum(out["msg_bytes_analytic"]),
+    )
+
+
+def run_walk_sharded(
+    graph: CSRGraph,
+    sources: jax.Array,
+    key: jax.Array,
+    policy: Policy,
+    spec: wk.WalkSpec,
+    assignment: jax.Array,
+    num_shards: int,
+    mesh: Optional[Mesh] = None,
+) -> wk.WalkerBatchState:
+    """Run one walk per source on ``num_shards`` partition shards.
+
+    ``assignment`` maps node -> owning shard (MPGP output). With ``mesh``
+    (k devices) the program runs SPMD under shard_map; otherwise the k
+    shards run as a stacked vmap axis on the local device. Results are
+    bit-identical across both executions and across shard counts.
+    """
+    sources = jnp.asarray(sources, jnp.int32)
+    owner = jnp.asarray(assignment, jnp.int32)
+    if getattr(policy, "needs_edge_cm", False) and graph.edge_cm is None:
+        graph = graph.with_edge_cm()
+    if mesh is not None and int(mesh.shape[AXIS]) == num_shards:
+        out = _run_spmd(graph, owner, sources, key, policy, spec,
+                        num_shards, mesh)
+    else:
+        out = _run_stacked(graph, owner, sources, key, policy, spec,
+                           num_shards)
+    return _merge(out, spec, key)

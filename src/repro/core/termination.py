@@ -29,8 +29,13 @@ class WalkCountController:
     def update(self, degrees: np.ndarray, ocn: np.ndarray) -> bool:
         """Record D_r for the corpus so far; return True if walking should
         CONTINUE (i.e. |Delta D_r| > delta or not enough rounds yet)."""
-        d_r = relative_entropy_dpq(degrees, ocn)
-        self.history.append(d_r)
+        return self.update_d(relative_entropy_dpq(degrees, ocn))
+
+    def update_d(self, d_r: float) -> bool:
+        """Decision half of ``update`` for callers that compute D_r
+        themselves (e.g. the streaming pipeline, whose ocn lives on device
+        and is pulled once per round for the alias/hotness rebuild anyway)."""
+        self.history.append(float(d_r))
         r = len(self.history)
         if r < self.min_rounds:
             return True

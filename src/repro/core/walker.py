@@ -12,9 +12,26 @@ Three information modes:
                  stored H-series at every step (O(L) work/step, O(L) msgs).
 * ``fixed``    — KnightKing-style routine walks (L fixed, e.g. 80).
 
-Cross-partition message accounting (counts + bytes) is carried in-loop when
-a partition assignment is provided, reproducing Fig. 10(c) / Example 1
-measurements exactly (80 B constant vs 24+8L B full-path messages).
+The superstep is split into two phase functions shared with the
+partition-sharded BSP engine (``repro.core.shard_engine``):
+
+* ``propose``  — phase A, executed where the walker currently resides:
+  candidate draw + acceptance test (walking-backtracking).
+* ``absorb``   — phase B, executed where the ACCEPTED node lives: n(v)
+  count against the locally held path buffer, Theorem 1 / Eq. 13 info
+  update, path append, Eq. 5 termination.
+
+RNG is per-lane and stateless: lane w's draws at superstep t depend only on
+(root_key, t, w) via ``step_uniforms``, never on batch layout — which is
+what makes walks bit-identical whether the batch runs on 1 shard or k
+shards (DESIGN.md §9).
+
+When a partition ``part`` is given, ``run_walk_batch`` routes through the
+sharded engine so ``msg_count``/``msg_bytes`` are MEASURED from the packed
+message tensors actually exchanged between shard programs (80 B constant
+InCoM messages vs 24+8L full-path messages, Example 1), not from an in-loop
+analytic counter. The analytic value is still carried alongside
+(``msg_bytes_analytic``) so benchmarks can assert measured == analytic.
 """
 
 from __future__ import annotations
@@ -49,6 +66,23 @@ class WalkSpec:
     def supersteps_cap(self) -> int:
         return self.max_supersteps or 8 * self.max_len
 
+    def min_test_len(self) -> int:
+        """First length at which the R^2 termination test may fire.
+
+        The regression series starts at L0 = ``reg_start`` (re-seeded while
+        L <= L0, see ``incom.stats_step``), so before L0 + ~3 points exist
+        the Pearson R^2 is degenerate (0 from a 1-point series, 1.0 from a
+        2-point series) and ``r2 < mu`` would terminate every walk at
+        exactly ``min_len`` — fixed-length walks, not adaptive ones (this
+        was the seed's link-prediction regression; DESIGN.md §8). The test
+        is therefore gated until the series holds >= 4 points.
+        """
+        if self.info_mode == "fixed":
+            return self.min_len
+        if self.reg_window:
+            return max(self.min_len, 4)
+        return max(self.min_len, self.reg_start + 3)
+
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
@@ -62,18 +96,21 @@ class WalkerBatchState:
     h_series: jax.Array       # (B, max_len) f32 (fullpath mode only; else 0-size)
     hring: jax.Array          # (B, K) f32 ring of recent H (reg_window mode)
     active: jax.Array         # (B,) bool
-    key: jax.Array            # PRNG key
+    key: jax.Array            # ROOT PRNG key (constant; per-lane keys are
+                              # derived from (key, supersteps, lane))
     supersteps: jax.Array     # () int32
     accepts: jax.Array        # () int32
     rejects: jax.Array        # () int32
     msg_count: jax.Array      # () int32   cross-partition hand-offs
-    msg_bytes: jax.Array      # () float32 bytes for those hand-offs
+    msg_bytes: jax.Array      # () float32 measured bytes for those hand-offs
+    msg_bytes_analytic: jax.Array  # () float32 Example-1 analytic bytes
 
     def tree_flatten(self):
         return (
             self.cur, self.prev, self.path, self.info, self.h_series,
             self.hring, self.active, self.key, self.supersteps, self.accepts,
             self.rejects, self.msg_count, self.msg_bytes,
+            self.msg_bytes_analytic,
         ), None
 
     @classmethod
@@ -101,7 +138,61 @@ def init_batch(sources: jax.Array, key: jax.Array, spec: WalkSpec) -> WalkerBatc
         rejects=jnp.zeros((), jnp.int32),
         msg_count=jnp.zeros((), jnp.int32),
         msg_bytes=jnp.zeros((), jnp.float32),
+        msg_bytes_analytic=jnp.zeros((), jnp.float32),
     )
+
+
+# ---------------------------------------------------------------------------
+# Per-lane RNG
+# ---------------------------------------------------------------------------
+
+
+def step_uniforms(root_key: jax.Array, superstep: jax.Array,
+                  b: int) -> Tuple[jax.Array, jax.Array]:
+    """(u_cand, u_accept), each (B,): lane i's draws are a pure function of
+    (root, superstep, i) — the counter-based generator indexes elements by
+    position, so every shard evaluating the full-width batch materializes
+    identical values for lane i. Layout-independence (and therefore
+    shard-count invariance) costs one fold_in + one split per superstep."""
+    step_key = jax.random.fold_in(root_key, superstep)
+    k1, k2 = jax.random.split(step_key)
+    return jax.random.uniform(k1, (b,)), jax.random.uniform(k2, (b,))
+
+
+# ---------------------------------------------------------------------------
+# Phase A — propose (runs where the walker resides)
+# ---------------------------------------------------------------------------
+
+
+def propose(
+    graph: CSRGraph,
+    policy: Policy,
+    cur: jax.Array,
+    prev: jax.Array,
+    u1: jax.Array,
+    u2: jax.Array,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Candidate draw + walking-backtracking acceptance, per lane.
+
+    Returns (cand, eidx, accept_raw, has_nbrs); the caller masks with its
+    residence/activity lanes. ``accept_raw`` already includes ``has_nbrs``.
+    """
+    deg = node_degrees(graph, cur)                    # (B,) f32
+    has_nbrs = deg > 0
+    j = jnp.minimum((u1 * deg).astype(jnp.int32),
+                    jnp.maximum(deg.astype(jnp.int32) - 1, 0))
+    eidx = graph.indptr[cur].astype(jnp.int32) + j
+    eidx = jnp.clip(eidx, 0, graph.indices.shape[0] - 1)
+    cand = graph.indices[eidx]
+
+    p_acc = policy.accept_prob(graph, prev, cur, cand, eidx)
+    accept_raw = has_nbrs & (u2 < p_acc)
+    return cand, eidx, accept_raw, has_nbrs
+
+
+# ---------------------------------------------------------------------------
+# Phase B — absorb (runs where the ACCEPTED node lives)
+# ---------------------------------------------------------------------------
 
 
 def _fullpath_entropy(path: jax.Array, length: jax.Array) -> jax.Array:
@@ -148,38 +239,31 @@ def _fullpath_r2(
     return jnp.where(denom > 1e-12, cov * cov / jnp.maximum(denom, 1e-12), 0.0)
 
 
-def _superstep(
-    graph: CSRGraph,
-    policy: Policy,
+def absorb(
     spec: WalkSpec,
-    part: Optional[jax.Array],
-    st: WalkerBatchState,
-) -> WalkerBatchState:
-    b = st.cur.shape[0]
-    key, k_cand, k_acc = jax.random.split(st.key, 3)
+    info: incom.InfoState,
+    path: jax.Array,
+    h_series: jax.Array,
+    hring: jax.Array,
+    cand: jax.Array,
+    proc: jax.Array,
+) -> Tuple[incom.InfoState, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Apply one accepted step on ``proc`` lanes against the LOCAL buffers.
 
-    deg = node_degrees(graph, st.cur)                       # (B,) f32
-    has_nbrs = deg > 0
-    u1 = jax.random.uniform(k_cand, (b,))
-    j = jnp.minimum((u1 * deg).astype(jnp.int32),
-                    jnp.maximum(deg.astype(jnp.int32) - 1, 0))
-    eidx = graph.indptr[st.cur].astype(jnp.int32) + j
-    eidx = jnp.clip(eidx, 0, graph.indices.shape[0] - 1)
-    cand = graph.indices[eidx]
+    ``path`` is the full walk on a single shard and the owner's fragment in
+    the sharded engine — n(v) over either is identical because every visit
+    to v is appended where v lives (DESIGN.md §9). The append at position
+    L_old is idempotent, so fullpath-mode callers that pre-appended before
+    packing the migrating message can reuse this unchanged.
 
-    p_acc = policy.accept_prob(graph, st.prev, st.cur, cand, eidx)
-    u2 = jax.random.uniform(k_acc, (b,))
-    accept = st.active & has_nbrs & (u2 < p_acc)
-    # Lanes whose node has no neighbors terminate immediately.
-    dead_end = st.active & ~has_nbrs
-
-    # --- information update on accepted lanes --------------------------------
-    info_acc, path_acc = incom.accept_update(st.info, st.path, cand, spec.reg_start)
+    Returns (info', path', h_series', hring', done_now).
+    """
+    b = path.shape[0]
+    info_acc, path_acc = incom.accept_update(info, path, cand, spec.reg_start)
     new_info = jax.tree_util.tree_map(
-        lambda new, old: jnp.where(accept, new, old), info_acc, st.info
+        lambda new, old: jnp.where(proc, new, old), info_acc, info
     )
-    new_path = jnp.where(accept[:, None], path_acc, st.path)
-
+    new_path = jnp.where(proc[:, None], path_acc, path)
     l_new = new_info.L  # (B,) f32 — post-accept length
 
     if spec.info_mode == "fullpath":
@@ -187,55 +271,60 @@ def _superstep(
         h_full = _fullpath_entropy(new_path, l_new.astype(jnp.int32))
         idx = jnp.clip(l_new.astype(jnp.int32) - 1, 0, spec.max_len - 1)
         h_series = jnp.where(
-            accept[:, None],
-            st.h_series.at[jnp.arange(b), idx].set(h_full),
-            st.h_series,
+            proc[:, None],
+            h_series.at[jnp.arange(b), idx].set(h_full),
+            h_series,
         )
         r2 = _fullpath_r2(h_series, l_new.astype(jnp.int32),
                           spec.reg_window, spec.reg_start)
         # Overwrite incremental H with recomputed (identical values) to keep
         # downstream uniform; the *cost* difference is what we benchmark.
-        new_info = dataclasses.replace(new_info, H=jnp.where(accept, h_full, new_info.H))
-        hring = st.hring
+        new_info = dataclasses.replace(
+            new_info, H=jnp.where(proc, h_full, new_info.H))
+    elif spec.reg_window:
+        k = hring.shape[1]
+        slot = jnp.mod(l_new.astype(jnp.int32) - 1, k)
+        hring = jnp.where(
+            proc[:, None],
+            hring.at[jnp.arange(b), slot].set(new_info.H),
+            hring,
+        )
+        r2 = incom.windowed_r_squared(hring, l_new, spec.reg_window)
     else:
-        h_series = st.h_series
-        if spec.reg_window:
-            k = st.hring.shape[1]
-            slot = jnp.mod(l_new.astype(jnp.int32) - 1, k)
-            hring = jnp.where(
-                accept[:, None],
-                st.hring.at[jnp.arange(b), slot].set(new_info.H),
-                st.hring,
-            )
-            r2 = incom.windowed_r_squared(hring, l_new, spec.reg_window)
-        else:
-            hring = st.hring
-            r2 = incom.r_squared(new_info)
+        r2 = incom.r_squared(new_info)
 
     # --- termination ----------------------------------------------------------
     if spec.info_mode == "fixed":
-        done_now = accept & (l_new >= jnp.float32(spec.fixed_len))
+        done_now = proc & (l_new >= jnp.float32(spec.fixed_len))
     else:
-        long_enough = l_new >= jnp.float32(spec.min_len)
-        done_now = accept & long_enough & (r2 < jnp.float32(spec.mu))
-    done_now = done_now | (accept & (l_new >= jnp.float32(spec.max_len)))
-    done_now = done_now | dead_end
+        long_enough = l_new >= jnp.float32(spec.min_test_len())
+        done_now = proc & long_enough & (r2 < jnp.float32(spec.mu))
+    done_now = done_now | (proc & (l_new >= jnp.float32(spec.max_len)))
+    return new_info, new_path, h_series, hring, done_now
 
-    # --- cross-partition message accounting -----------------------------------
-    if part is not None:
-        crossed = accept & (part[st.cur] != part[cand])
-        n_crossed = jnp.sum(crossed).astype(jnp.int32)
-        if spec.info_mode == "fullpath":
-            per_msg = incom.fullpath_msg_bytes(l_new).astype(jnp.float32)
-        else:
-            # Constant-size InCoM message; the windowed variant additionally
-            # carries the K-entry H ring (still constant w.r.t. L).
-            size = incom.MSG_BYTES + 8 * spec.reg_window
-            per_msg = jnp.full((b,), float(size), jnp.float32)
-        add_bytes = jnp.sum(jnp.where(crossed, per_msg, 0.0))
-    else:
-        n_crossed = jnp.zeros((), jnp.int32)
-        add_bytes = jnp.zeros((), jnp.float32)
+
+# ---------------------------------------------------------------------------
+# Single-shard driver (the k=1 instantiation of the BSP engine)
+# ---------------------------------------------------------------------------
+
+
+def _superstep(
+    graph: CSRGraph,
+    policy: Policy,
+    spec: WalkSpec,
+    st: WalkerBatchState,
+) -> WalkerBatchState:
+    b = st.cur.shape[0]
+    u1, u2 = step_uniforms(st.key, st.supersteps, b)
+    cand, _, accept_raw, has_nbrs = propose(graph, policy, st.cur, st.prev,
+                                            u1, u2)
+    accept = st.active & accept_raw
+    # Lanes whose node has no neighbors terminate immediately.
+    dead_end = st.active & ~has_nbrs
+
+    new_info, new_path, h_series, hring, done_now = absorb(
+        spec, st.info, st.path, st.h_series, st.hring, cand, accept)
+    done_now = done_now | dead_end
 
     return WalkerBatchState(
         cur=jnp.where(accept, cand, st.cur),
@@ -245,26 +334,25 @@ def _superstep(
         h_series=h_series,
         hring=hring,
         active=st.active & ~done_now,
-        key=key,
+        key=st.key,
         supersteps=st.supersteps + 1,
         accepts=st.accepts + jnp.sum(accept).astype(jnp.int32),
         rejects=st.rejects
-        + jnp.sum(st.active & has_nbrs & ~accept).astype(jnp.int32),
-        msg_count=st.msg_count + n_crossed,
-        msg_bytes=st.msg_bytes + add_bytes,
+        + jnp.sum(st.active & has_nbrs & ~accept_raw).astype(jnp.int32),
+        msg_count=st.msg_count,
+        msg_bytes=st.msg_bytes,
+        msg_bytes_analytic=st.msg_bytes_analytic,
     )
 
 
 @functools.partial(jax.jit, static_argnames=("policy", "spec"))
-def run_walk_batch(
+def _run_walk_batch_single(
     graph: CSRGraph,
     sources: jax.Array,
     key: jax.Array,
     policy: Policy,
     spec: WalkSpec,
-    part: Optional[jax.Array] = None,
 ) -> WalkerBatchState:
-    """Run one walk per source until every lane terminates (or cap)."""
     st = init_batch(sources, key, spec)
     cap = spec.supersteps_cap()
 
@@ -272,9 +360,38 @@ def run_walk_batch(
         return jnp.any(s.active) & (s.supersteps < cap)
 
     def body(s: WalkerBatchState):
-        return _superstep(graph, policy, spec, part, s)
+        return _superstep(graph, policy, spec, s)
 
     return jax.lax.while_loop(cond, body, st)
+
+
+def run_walk_batch(
+    graph: CSRGraph,
+    sources: jax.Array,
+    key: jax.Array,
+    policy: Policy,
+    spec: WalkSpec,
+    part: Optional[jax.Array] = None,
+    num_shards: Optional[int] = None,
+) -> WalkerBatchState:
+    """Run one walk per source until every lane terminates (or cap).
+
+    Without ``part`` this is the dense single-shard engine. With ``part``
+    the batch runs on the partition-sharded BSP engine (one logical shard
+    per partition): walkers live on the shard owning their current node and
+    every cross-partition hand-off is a real packed-message exchange, so
+    the returned ``msg_count``/``msg_bytes`` are measured collective
+    traffic. Walks are bit-identical either way (per-lane RNG).
+    """
+    sources = jnp.asarray(sources, jnp.int32)
+    if part is None:
+        return _run_walk_batch_single(graph, sources, key, policy, spec)
+    from repro.core.shard_engine import run_walk_sharded
+    part = jnp.asarray(part, jnp.int32)
+    if num_shards is None:
+        num_shards = int(jnp.max(part)) + 1
+    return run_walk_sharded(graph, sources, key, policy, spec, part,
+                            num_shards)
 
 
 def walks_to_numpy(st: WalkerBatchState) -> Tuple[np.ndarray, np.ndarray]:
@@ -291,5 +408,6 @@ def batch_stats(st: WalkerBatchState) -> Dict[str, float]:
         "rejects": int(st.rejects),
         "msg_count": int(st.msg_count),
         "msg_bytes": float(st.msg_bytes),
+        "msg_bytes_analytic": float(st.msg_bytes_analytic),
         "mean_len": float(np.mean(np.asarray(st.info.L))),
     }

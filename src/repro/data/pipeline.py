@@ -109,6 +109,30 @@ def stacked_shard_chunk(
         [s.chunk_at(epoch, step, chunk) for s in streams], axis=1)
 
 
+def ring_chunk_indices(
+    key, base: int, pool: int, count: int, shards: int, groups: int,
+    windows: int,
+):
+    """Device-side (C, S, G, W) ring-slot index tensor.
+
+    Samples ``count`` lifetimes per shard without replacement (tiling when
+    the pool is smaller than one chunk) from ring slots
+    [``base``, ``base + pool``) — the slot range one walk round (or, for
+    the schedule-completion tail, the whole filled ring) occupies. The
+    returned indices drive ONE device gather ``ring.walks[idx]`` that
+    assembles the (C, S, G, W, T) chunk ``train_chunk`` consumes: walks
+    never leave the device between the sampler and the learner.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    need = count * shards * groups * windows
+    perm = jax.random.permutation(key, pool)
+    if need > pool:
+        perm = jnp.resize(perm, (need,))
+    return base + perm[:need].reshape(count, shards, groups, windows)
+
+
 # ---------------------------------------------------------------------------
 # Prefetch
 # ---------------------------------------------------------------------------

@@ -47,6 +47,41 @@ def hotness_sync_spmd(
     return pi2, po2, nbytes
 
 
+def psum_union(tree, mask: jax.Array, axis: str):
+    """Exactly-one-sender union exchange over a named axis.
+
+    Every shard contributes its leaves masked by ``mask`` (lanes it is
+    sending); the psum reconstructs each lane's payload EXACTLY — including
+    negative sentinel values — because at most one shard sends any lane per
+    round (all other contributions are literal zeros). This is the
+    collective behind the walk engine's InCoM message hand-off
+    (``repro.core.shard_engine``): one all-reduce moves the packed
+    constant-size messages, and the byte volume measured from the masked
+    rows is the paper's Example-1 traffic.
+
+    Must be called inside shard_map / vmap with ``axis`` bound. ``mask`` is
+    broadcast against each leaf's leading dimensions.
+    """
+    def one(x):
+        m = mask
+        while m.ndim < x.ndim:
+            m = m[..., None]
+        return jax.lax.psum(jnp.where(m, x, jnp.zeros((), x.dtype)), axis)
+
+    return jax.tree_util.tree_map(one, tree)
+
+
+def local_mesh(num_devices: int, axis: str) -> "Mesh | None":
+    """A 1-axis mesh over the first ``num_devices`` local devices, or None
+    when the host has fewer (callers fall back to a stacked vmap emulation
+    of the same program)."""
+    import numpy as np
+    devs = jax.devices()
+    if len(devs) < num_devices:
+        return None
+    return Mesh(np.asarray(devs[:num_devices]), (axis,))
+
+
 def compressed_allreduce(
     grad: jax.Array,      # per-shard gradient block
     error: jax.Array,     # per-shard error-feedback residual (same shape)

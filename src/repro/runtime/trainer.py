@@ -18,6 +18,14 @@ assemble (C, S, G, W, T) chunks on a prefetch thread while the device runs
 the previous chunk's fused ``train_chunk`` scan — host work and device
 work overlap, and the device never waits on per-step negative sampling or
 uploads (the NOMAD overlap argument, on one process).
+
+``StreamingEmbedPipeline`` fuses the two halves of DistGER end to end:
+the partition-sharded walk engine appends finished rounds into a
+device-resident ``CorpusRing`` and the DSGL learner consumes ring slots as
+stacked shard chunks via one device gather — walks never round-trip
+through host numpy, and round r+1's walk generation is dispatched before
+round r's training so the two overlap (walk rounds stay gated by the
+Eq. 7 ΔD controller). See DESIGN.md §9.
 """
 
 from __future__ import annotations
@@ -287,3 +295,254 @@ class DSGLTrainer:
             return (jnp.mean(self.phi_in, axis=0),
                     jnp.mean(self.phi_out, axis=0))
         return self.phi_in[0], self.phi_out[0]
+
+
+# ---------------------------------------------------------------------------
+# Fused walk→train streaming pipeline
+# ---------------------------------------------------------------------------
+
+
+class StreamingEmbedPipeline:
+    """partition-sharded walks → device corpus ring → DSGL, overlapped.
+
+    Per round r the host (1) syncs once on the (|V|,) occurrence counts —
+    the Eq. 7 controller input, also reused to rebuild the node-space
+    negative alias table and the hotness blocks; (2) if the controller
+    says continue, DISPATCHES round r+1's walks; (3) enqueues round r's
+    training chunks, whose (C, S, G, W, T) input is one device gather from
+    the ring (``data.pipeline.ring_chunk_indices``). Walks therefore never
+    leave the device between sampler and learner, and on a multi-device
+    mesh the walk shards compute round r+1 while the trainer replicas run
+    round r (on one device the queues interleave; the host never stalls).
+
+    Embeddings stay in NODE space (no rank relabeling is needed because
+    the frequency order evolves with the stream); hotness-block sync rows
+    are mapped rank→node per round. The learning-rate schedule is fixed a
+    priori at ``epochs * max_rounds * steps_per_round`` steps — the walk
+    controller decides the corpus, not the schedule — and after sampling
+    stops the pipeline keeps consuming re-shuffled ring slots until the
+    schedule completes (the word2vec single-decayed-pass convention,
+    §6.4 recipe).
+
+    ``overlap=False`` serializes the phases (block after every walk round
+    and every train call) — the baseline the walk→train overlap-efficiency
+    benchmark compares against.
+    """
+
+    def __init__(self, graph, policy, spec, rounds_cfg: Dict, dsgl_cfg,
+                 *, assignment: Optional[np.ndarray] = None,
+                 num_shards: int = 1, walker_batch: int = 4096,
+                 overlap: bool = True):
+        from repro.core.corpus import CorpusRing
+        from repro.core.dsgl import init_embeddings
+        from repro.core.termination import WalkCountController
+
+        if getattr(policy, "needs_edge_cm", False) and graph.edge_cm is None:
+            graph = graph.with_edge_cm()
+        self.graph = graph
+        self.policy = policy
+        self.spec = spec
+        self.cfg = dsgl_cfg
+        self.num_shards = max(num_shards, 1)
+        self.assignment = (None if assignment is None
+                           else jnp.asarray(assignment, jnp.int32))
+        self.walker_batch = walker_batch
+        self.overlap = overlap
+        self.controller = WalkCountController(**rounds_cfg)
+        self.degrees = np.asarray(graph.degrees(), dtype=np.int64)
+
+        n = graph.num_nodes
+        self.sources = np.arange(n, dtype=np.int32)
+        # Retain as many full rounds as fit a ~0.5 GB slot budget; older
+        # rounds retire on wrap (training reads the current round's slots
+        # plus, in the tail, whatever is retained; ocn accumulates across
+        # wraps). One round is the floor — the round-aligned slot map needs
+        # it resident — so a graph whose single round cannot fit the int32
+        # occurrence guard must use the host-spilling two-phase path.
+        budget_rounds = max(1, (1 << 27) // max(spec.max_len * n, 1))
+        self.ring_rounds = min(self.controller.max_rounds, budget_rounds)
+        if self.ring_rounds * n * spec.max_len >= 2**31:
+            raise ValueError(
+                f"one walk round (|V|={n} x max_len={spec.max_len}) exceeds "
+                "the device corpus-ring budget; use "
+                "embed_graph(streaming=False), which spills rounds to host")
+        self.ring = CorpusRing.create(self.ring_rounds * n, spec.max_len, n)
+        per = dsgl_cfg.batch_groups * dsgl_cfg.multi_windows
+        self.steps_per_round = max(n // self.num_shards // per, 1)
+        self.total_steps = (dsgl_cfg.epochs * self.controller.max_rounds
+                            * self.steps_per_round)
+        self.global_step = 0
+
+        key = jax.random.PRNGKey(dsgl_cfg.seed)
+        self.key_walk, self.key_train, *rep_keys = jax.random.split(
+            key, 2 + self.num_shards)
+        reps = [init_embeddings(n, dsgl_cfg.dim, k) for k in rep_keys]
+        self.phi_in = jnp.stack([r[0] for r in reps])      # (S, N, d)
+        self.phi_out = jnp.stack([r[1] for r in reps])
+        # Device-accumulated walk stats: summed without forcing a sync.
+        self._stats = {k: jnp.zeros(()) for k in (
+            "supersteps", "accepts", "rejects", "msg_count", "msg_bytes",
+            "msg_bytes_analytic")}
+
+    # --- walk side --------------------------------------------------------
+    def _run_round(self, r: int):
+        """Dispatch all walk batches of round r; returns async states."""
+        from repro.core.walker import run_walk_batch
+
+        round_key = jax.random.fold_in(self.key_walk, r)
+        states = []
+        for start in range(0, len(self.sources), self.walker_batch):
+            chunk = self.sources[start:start + self.walker_batch]
+            k = jax.random.fold_in(round_key, start)
+            states.append(run_walk_batch(
+                self.graph, jnp.asarray(chunk, jnp.int32), k, self.policy,
+                self.spec, self.assignment,
+                num_shards=self.num_shards if self.assignment is not None
+                else None))
+        return states
+
+    def _append(self, states):
+        # Donated: the old ring version is dropped right here; XLA aliases
+        # the buffers when no queued trainer gather still reads them and
+        # falls back to a copy when one does — either way no per-batch
+        # full-ring copy survives on the steady-state hot path.
+        from repro.core.corpus import ring_append_donated
+        for st in states:
+            self.ring = ring_append_donated(
+                self.ring, st.path, st.info.L.astype(jnp.int32))
+            for k in self._stats:
+                self._stats[k] = self._stats[k] + getattr(st, k)
+
+    # --- train side -------------------------------------------------------
+    def _lrs(self, count: int) -> jnp.ndarray:
+        fracs = (self.global_step + np.arange(count)) / max(self.total_steps, 1)
+        return jnp.asarray(
+            np.maximum(self.cfg.lr * (1.0 - fracs), self.cfg.min_lr),
+            jnp.float32)
+
+    def _train_slots(self, base: int, pool: int, ocn_host: np.ndarray,
+                     steps: int, table=None, order=None):
+        """Enqueue ``steps`` training steps over ring slots [base, base+pool).
+
+        ``table``/``order`` let callers whose ocn is frozen (the schedule
+        tail) reuse one alias-table/argsort build across calls instead of
+        redoing the O(N) host work per iteration."""
+        from repro.core.corpus import FrequencyOrder
+        from repro.core.dsgl import build_alias_table, train_chunk
+        from repro.core.sync import sample_hotness_rows
+        from repro.data.pipeline import ring_chunk_indices
+
+        cfg = self.cfg
+        if table is None:
+            table = build_alias_table(ocn_host, cfg.neg_power)  # node space
+        replicated = self.num_shards > 1
+        rng = np.random.default_rng(cfg.seed * 9176 + self.global_step)
+        if order is None:
+            order = FrequencyOrder.from_ocn(ocn_host) if replicated else None
+        chunk = max(min(cfg.sync_period, steps), 1)
+        done = 0
+        while done < steps:
+            count = min(chunk, steps - done)
+            # Improvement-III cadence: one hotness exchange per sync_period
+            # LIFETIMES (global steps), not per dispatched chunk — rounds
+            # are often much shorter than a sync period, and averaging the
+            # replicas every few steps collapses the diversity that makes
+            # the replica ensemble train well (measured: AUC 0.64 -> 0.86).
+            sync_now = replicated and (
+                self.global_step // cfg.sync_period
+                != (self.global_step + count) // cfg.sync_period)
+            ck = jax.random.fold_in(self.key_train, self.global_step)
+            idx = ring_chunk_indices(
+                ck, base, pool, count, self.num_shards,
+                cfg.batch_groups, cfg.multi_windows)
+            wb = self.ring.walks[idx]                     # (C,S,G,W,T) gather
+            if sync_now:
+                starts, ends = order.hotness_blocks()
+                rows_rank = sample_hotness_rows(starts, ends, rng)
+                rows = jnp.asarray(order.to_node[rows_rank], jnp.int32)
+            else:
+                rows = jnp.zeros(0, jnp.int32)
+            ck2 = jax.random.fold_in(self.key_train, 2 * self.total_steps
+                                     + self.global_step)
+            self.phi_in, self.phi_out, _ = train_chunk(
+                self.phi_in, self.phi_out, wb, table, rows, ck2,
+                self._lrs(count), cfg.window, cfg.negatives,
+                cfg.use_kernel, sync_now)
+            self.global_step += count
+            done += count
+
+    # --- driver -----------------------------------------------------------
+    def run(self) -> Dict[str, Any]:
+        from repro.core.info import relative_entropy_dpq
+
+        t0 = time.perf_counter()
+        states = self._run_round(0)
+        self._append(states)
+        r = 0
+        while True:
+            ocn_host = np.asarray(self.ring.ocn)          # per-round sync
+            cont = self.controller.update_d(
+                relative_entropy_dpq(self.degrees, ocn_host))
+            if cont and self.overlap:
+                nxt = self._run_round(r + 1)              # walks ∥ training
+            n = len(self.sources)
+            self._train_slots((r * n) % self.ring.capacity, n, ocn_host,
+                              self.steps_per_round)
+            if not self.overlap:
+                jax.block_until_ready(self.phi_in)
+            if not cont:
+                break
+            if not self.overlap:
+                nxt = self._run_round(r + 1)
+                jax.block_until_ready(nxt[-1].path)
+            self._append(nxt)
+            r += 1
+
+        # Schedule-completion tail: re-consume the filled ring until the
+        # a-priori lr schedule ends (extra decayed passes over the corpus).
+        # ocn is frozen now, so the alias table / frequency order are built
+        # once and reused across every tail iteration.
+        from repro.core.corpus import FrequencyOrder
+        from repro.core.dsgl import build_alias_table
+
+        ocn_host = np.asarray(self.ring.ocn)
+        filled = self.ring.num_filled
+        tail_table = build_alias_table(ocn_host, self.cfg.neg_power)
+        tail_order = (FrequencyOrder.from_ocn(ocn_host)
+                      if self.num_shards > 1 else None)
+        while self.global_step < self.total_steps:
+            self._train_slots(
+                0, filled, ocn_host,
+                min(self.steps_per_round, self.total_steps - self.global_step),
+                table=tail_table, order=tail_order)
+        jax.block_until_ready(self.phi_in)
+        wall = time.perf_counter() - t0
+
+        if self.num_shards > 1:
+            phi_in = jnp.mean(self.phi_in, axis=0)
+            phi_out = jnp.mean(self.phi_out, axis=0)
+        else:
+            phi_in, phi_out = self.phi_in[0], self.phi_out[0]
+        stats = {k: float(v) for k, v in self._stats.items()}
+        stats["mean_len"] = (float(np.asarray(self.ring.lengths).sum())
+                             / max(self.ring.num_filled, 1))
+        stats["d_history"] = list(self.controller.history)
+        return {
+            "phi_in": phi_in, "phi_out": phi_out,
+            "rounds": self.controller.rounds,
+            "steps": self.global_step,
+            "wall_s": wall,
+            "ring": self.ring,
+            "stats": stats,
+        }
+
+    def corpus(self):
+        """Materialize the ring as a host ``Corpus`` (API boundary only)."""
+        from repro.core.corpus import Corpus, ring_to_numpy
+        walks, lengths = ring_to_numpy(self.ring)
+        stats = {k: float(v) for k, v in self._stats.items()}
+        stats["d_history"] = list(self.controller.history)
+        stats["mean_len"] = float(lengths.mean()) if len(lengths) else 0.0
+        return Corpus(walks=walks, lengths=lengths,
+                      ocn=np.asarray(self.ring.ocn, dtype=np.int64),
+                      rounds=self.controller.rounds, stats=stats)
