@@ -85,15 +85,48 @@ def _emit_bench_walk(walk_rec: dict) -> None:
     supersteps/s at k=1/k=4, measured-vs-analytic message bytes, and the
     walk→train overlap efficiency of the fused streaming pipeline."""
     sharded = walk_rec.get("sharded", {})
+    full_csr = walk_rec.get("full_csr_bytes")
+    scaling = {}
+    for key in ("k1_local", "k2_local", "k4_local", "k8_local", "k16_local"):
+        row = sharded.get(key)
+        if not row:
+            continue
+        scaling[key] = {
+            "supersteps_per_s": row.get("supersteps_per_s"),
+            "msg_bytes_per_shard": row.get("msg_bytes_per_shard", 0.0),
+            "peak_shard_csr_bytes": row.get("csr_bytes_per_shard"),
+            "csr_frac_of_full": (
+                row.get("csr_bytes_per_shard") / full_csr
+                if full_csr and row.get("csr_bytes_per_shard") else None),
+            "peak_lane_occupancy": row.get("peak_lane_occupancy"),
+            "pool_slots": row.get("pool_slots"),
+            "msg_bytes_measured": row.get("msg_bytes_measured"),
+            "msg_bytes_analytic": row.get("msg_bytes_analytic"),
+        }
     bench = {
         "engine": {
             "supersteps_per_s_k1": sharded.get("k1_dense", {}).get("supersteps_per_s"),
             "supersteps_per_s_k1_bsp": sharded.get("k1_bsp", {}).get("supersteps_per_s"),
             "supersteps_per_s_k4": sharded.get("k4", {}).get("supersteps_per_s"),
+            "supersteps_per_s_k4_local": sharded.get("k4_local", {}).get(
+                "supersteps_per_s"),
             "msg_bytes_measured_k4": sharded.get("k4", {}).get("msg_bytes_measured"),
             "msg_bytes_analytic_k4": sharded.get("k4", {}).get("msg_bytes_analytic"),
             "bytes_per_msg_k4": sharded.get("k4", {}).get("bytes_per_msg"),
         },
+        # Partition-local engine scaling columns (CSR slices + lane pools +
+        # packed exchange). peak_shard_csr_bytes tracks the (|V|+|E|)/k
+        # partition model; supersteps/s is the 1-device STACKED EMULATION,
+        # which serializes the k per-shard programs — it measures per-shard
+        # program cost, not multi-machine wall-clock (DESIGN.md §9).
+        "scaling_local": scaling,
+        "scaling_note": (
+            "supersteps_per_s in scaling_local is the single-device stacked "
+            "EMULATION (k per-shard programs serialized on one CPU); the "
+            "partition-local engine's scaling wins are the memory and wire "
+            "columns (peak_shard_csr_bytes, msg_bytes_per_shard). On a real "
+            "k-device mesh each program runs in parallel on its own slice."),
+        "full_csr_bytes": full_csr,
         "overlap": walk_rec.get("overlap", {}),
         "per_superstep_growth": {
             "incom": walk_rec.get("growth_incom"),
@@ -122,6 +155,18 @@ def _emit_bench_walk(walk_rec: dict) -> None:
         k1 = bench["engine"].get("supersteps_per_s_k1")
         if ref and k1:
             bench["engine"]["k1_vs_seed"] = k1 / ref
+    # ISSUE 3 acceptance tracker: k=4 against 2x the pre-refactor 1.8k.
+    k4_prev = 1767.9
+    k4_now = bench["engine"].get("supersteps_per_s_k4")
+    bench["k4_target"] = {
+        "baseline_prev_pr": k4_prev,
+        "target_2x": 2 * k4_prev,
+        "measured_replicated": k4_now,
+        "measured_local_emulation": bench["engine"].get(
+            "supersteps_per_s_k4_local"),
+        "speedup_vs_prev": (k4_now / k4_prev) if k4_now else None,
+        "met": bool(k4_now and k4_now >= 2 * k4_prev),
+    }
     path = os.path.join(REPO_ROOT, "BENCH_walk.json")
     with open(path, "w") as f:
         json.dump(bench, f, indent=1, default=float)

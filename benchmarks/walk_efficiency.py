@@ -67,14 +67,30 @@ def _time_engine(graph, runner, n_walkers: int = 512, reps: int = 3) -> Dict:
 
 
 def _time_sharded(graph, part, k: int, n_walkers: int = 512,
-                  reps: int = 3) -> Dict:
+                  reps: int = 5, engine: str = "replicated") -> Dict:
     policy = make_policy("huge")
     part_j = jnp.asarray(part, jnp.int32)
-    return _time_engine(
+    rec = _time_engine(
         graph,
         lambda src, key: run_walk_sharded(graph, src, key, policy,
-                                          _SHARD_SPEC, part_j, k),
+                                          _SHARD_SPEC, part_j, k,
+                                          engine=engine),
         n_walkers, reps)
+    rec["engine"] = engine
+    if engine == "local":
+        # Per-shard balance + partition-local memory columns (paper
+        # Eq. 14-15 model: CSR bytes/shard ~ (|V| + |E|)/k).
+        sources = jnp.arange(n_walkers, dtype=jnp.int32) % graph.num_nodes
+        _, stats = run_walk_sharded(
+            graph, sources, jax.random.PRNGKey(1), policy, _SHARD_SPEC,
+            part_j, k, engine="local", with_stats=True)
+        rec["csr_bytes_per_shard"] = max(stats["csr_bytes_per_shard"])
+        rec["peak_lane_occupancy"] = stats["peak_lane_occupancy"]
+        rec["pool_slots"] = stats["pool_slots"]
+        rec["owned_nodes"] = stats["owned_nodes"]
+        # wire volume per shard: measured message bytes averaged over k
+        rec["msg_bytes_per_shard"] = rec["msg_bytes_measured"] / k
+    return rec
 
 
 def _time_dense(graph, n_walkers: int = 512, reps: int = 3) -> Dict:
@@ -145,16 +161,32 @@ def run(quick: bool = True) -> Dict:
     rec["routine_len"] = 80
     rec["len_reduction_pct"] = 100.0 * (1 - lengths.mean() / 80.0)
 
-    # --- partition-sharded BSP engine: k=1 vs k=4, measured traffic --------
+    # --- partition-sharded BSP engine: k-scaling, measured traffic ---------
     # "k1_dense" is the engine's k=1 fast path (run_walk_batch, no exchange
     # machinery); "k1_bsp" runs the full BSP loop on one shard, so the
     # difference is the measured cost of message packing + the collective.
+    # "k{N}_local" rows run the partition-local compacted engine (CSR
+    # slices + lane pools + packed exchange) and carry the per-shard
+    # memory/balance columns; "k4" keeps the replicated engine for
+    # trajectory continuity with earlier BENCH_walk files.
     from repro.core.mpgp import mpgp_partition
     part4 = mpgp_partition(g, 4, gamma=2.0).assignment
+    n = g.num_nodes
+    full_csr_bytes = int(
+        (g.indptr.shape[0] + g.indices.shape[0]
+         + (g.edge_cm.shape[0] if g.edge_cm is not None else 0)) * 4)
+    rec["full_csr_bytes"] = full_csr_bytes
     rec["sharded"] = {
         "k1_dense": _time_dense(g),
-        "k1_bsp": _time_sharded(g, np.zeros(g.num_nodes, np.int32), 1),
+        "k1_bsp": _time_sharded(g, np.zeros(n, np.int32), 1),
         "k4": _time_sharded(g, part4, 4),
+        "k1_local": _time_sharded(g, np.zeros(n, np.int32), 1,
+                                  engine="local"),
+        "k2_local": _time_sharded(g, part4 % 2, 2, engine="local"),
+        "k4_local": _time_sharded(g, part4, 4, engine="local"),
+        "k8_local": _time_sharded(g, np.arange(n) % 8, 8, engine="local"),
+        "k16_local": _time_sharded(g, np.arange(n) % 16, 16,
+                                   engine="local"),
     }
 
     # --- walk→train overlap (fused streaming pipeline) ---------------------

@@ -30,6 +30,7 @@ class EmbedConfig:
     mu: float = 0.995
     reg_start: int = 16
     delta: float = 1e-3
+    d_window: int = 3              # Eq. 7 gate: windowed-mean ΔD (1 = raw)
     dim: int = 128
     window: int = 10
     negatives: int = 5
@@ -48,7 +49,8 @@ def make_walk_plan(cfg: EmbedConfig) -> Tuple[object, WalkSpec, Dict]:
     if cfg.info_termination:
         spec = WalkSpec(max_len=cfg.max_len, min_len=cfg.min_len,
                         mu=cfg.mu, info_mode="incom", reg_start=cfg.reg_start)
-        rounds = dict(delta=cfg.delta, min_rounds=2, max_rounds=20)
+        rounds = dict(delta=cfg.delta, min_rounds=2, max_rounds=20,
+                      window=cfg.d_window)
     else:
         spec = WalkSpec(max_len=cfg.fixed_len, info_mode="fixed",
                         fixed_len=cfg.fixed_len)

@@ -176,6 +176,7 @@ def generate_corpus(
     delta: float = 1e-3,
     min_rounds: int = 2,
     max_rounds: int = 20,
+    window: int = 1,
     walker_batch: int = 4096,
     seed: int = 0,
     part: Optional[np.ndarray] = None,
@@ -202,7 +203,8 @@ def generate_corpus(
     num_shards = 1 if part is None else int(np.max(np.asarray(part))) + 1
 
     controller = WalkCountController(
-        delta=delta, min_rounds=min_rounds, max_rounds=max_rounds
+        delta=delta, min_rounds=min_rounds, max_rounds=max_rounds,
+        window=window,
     )
     key = jax.random.PRNGKey(seed)
     # This shim materializes EVERY walk for its numpy Corpus, so the ring

@@ -180,16 +180,28 @@ def accept_update(
     path: jax.Array,
     v: jax.Array,
     reg_start: int = 1,
+    mask: jax.Array = None,
 ) -> Tuple[InfoState, jax.Array]:
     """Apply one accepted step: compute n(v), H^{L+1}, running stats, and the
-    appended path. Returns (new_state, new_path)."""
+    appended path. Returns (new_state, new_path). ``mask`` (B,) restricts
+    the path append to those lanes — callers that would otherwise re-select
+    the whole (B, max_len) buffer afterwards fold their lane mask into the
+    append's one-hot instead (one wide op, not two)."""
     n_v = count_in_path(path, s.L.astype(jnp.int32), v)
     h_new = entropy_step(s.H, s.L, n_v)
     l_new = s.L + 1.0
     s_new = stats_step(s, h_new, l_new, reg_start)
-    b = path.shape[0]
     idx = s.L.astype(jnp.int32)  # append position == old length
-    path_new = path.at[jnp.arange(b), idx].set(v)
+    # One-hot select instead of a scatter: a batched scatter lowers to a
+    # serial per-entry while-loop on XLA CPU (~0.3 us/lane/step inside the
+    # walk engines); the (B, max_len) select vectorizes. Appends past the
+    # buffer (idx == max_len) write nothing, matching the scatter's
+    # out-of-bounds drop.
+    pos = jnp.arange(path.shape[1], dtype=jnp.int32)[None, :]
+    hit = pos == idx[:, None]
+    if mask is not None:
+        hit = hit & mask[:, None]
+    path_new = jnp.where(hit, v[:, None], path)
     return s_new, path_new
 
 

@@ -73,6 +73,11 @@ class Policy:
 
     needs_prev: bool = False
     needs_edge_cm: bool = False     # HuGE transition needs Cm(u,v) precompute
+    # Whether accept_prob can be evaluated from one shard's partition-local
+    # CSR slice alone (local indptr row + edge-aligned halo metadata).
+    # Second-order policies that read N(prev) — a row that may live on
+    # another shard — cannot, and route through the replicated engine.
+    supports_partition_local: bool = False
 
     def accept_prob(
         self,
@@ -82,6 +87,18 @@ class Policy:
         cand: jax.Array,
         cand_edge_idx: jax.Array,
     ) -> jax.Array:
+        raise NotImplementedError
+
+    def accept_prob_local(
+        self,
+        shard,                 # graph.csr.ShardCSR (one shard's slice)
+        prev: jax.Array,       # (P,) global ids
+        cur_local: jax.Array,  # (P,) LOCAL row ids in this shard's slice
+        cand: jax.Array,       # (P,) global ids
+        cand_edge_idx: jax.Array,  # (P,) LOCAL edge ids in this slice
+    ) -> jax.Array:
+        """Partition-local form of ``accept_prob``: identical arithmetic on
+        the shard's slice (bit-identical outputs), no global CSR reads."""
         raise NotImplementedError
 
 
@@ -98,6 +115,7 @@ class HugePolicy(Policy):
 
     needs_prev = False
     needs_edge_cm = True
+    supports_partition_local = True
 
     def accept_prob(self, graph, prev, cur, cand, cand_edge_idx):
         deg_u = node_degrees(graph, cur)
@@ -110,6 +128,22 @@ class HugePolicy(Policy):
         alpha = ratio / jnp.maximum(deg_u - cm, 1.0)
         if graph.weights is not None:
             alpha = alpha * graph.weights[cand_edge_idx]
+        return jnp.tanh(alpha)
+
+    def accept_prob_local(self, shard, prev, cur_local, cand, cand_edge_idx):
+        # Same f32 expression as accept_prob, fed from the slice: deg(u)
+        # from the local row, deg(v)/Cm/w from the edge-aligned halo arrays.
+        deg_u = (shard.indptr[cur_local + 1]
+                 - shard.indptr[cur_local]).astype(jnp.float32)
+        deg_v = shard.nbr_deg[cand_edge_idx].astype(jnp.float32)
+        if shard.edge_cm is None:
+            raise ValueError("HugePolicy requires graph.with_edge_cm()")
+        cm = shard.edge_cm[cand_edge_idx].astype(jnp.float32)
+        ratio = jnp.maximum(deg_u / jnp.maximum(deg_v, 1.0),
+                            deg_v / jnp.maximum(deg_u, 1.0))
+        alpha = ratio / jnp.maximum(deg_u - cm, 1.0)
+        if shard.weights is not None:
+            alpha = alpha * shard.weights[cand_edge_idx]
         return jnp.tanh(alpha)
 
 
@@ -143,8 +177,12 @@ class DeepwalkPolicy(Policy):
     """Uniform first-order walk — every candidate accepted."""
 
     needs_prev = False
+    supports_partition_local = True
 
     def accept_prob(self, graph, prev, cur, cand, cand_edge_idx):
+        return jnp.ones_like(cand, dtype=jnp.float32)
+
+    def accept_prob_local(self, shard, prev, cur_local, cand, cand_edge_idx):
         return jnp.ones_like(cand, dtype=jnp.float32)
 
 

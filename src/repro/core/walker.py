@@ -258,23 +258,22 @@ def absorb(
 
     Returns (info', path', h_series', hring', done_now).
     """
-    b = path.shape[0]
-    info_acc, path_acc = incom.accept_update(info, path, cand, spec.reg_start)
+    info_acc, new_path = incom.accept_update(info, path, cand,
+                                             spec.reg_start, mask=proc)
     new_info = jax.tree_util.tree_map(
         lambda new, old: jnp.where(proc, new, old), info_acc, info
     )
-    new_path = jnp.where(proc[:, None], path_acc, path)
     l_new = new_info.L  # (B,) f32 — post-accept length
 
     if spec.info_mode == "fullpath":
         # Recompute H from scratch (O(L^2) lanes) and R over the H-series.
         h_full = _fullpath_entropy(new_path, l_new.astype(jnp.int32))
         idx = jnp.clip(l_new.astype(jnp.int32) - 1, 0, spec.max_len - 1)
+        # One-hot select, not scatter (batched scatters serialize on CPU).
+        hpos = jnp.arange(h_series.shape[1], dtype=jnp.int32)[None, :]
         h_series = jnp.where(
-            proc[:, None],
-            h_series.at[jnp.arange(b), idx].set(h_full),
-            h_series,
-        )
+            proc[:, None] & (hpos == idx[:, None]),
+            h_full[:, None], h_series)
         r2 = _fullpath_r2(h_series, l_new.astype(jnp.int32),
                           spec.reg_window, spec.reg_start)
         # Overwrite incremental H with recomputed (identical values) to keep
@@ -284,11 +283,10 @@ def absorb(
     elif spec.reg_window:
         k = hring.shape[1]
         slot = jnp.mod(l_new.astype(jnp.int32) - 1, k)
+        rpos = jnp.arange(k, dtype=jnp.int32)[None, :]
         hring = jnp.where(
-            proc[:, None],
-            hring.at[jnp.arange(b), slot].set(new_info.H),
-            hring,
-        )
+            proc[:, None] & (rpos == slot[:, None]),
+            new_info.H[:, None], hring)
         r2 = incom.windowed_r_squared(hring, l_new, spec.reg_window)
     else:
         r2 = incom.r_squared(new_info)
@@ -373,6 +371,7 @@ def run_walk_batch(
     spec: WalkSpec,
     part: Optional[jax.Array] = None,
     num_shards: Optional[int] = None,
+    **shard_kwargs,
 ) -> WalkerBatchState:
     """Run one walk per source until every lane terminates (or cap).
 
@@ -381,7 +380,9 @@ def run_walk_batch(
     per partition): walkers live on the shard owning their current node and
     every cross-partition hand-off is a real packed-message exchange, so
     the returned ``msg_count``/``msg_bytes`` are measured collective
-    traffic. Walks are bit-identical either way (per-lane RNG).
+    traffic. Walks are bit-identical either way (per-lane RNG). Extra
+    keyword arguments (``engine``, ``pool_factor``, ``exchange_cap``, ...)
+    pass through to ``shard_engine.run_walk_sharded``.
     """
     sources = jnp.asarray(sources, jnp.int32)
     if part is None:
@@ -391,7 +392,7 @@ def run_walk_batch(
     if num_shards is None:
         num_shards = int(jnp.max(part)) + 1
     return run_walk_sharded(graph, sources, key, policy, spec, part,
-                            num_shards)
+                            num_shards, **shard_kwargs)
 
 
 def walks_to_numpy(st: WalkerBatchState) -> Tuple[np.ndarray, np.ndarray]:

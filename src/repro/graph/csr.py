@@ -209,26 +209,185 @@ def subgraph_partition_pad(
     (required for shard_map). Node ids stay GLOBAL; each partition stores the
     adjacency of the nodes it owns.
     """
+    parts = _partition_slices(graph, assignment, num_parts)
+    return (parts["indptr"], parts["indices"], parts["owned"],
+            parts["max_nodes"])
+
+
+def _partition_slices(
+    graph: CSRGraph, assignment: np.ndarray, num_parts: int
+) -> dict:
+    """Vectorized per-partition CSR slicing (host numpy, O(|V| + |E|)).
+
+    Within a partition, rows are ordered by ascending GLOBAL node id and
+    each row keeps its sorted neighbor list, so the slice row for node v is
+    bit-for-bit the global CSR row for v.
+    """
     g = graph.to_numpy()
-    indptr, indices = g.indptr.astype(np.int64), g.indices.astype(np.int64)
+    indptr = np.asarray(g.indptr, np.int64)
+    indices = np.asarray(g.indices, np.int64)
     n = len(indptr) - 1
-    assignment = np.asarray(assignment)
-    owned = [np.where(assignment == p)[0] for p in range(num_parts)]
-    max_nodes = max((len(o) for o in owned), default=0)
-    max_edges = 0
-    for o in owned:
-        deg = indptr[o + 1] - indptr[o]
-        max_edges = max(max_edges, int(deg.sum()))
-    indptr_p = np.zeros((num_parts, max_nodes + 1), dtype=np.int64)
-    indices_p = np.full((num_parts, max(max_edges, 1)), -1, dtype=np.int64)
-    owned_p = np.full((num_parts, max_nodes), -1, dtype=np.int64)
-    for p, o in enumerate(owned):
-        owned_p[p, : len(o)] = o
-        off = 0
-        for i, u in enumerate(o):
-            lo, hi = indptr[u], indptr[u + 1]
-            indices_p[p, off : off + (hi - lo)] = indices[lo:hi]
-            off += hi - lo
-            indptr_p[p, i + 1] = off
-        indptr_p[p, len(o) + 1 :] = off
-    return indptr_p, indices_p, owned_p, max_nodes
+    asn = np.asarray(assignment, np.int64)
+    deg = indptr[1:] - indptr[:-1]
+
+    counts = np.bincount(asn, minlength=num_parts)
+    max_nodes = max(int(counts.max()), 1) if n else 1
+    node_starts = np.zeros(num_parts + 1, np.int64)
+    np.cumsum(counts, out=node_starts[1:])
+    order = np.argsort(asn, kind="stable")       # ascending ids within part
+    local_of = np.empty(max(n, 1), np.int64)
+    local_of[order] = np.arange(n) - np.repeat(node_starts[:-1], counts)
+    owned = np.full((num_parts, max_nodes), -1, np.int64)
+    if n:
+        owned[asn, local_of[:n]] = np.arange(n)
+
+    deg_p = np.zeros((num_parts, max_nodes), np.int64)
+    if n:
+        deg_p[asn, local_of[:n]] = deg
+    indptr_p = np.zeros((num_parts, max_nodes + 1), np.int64)
+    np.cumsum(deg_p, axis=1, out=indptr_p[:, 1:])
+
+    # Arcs grouped by partition; the original arc order is src-major with
+    # ascending src, so a stable sort by partition keeps each partition's
+    # arcs in ascending-local-row order — exactly the indptr_p layout.
+    src = np.repeat(np.arange(n), deg)
+    arc_order = np.argsort(asn[src], kind="stable") if len(src) else src
+    e_counts = np.bincount(asn[src], minlength=num_parts).astype(np.int64)
+    max_edges = max(int(e_counts.max()), 1) if len(src) else 1
+    e_starts = np.zeros(num_parts + 1, np.int64)
+    np.cumsum(e_counts, out=e_starts[1:])
+    indices_p = np.full((num_parts, max_edges), -1, np.int64)
+    arc_p = asn[src][arc_order]
+    arc_pos = np.arange(len(src)) - np.repeat(e_starts[:-1], e_counts)
+    dst = indices[arc_order]
+    if len(src):
+        indices_p[arc_p, arc_pos] = dst
+
+    def edge_aligned(values, fill, dtype):
+        out = np.full((num_parts, max_edges), fill, dtype)
+        if len(src):
+            out[arc_p, arc_pos] = values
+        return out
+
+    return {
+        "indptr": indptr_p, "indices": indices_p, "owned": owned,
+        "max_nodes": max_nodes, "local_of": local_of[:n].astype(np.int64),
+        "num_owned": counts.astype(np.int64), "deg": deg,
+        "arc_dst": dst, "edge_aligned": edge_aligned,
+        "arc_order": arc_order,
+    }
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class ShardCSR:
+    """Per-shard padded CSR slice in LOCAL row ids + edge-aligned halo
+    metadata (DESIGN.md §9). Stacked form has a leading (k,) axis; inside a
+    ``vmap``/``shard_map`` program the leading axis is mapped away and the
+    same class holds one shard's slice.
+
+    indptr:    (k, max_nodes+1) int32 — local row offsets
+    indices:   (k, max_edges)   int32 — GLOBAL neighbor ids (-1 pad)
+    nbr_owner: (k, max_edges)   int32 — owning shard of each neighbor (the
+                                        halo remap: owner[] lookups for
+                                        candidates never touch a global map)
+    nbr_deg:   (k, max_edges)   int32 — degree of each neighbor (HuGE Eq. 3)
+    weights:   (k, max_edges)   f32 or None — edge weights, slice-aligned
+    edge_cm:   (k, max_edges)   int32 or None — Cm(u,v), slice-aligned
+    """
+
+    indptr: jax.Array
+    indices: jax.Array
+    nbr_owner: jax.Array
+    nbr_deg: jax.Array
+    weights: Optional[jax.Array] = None
+    edge_cm: Optional[jax.Array] = None
+
+    def tree_flatten(self):
+        return (self.indptr, self.indices, self.nbr_owner, self.nbr_deg,
+                self.weights, self.edge_cm), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    def take_shard(self) -> "ShardCSR":
+        """Drop the leading length-1 axis a shard_map block carries."""
+        return jax.tree_util.tree_map(lambda x: x[0], self)
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionedCSR:
+    """Host-level partition-local graph store: stacked ``ShardCSR`` slices
+    plus the replicated O(|V|) node metadata the walk engine needs.
+
+    ``slices`` scale as O(|V|/k + |E|/k) per shard — the memory the paper's
+    per-partition cost model (Eq. 14–15) budgets per machine; ``local_of``
+    (global node -> local row at its owner) is O(|V|) node metadata,
+    replicated like the MPGP ``assignment`` itself.
+    """
+
+    slices: ShardCSR              # stacked (k, ...) device arrays
+    local_of: jax.Array           # (|V|,) int32, replicated
+    owned: np.ndarray             # (k, max_nodes) int64, host
+    num_owned: np.ndarray         # (k,) int64, host
+    num_parts: int
+
+    def shard_csr_nbytes(self) -> np.ndarray:
+        """Per-shard bytes of the CSR slice proper (indptr + indices +
+        optional weights/cm) — the quantity BENCH_walk reports against the
+        |V|/k + |E|/k model."""
+        per = (self.slices.indptr.shape[-1] * 4
+               + self.slices.indices.shape[-1] * 4)
+        if self.slices.weights is not None:
+            per += self.slices.weights.shape[-1] * 4
+        if self.slices.edge_cm is not None:
+            per += self.slices.edge_cm.shape[-1] * 4
+        return np.full(self.num_parts, per, np.int64)
+
+
+def build_partitioned_csr(
+    graph: CSRGraph, assignment: np.ndarray, num_parts: int
+) -> PartitionedCSR:
+    """Build the partition-local store the sharded walk engine runs on.
+
+    Each shard's slice holds the adjacency of the nodes it owns in local
+    row ids, with neighbor ids kept global (they name the message
+    destination and the path entry) and the per-edge halo metadata —
+    neighbor owner and neighbor degree — precomputed so phase A never
+    indexes a global O(|E|) array.
+    """
+    parts = _partition_slices(graph, assignment, num_parts)
+    g = graph.to_numpy()
+    asn = np.asarray(assignment, np.int64)
+    deg = parts["deg"]
+    dst = parts["arc_dst"]
+    edge_aligned = parts["edge_aligned"]
+
+    nbr_owner = edge_aligned(asn[dst] if len(dst) else dst, -1, np.int64)
+    nbr_deg = edge_aligned(deg[dst] if len(dst) else dst, 0, np.int64)
+    weights_p = None
+    if g.weights is not None:
+        w = np.asarray(g.weights, np.float32)[parts["arc_order"]]
+        weights_p = edge_aligned(w, 0.0, np.float32)
+    edge_cm_p = None
+    if g.edge_cm is not None:
+        cm = np.asarray(g.edge_cm, np.int64)[parts["arc_order"]]
+        edge_cm_p = edge_aligned(cm, 0, np.int64)
+
+    slices = ShardCSR(
+        indptr=jnp.asarray(parts["indptr"], jnp.int32),
+        indices=jnp.asarray(parts["indices"], jnp.int32),
+        nbr_owner=jnp.asarray(nbr_owner, jnp.int32),
+        nbr_deg=jnp.asarray(nbr_deg, jnp.int32),
+        weights=None if weights_p is None else jnp.asarray(weights_p),
+        edge_cm=None if edge_cm_p is None else jnp.asarray(edge_cm_p,
+                                                           jnp.int32),
+    )
+    return PartitionedCSR(
+        slices=slices,
+        local_of=jnp.asarray(parts["local_of"], jnp.int32),
+        owned=parts["owned"],
+        num_owned=parts["num_owned"],
+        num_parts=num_parts,
+    )

@@ -306,11 +306,14 @@ class StreamingEmbedPipeline:
     """partition-sharded walks → device corpus ring → DSGL, overlapped.
 
     Per round r the host (1) syncs once on the (|V|,) occurrence counts —
-    the Eq. 7 controller input, also reused to rebuild the node-space
-    negative alias table and the hotness blocks; (2) if the controller
-    says continue, DISPATCHES round r+1's walks; (3) enqueues round r's
-    training chunks, whose (C, S, G, W, T) input is one device gather from
-    the ring (``data.pipeline.ring_chunk_indices``). Walks therefore never
+    the Eq. 7 controller input (gated on a WINDOWED-mean ΔD when
+    ``rounds_cfg["window"]`` > 1, which keeps tight deltas from pinning
+    small-graph runs at max_rounds on sampling noise — DESIGN.md §9), also
+    reused to rebuild the node-space negative alias table and the hotness
+    blocks; (2) if the controller says continue, DISPATCHES round r+1's
+    walks; (3) enqueues round r's training chunks, whose (C, S, G, W, T)
+    input is one device gather from the ring
+    (``data.pipeline.ring_chunk_indices``). Walks therefore never
     leave the device between sampler and learner, and on a multi-device
     mesh the walk shards compute round r+1 while the trainer replicas run
     round r (on one device the queues interleave; the host never stalls).
