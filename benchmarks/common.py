@@ -29,3 +29,33 @@ def save(name: str, record: Dict[str, Any]) -> None:
 def block(x):
     import jax
     return jax.block_until_ready(x)
+
+
+def link_prediction_auc(graph, phi, rng, n_pairs: int = 2000) -> float:
+    """AUC of dot-product scores: positive edges vs sampled non-edges.
+
+    The one copy of the link-prediction scorer shared by the benchmark
+    modules and the e2e tests (examples keep a standalone inline copy —
+    they run with sys.path rooted at examples/, where the ``benchmarks``
+    package is not importable).
+    """
+    import numpy as np
+
+    indptr = np.asarray(graph.indptr)
+    indices = np.asarray(graph.indices)
+    n = graph.num_nodes
+    src = np.repeat(np.arange(n), np.diff(indptr))
+    pos_idx = rng.choice(len(src), size=min(n_pairs, len(src)),
+                         replace=False)
+    pos = np.stack([src[pos_idx], indices[pos_idx]], 1)
+    adj = {(int(a), int(b)) for a, b in zip(src, indices)}
+    neg = []
+    while len(neg) < len(pos):
+        a, b = rng.integers(0, n, 2)
+        if a != b and (int(a), int(b)) not in adj:
+            neg.append((a, b))
+    neg = np.array(neg)
+    s_pos = (phi[pos[:, 0]] * phi[pos[:, 1]]).sum(-1)
+    s_neg = (phi[neg[:, 0]] * phi[neg[:, 1]]).sum(-1)
+    diff = s_pos[:, None] - s_neg[None, :]
+    return float((diff > 0).mean() + 0.5 * (diff == 0).mean())

@@ -8,31 +8,14 @@ from typing import Dict
 
 import numpy as np
 
-from benchmarks.common import save, timer
+from benchmarks.common import link_prediction_auc, save, timer
 from repro.core.api import EmbedConfig, embed_graph, sample_corpus
 from repro.graph.generators import rmat_graph
 
 
 def _auc(graph, phi, seed=0):
-    rng = np.random.default_rng(seed)
-    indptr = np.asarray(graph.indptr)
-    indices = np.asarray(graph.indices)
-    n = graph.num_nodes
-    src = np.repeat(np.arange(n), np.diff(indptr))
-    k = min(1000, len(src))
-    pos_idx = rng.choice(len(src), size=k, replace=False)
-    pos = np.stack([src[pos_idx], indices[pos_idx]], 1)
-    adj = set(zip(src.tolist(), indices.tolist()))
-    neg = []
-    while len(neg) < k:
-        a, b = rng.integers(0, n, 2)
-        if a != b and (int(a), int(b)) not in adj:
-            neg.append((a, b))
-    neg = np.asarray(neg)
-    sp = (phi[pos[:, 0]] * phi[pos[:, 1]]).sum(-1)
-    sn = (phi[neg[:, 0]] * phi[neg[:, 1]]).sum(-1)
-    d = sp[:, None] - sn[None, :]
-    return float((d > 0).mean() + 0.5 * (d == 0).mean())
+    return link_prediction_auc(graph, phi, np.random.default_rng(seed),
+                               n_pairs=1000)
 
 
 def run(quick: bool = True) -> Dict:

@@ -1,0 +1,90 @@
+"""Dynamic-graph refresh benchmark (ISSUE 4 acceptance tracker).
+
+Embeds a graph, applies a 5% localized edge-churn batch, and absorbs it
+two ways: the incremental refresh path (delta overlay -> corpus-recovered
+affected set -> subset re-walk -> in-place fine-tune) and a from-scratch
+recompute on the mutated graph. Reports the cost columns (churn %,
+affected-vertex %, re-walk supersteps vs full, refresh wall vs recompute
+wall) and the quality column (link-prediction AUC on the mutated graph:
+stale vs refreshed vs scratch). Repo-root ``BENCH_incremental.json`` is
+emitted by ``benchmarks.run --only incremental``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict
+
+import numpy as np
+
+from benchmarks.common import link_prediction_auc, save
+from repro.core.api import EmbedConfig, embed_graph, refresh_embedding
+from repro.graph.generators import churn_batch, rmat_graph
+
+
+def run(quick: bool = True) -> Dict:
+    n = 2048 if quick else 8192
+    g = rmat_graph(n, 10, seed=3)
+    cfg = EmbedConfig(dim=32, epochs=1, lr=0.05, delta=1e-3, max_len=40,
+                      min_len=10, window=6, negatives=4)
+    rng = np.random.default_rng(0)
+
+    t0 = time.perf_counter()
+    phi_stale, _, state = embed_graph(g, cfg, num_shards=2,
+                                      return_state=True)
+    wall_initial = time.perf_counter() - t0
+    corpus0 = state.refresher.pipeline.corpus()
+    full_supersteps = int(corpus0.stats["supersteps"])
+
+    batch = churn_batch(g, 0.05, seed=1)
+    phi_refresh, _, stats = refresh_embedding(state, batch)
+    g2 = state.graph
+
+    t0 = time.perf_counter()
+    cfg_scratch = dataclasses.replace(cfg, rng_mode="vertex")
+    phi_scratch, _, scratch_corpus = embed_graph(
+        g2, cfg_scratch, num_shards=2, return_corpus=True)
+    wall_scratch = time.perf_counter() - t0
+    scratch_supersteps = int(scratch_corpus.stats["supersteps"])
+
+    auc_stale = link_prediction_auc(g2, phi_stale,
+                                    np.random.default_rng(7))
+    auc_refresh = link_prediction_auc(g2, phi_refresh,
+                                      np.random.default_rng(7))
+    auc_scratch = link_prediction_auc(g2, phi_scratch,
+                                      np.random.default_rng(7))
+
+    rec = {
+        "num_nodes": n,
+        "churn_edges": stats.changed_edges,
+        "churn_frac": stats.churn_frac,
+        "affected_vertices": stats.affected,
+        "affected_frac": stats.affected_frac,
+        "retained_rounds": stats.retained_rounds,
+        "extra_rounds": stats.extra_rounds,
+        "rewalk_walks": stats.rewalk_walks,
+        "scratch_walks": scratch_corpus.num_walks,
+        # Walk count is the width-scaling cost (BSP supersteps are batch-
+        # width-independent, so a subset round costs as many SUPERSTEPS as
+        # a full one but |affected|/|V| of the lane work and messages).
+        "rewalk_walk_frac": (stats.rewalk_walks
+                             / max(scratch_corpus.num_walks, 1)),
+        "rewalk_supersteps": stats.rewalk_supersteps,
+        "full_walk_supersteps": full_supersteps,
+        "scratch_walk_supersteps": scratch_supersteps,
+        "rewalk_superstep_frac": (stats.rewalk_supersteps
+                                  / max(scratch_supersteps, 1)),
+        "fine_tune_steps": stats.fine_tune_steps,
+        "refresh_wall_s": stats.wall_s,
+        "initial_embed_wall_s": wall_initial,
+        "scratch_recompute_wall_s": wall_scratch,
+        "refresh_speedup_vs_scratch": wall_scratch / max(stats.wall_s, 1e-9),
+        "auc_stale": auc_stale,
+        "auc_refresh": auc_refresh,
+        "auc_scratch": auc_scratch,
+        "auc_delta_vs_scratch": auc_refresh - auc_scratch,
+        "auc_gain_vs_stale": auc_refresh - auc_stale,
+    }
+    save("incremental", rec)
+    return rec

@@ -171,6 +171,11 @@ def run(quick: bool = True) -> Dict:
     # trajectory continuity with earlier BENCH_walk files.
     from repro.core.mpgp import mpgp_partition
     part4 = mpgp_partition(g, 4, gamma=2.0).assignment
+    # Walker-load-aware variant: Eq. 15 capacity on DEGREE mass with a
+    # tight gamma, so the partition spreads edge mass (and with it walker
+    # occupancy) instead of letting two shards absorb the whole rich club.
+    part4_deg = mpgp_partition(g, 4, gamma=1.15,
+                               tau_weight="degree").assignment
     n = g.num_nodes
     full_csr_bytes = int(
         (g.indptr.shape[0] + g.indices.shape[0]
@@ -184,6 +189,8 @@ def run(quick: bool = True) -> Dict:
                                   engine="local"),
         "k2_local": _time_sharded(g, part4 % 2, 2, engine="local"),
         "k4_local": _time_sharded(g, part4, 4, engine="local"),
+        "k4_local_degree_tau": _time_sharded(g, part4_deg, 4,
+                                             engine="local"),
         "k8_local": _time_sharded(g, np.arange(n) % 8, 8, engine="local"),
         "k16_local": _time_sharded(g, np.arange(n) % 16, 16,
                                    engine="local"),

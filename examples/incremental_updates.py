@@ -1,0 +1,86 @@
+"""End-to-end dynamic-graph driver: embed, churn, refresh incrementally.
+
+Loads (generates) a graph, trains DistGER embeddings with the streaming
+pipeline, applies a batch of edge inserts/deletes through the delta-CSR
+overlay, absorbs it with the incremental refresh (corpus-recovered
+affected vertices -> subset re-walk -> in-place DSGL fine-tune), and
+reports link-prediction AUC on the MUTATED graph before and after the
+refresh — the stale-embedding gap the refresh closes at a fraction of a
+full recompute.
+
+  PYTHONPATH=src python examples/incremental_updates.py [--nodes 2048]
+"""
+
+import argparse
+
+import numpy as np
+
+from repro.core.api import EmbedConfig, embed_graph, refresh_embedding
+from repro.graph.generators import churn_batch, rmat_graph
+
+
+def _auc(graph, phi, rng, n_pairs=2000):
+    indptr = np.asarray(graph.indptr)
+    indices = np.asarray(graph.indices)
+    n = graph.num_nodes
+    src = np.repeat(np.arange(n), np.diff(indptr))
+    pos_idx = rng.choice(len(src), size=min(n_pairs, len(src)),
+                         replace=False)
+    pos = np.stack([src[pos_idx], indices[pos_idx]], 1)
+    adj = {(int(a), int(b)) for a, b in zip(src, indices)}
+    neg = []
+    while len(neg) < len(pos):
+        a, b = rng.integers(0, n, 2)
+        if a != b and (int(a), int(b)) not in adj:
+            neg.append((a, b))
+    neg = np.array(neg)
+    s_pos = (phi[pos[:, 0]] * phi[pos[:, 1]]).sum(-1)
+    s_neg = (phi[neg[:, 0]] * phi[neg[:, 1]]).sum(-1)
+    diff = s_pos[:, None] - s_neg[None, :]
+    return float((diff > 0).mean() + 0.5 * (diff == 0).mean())
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nodes", type=int, default=2048)
+    ap.add_argument("--dim", type=int, default=32)
+    ap.add_argument("--shards", type=int, default=2)
+    ap.add_argument("--churn", type=float, default=0.05)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    graph = rmat_graph(args.nodes, 10, seed=args.seed)
+    cfg = EmbedConfig(dim=args.dim, epochs=1, lr=0.05, delta=1e-3,
+                      max_len=40, min_len=10, window=6, negatives=4,
+                      seed=args.seed)
+
+    # --- embed the base graph (state handle => vertex-keyed walk RNG) -----
+    phi0, _, state = embed_graph(graph, cfg, num_shards=args.shards,
+                                 return_state=True)
+    print(f"|V|={args.nodes}  |E|={graph.num_edges // 2}  "
+          f"rounds={state.refresher.pipeline.controller.rounds}")
+
+    # --- churn: localized inserts + deletes through the delta overlay -----
+    batch = churn_batch(graph, args.churn, seed=args.seed + 1)
+    print(f"churn: +{len(batch.insert)} / -{len(batch.delete)} edges "
+          f"({100 * args.churn:.1f}% of |E|)")
+
+    # --- incremental refresh ---------------------------------------------
+    phi1, _, stats = refresh_embedding(state, batch)
+    mutated = state.graph
+    print(f"refresh: affected {stats.affected} vertices "
+          f"({100 * stats.affected_frac:.1f}% of |V|), "
+          f"{stats.rewalk_supersteps} re-walk supersteps, "
+          f"{stats.extra_rounds} extra rounds, "
+          f"{stats.fine_tune_steps} fine-tune steps, "
+          f"{stats.wall_s:.1f}s")
+
+    # --- quality on the MUTATED graph ------------------------------------
+    auc_stale = _auc(mutated, phi0, np.random.default_rng(7))
+    auc_fresh = _auc(mutated, phi1, np.random.default_rng(7))
+    print(f"link-prediction AUC on mutated graph: "
+          f"stale {auc_stale:.4f} -> refreshed {auc_fresh:.4f}")
+
+
+if __name__ == "__main__":
+    main()

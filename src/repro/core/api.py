@@ -40,6 +40,10 @@ class EmbedConfig:
     seed: int = 0
     p: float = 1.0                 # node2vec return parameter
     q: float = 1.0                 # node2vec in-out parameter
+    rng_mode: str = "lane"         # walk RNG keying; "vertex" makes walks
+                                   # independent of batch composition (the
+                                   # incremental-refresh contract; forced
+                                   # on by return_state/updates)
 
 
 def make_walk_plan(cfg: EmbedConfig) -> Tuple[object, WalkSpec, Dict]:
@@ -48,12 +52,13 @@ def make_walk_plan(cfg: EmbedConfig) -> Tuple[object, WalkSpec, Dict]:
     policy = make_policy(name, p=cfg.p, q=cfg.q)
     if cfg.info_termination:
         spec = WalkSpec(max_len=cfg.max_len, min_len=cfg.min_len,
-                        mu=cfg.mu, info_mode="incom", reg_start=cfg.reg_start)
+                        mu=cfg.mu, info_mode="incom", reg_start=cfg.reg_start,
+                        rng_mode=cfg.rng_mode)
         rounds = dict(delta=cfg.delta, min_rounds=2, max_rounds=20,
                       window=cfg.d_window)
     else:
         spec = WalkSpec(max_len=cfg.fixed_len, info_mode="fixed",
-                        fixed_len=cfg.fixed_len)
+                        fixed_len=cfg.fixed_len, rng_mode=cfg.rng_mode)
         rounds = dict(delta=-1.0, min_rounds=cfg.fixed_rounds,
                       max_rounds=cfg.fixed_rounds)
     return policy, spec, rounds
@@ -66,6 +71,24 @@ def sample_corpus(graph, cfg: EmbedConfig, part: Optional[np.ndarray] = None) ->
     )
 
 
+@dataclasses.dataclass
+class EmbedState:
+    """Handle onto a live embedding: the streaming pipeline plus the
+    delta-overlay/refresh driver around it. ``refresh_embedding`` keeps
+    this handle current across edge-churn batches."""
+
+    refresher: object           # core.incremental.IncrementalRefresh
+    cfg: EmbedConfig
+    num_shards: int
+
+    @property
+    def graph(self):
+        return self.refresher.pipeline.graph
+
+    def embeddings(self):
+        return self.refresher.embeddings()
+
+
 def embed_graph(
     graph,
     cfg: EmbedConfig = EmbedConfig(),
@@ -73,6 +96,8 @@ def embed_graph(
     num_shards: int = 1,
     return_corpus: bool = False,
     streaming: bool = True,
+    updates=None,
+    return_state: bool = False,
 ):
     """partition -> sharded info-oriented walks -> streamed DSGL -> embeddings.
 
@@ -84,11 +109,27 @@ def embed_graph(
     ``streaming=False`` keeps the legacy two-phase path (sample the whole
     corpus, then ``train_dsgl`` in frequency-rank space).
 
+    Dynamic graphs: ``return_state=True`` additionally returns an
+    ``EmbedState`` that ``refresh_embedding`` can absorb edge churn into
+    incrementally (walk RNG is forced to vertex keying so subset re-walks
+    stay bit-identical); ``updates=EdgeBatch(...)`` embeds the base graph
+    and immediately refreshes it with the batch.
+
     Returns (phi_in, phi_out) in ORIGINAL node-id space, plus optional
-    corpus. Imports are deferred so this module stays import-light.
+    corpus and/or state. Imports are deferred so this module stays
+    import-light.
     """
     from repro.core.mpgp import mpgp_partition
     from repro.core.dsgl import DSGLConfig
+
+    incremental = updates is not None or return_state
+    if incremental and not streaming:
+        raise ValueError(
+            "updates=/return_state= need the streaming pipeline "
+            "(streaming=True); the two-phase path has no resident state "
+            "to refresh")
+    if incremental and cfg.rng_mode != "vertex":
+        cfg = dataclasses.replace(cfg, rng_mode="vertex")
 
     part = None
     if num_shards > 1:
@@ -106,12 +147,23 @@ def embed_graph(
         pipe = StreamingEmbedPipeline(
             graph, policy, spec, rounds, dsgl_cfg,
             assignment=part, num_shards=num_shards)
-        out = pipe.run()
-        phi_in = np.asarray(out["phi_in"])     # node space already
-        phi_out = np.asarray(out["phi_out"])
+        pipe.run()
+        state = None
+        if incremental:
+            from repro.core.incremental import IncrementalRefresh
+
+            state = EmbedState(refresher=IncrementalRefresh(pipe),
+                               cfg=cfg, num_shards=num_shards)
+            if updates is not None:
+                state.refresher.apply_updates(updates)
+                state.refresher.refresh()
+        phi_in, phi_out = pipe.embeddings()
+        out = (phi_in, phi_out)
         if return_corpus:
-            return phi_in, phi_out, pipe.corpus()
-        return phi_in, phi_out
+            out = out + (pipe.corpus(),)
+        if return_state:
+            out = out + (state,)
+        return out
 
     from repro.core.dsgl import train_dsgl
 
@@ -125,3 +177,33 @@ def embed_graph(
     if return_corpus:
         return phi_in, phi_out, corpus
     return phi_in, phi_out
+
+
+def refresh_embedding(
+    state: EmbedState,
+    updates,
+    *,
+    detect: Optional[str] = None,
+    **refresh_kwargs,
+):
+    """Absorb an ``EdgeBatch`` into a live embedding incrementally.
+
+    mutate -> detect (from the corpus) -> re-walk ONLY affected vertices
+    -> fine-tune DSGL in place. Returns (phi_in, phi_out, stats) where
+    ``stats`` is a ``core.incremental.RefreshStats`` (affected fraction,
+    re-walk supersteps, wall clock — the cost columns of
+    BENCH_incremental.json). Keyword arguments (``fine_tune_frac``,
+    ``max_extra_rounds``, ...) pass through to the pipeline refresh.
+    ``detect`` overrides the refresher's configured detection mode FOR
+    THIS CALL only ("traversal" | "paranoid").
+    """
+    prev_detect = state.refresher.detect
+    if detect is not None:
+        state.refresher.detect = detect
+    try:
+        state.refresher.apply_updates(updates)
+        stats = state.refresher.refresh(**refresh_kwargs)
+    finally:
+        state.refresher.detect = prev_detect
+    phi_in, phi_out = state.refresher.embeddings()
+    return phi_in, phi_out, stats

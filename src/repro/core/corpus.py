@@ -138,6 +138,35 @@ def _ring_append(ring: CorpusRing, paths: jax.Array,
     )
 
 
+def _ring_replace(ring: CorpusRing, slots: jax.Array, paths: jax.Array,
+                  lengths: jax.Array) -> CorpusRing:
+    """Overwrite specific ring slots in place (the incremental-refresh
+    write path: a re-walked vertex's new walk replaces its stale walk at
+    the SAME round-aligned slot, so every untouched slot — and therefore
+    every walk rooted at an unaffected vertex — stays bit-identical).
+
+    ``ocn`` is kept exact: the replaced slots' tokens are subtracted
+    before the new walks' tokens are added, so Eq. 6/7's occurrence
+    distribution reflects the refreshed corpus, not the union of stale
+    and fresh walks. ``cursor``/``total`` do not move — replacement is
+    not an append.
+    """
+    slots = slots.astype(jnp.int32)
+    old = ring.walks[slots]
+    ocn = ring.ocn.at[jnp.maximum(old, 0).reshape(-1)].add(
+        -(old >= 0).reshape(-1).astype(jnp.int32))
+    valid = paths >= 0
+    ocn = ocn.at[jnp.maximum(paths, 0).reshape(-1)].add(
+        valid.reshape(-1).astype(jnp.int32))
+    return CorpusRing(
+        walks=ring.walks.at[slots].set(paths.astype(jnp.int32)),
+        lengths=ring.lengths.at[slots].set(lengths.astype(jnp.int32)),
+        ocn=ocn,
+        cursor=ring.cursor,
+        total=ring.total,
+    )
+
+
 # Two jit wrappers over one implementation. Production callers (the
 # streaming pipeline and generate_corpus) drop their old ring reference at
 # the call site and use the donated form: XLA aliases the buffers when no
@@ -148,6 +177,8 @@ def _ring_append(ring: CorpusRing, paths: jax.Array,
 # pre-append version alive (tests, ad-hoc snapshots).
 ring_append = jax.jit(_ring_append)
 ring_append_donated = jax.jit(_ring_append, donate_argnums=(0,))
+ring_replace = jax.jit(_ring_replace)
+ring_replace_donated = jax.jit(_ring_replace, donate_argnums=(0,))
 
 
 def ring_to_numpy(ring: CorpusRing) -> Tuple[np.ndarray, np.ndarray]:
@@ -226,7 +257,11 @@ def generate_corpus(
         key, round_key = jax.random.split(key)
         for start in range(0, len(sources), walker_batch):
             chunk = sources[start : start + walker_batch]
-            round_key, k = jax.random.split(round_key)
+            if spec.rng_mode == "vertex":
+                k = round_key        # vertex ids disambiguate the lanes;
+                # a shared round key keeps walks chunk-layout-invariant
+            else:
+                round_key, k = jax.random.split(round_key)
             st = run_walk_batch(
                 graph, jnp.asarray(chunk, jnp.int32), k, policy, spec,
                 part_dev, num_shards=num_shards if part is not None else None,

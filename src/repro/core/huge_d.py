@@ -31,6 +31,23 @@ def distger_spec(
                     info_mode="incom", reg_start=reg_start)
 
 
+def incremental_spec(
+    max_len: int = 100, min_len: int = 20, mu: float = 0.995,
+    reg_start: int = 16
+) -> WalkSpec:
+    """``distger_spec`` with VERTEX-KEYED walk RNG — the spec a
+    refresh-capable deployment runs from day one. Walks become a pure
+    function of (key, round, source vertex), so after edge churn the
+    incremental driver (``repro.core.incremental``) can re-walk just the
+    affected vertices and splice results that are bit-identical to a
+    from-scratch round on the mutated graph; the ΔD gate then continues
+    seeded from the prior rounds' D_r history instead of cold-starting.
+    """
+    return WalkSpec(max_len=max_len, min_len=min_len, mu=mu,
+                    info_mode="incom", reg_start=reg_start,
+                    rng_mode="vertex")
+
+
 def routine_spec(fixed_len: int = 80) -> WalkSpec:
     """KnightKing-style routine configuration (L=80, r=10)."""
     return WalkSpec(max_len=fixed_len, info_mode="fixed", fixed_len=fixed_len)

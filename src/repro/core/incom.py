@@ -205,6 +205,49 @@ def accept_update(
     return s_new, path_new
 
 
+def paths_traverse_edges(
+    paths: jax.Array, edge_codes: jax.Array, num_nodes: int
+) -> jax.Array:
+    """Which recorded walks traverse any of a set of (changed) arcs.
+
+    paths:      (B, max_len) int32, -1 padded walk buffers (the corpus).
+    edge_codes: (m,) SORTED row-major arc codes u * num_nodes + v
+                (callers encode both directions of an undirected edge).
+
+    Returns (B,) bool. This is the corpus half of the paper's incremental
+    InCoM computation: whether a stored walk is invalidated by edge churn
+    is recovered from the recorded path buffers with one vectorized
+    consecutive-pair membership test — no walk is re-simulated to find
+    out. Requires num_nodes^2 < 2^31 (int32 codes; the driver in
+    ``repro.core.incremental`` falls back to a host int64 path beyond).
+    """
+    a, b_ = paths[:, :-1], paths[:, 1:]
+    valid = (a >= 0) & (b_ >= 0)
+    code = (jnp.maximum(a, 0) * jnp.int32(num_nodes)
+            + jnp.maximum(b_, 0)).astype(jnp.int32)
+    m = edge_codes.shape[0]
+    if m == 0:
+        return jnp.zeros(paths.shape[0], bool)
+    pos = jnp.searchsorted(edge_codes, code.reshape(-1))
+    hit = edge_codes[jnp.clip(pos, 0, m - 1)] == code.reshape(-1)
+    hit = hit.reshape(code.shape) & valid
+    return jnp.any(hit, axis=1)
+
+
+def paths_visit_nodes(paths: jax.Array, node_mask: jax.Array) -> jax.Array:
+    """Which recorded walks visit any marked node. node_mask: (|V|,) bool.
+
+    The conservative ("paranoid") affected-walk criterion: a walk whose
+    every visited node lies outside the closed neighborhood of the churn
+    is PROVABLY bit-identical on the mutated graph (its candidate draws
+    and acceptance inputs are all untouched), so marking visits to that
+    neighborhood gives exact kept-walk invariance at the cost of a larger
+    re-walk set.
+    """
+    hit = node_mask[jnp.maximum(paths, 0)] & (paths >= 0)
+    return jnp.any(hit, axis=1)
+
+
 def pack_message(walker_id: jax.Array, node_id: jax.Array, s: InfoState) -> jax.Array:
     """Constant-size (B, 10) float32 message — the Example 1 payload."""
     return jnp.stack(

@@ -1,0 +1,214 @@
+"""Incremental embedding refresh after edge churn (dynamic-graph driver).
+
+DistGER computes walk information *incrementally*; this module extends the
+same posture to the GRAPH: when a batch of edges changes, the system must
+not re-walk and retrain the world. The lifecycle is
+
+    mutate  — churn batches accumulate in a ``graph.delta.DeltaCSR``
+              overlay (O(|Δ| log |E|) per batch, periodic vectorized
+              compaction back into CSR);
+    detect  — the affected-vertex set is RECOVERED FROM THE CORPUS
+              (``incom.paths_traverse_edges`` / ``paths_visit_nodes``):
+              endpoints of changed edges plus roots of recorded walks that
+              traverse a changed arc — no walk is re-simulated to find out
+              whether it is stale;
+    re-walk — only affected roots go back through the sharded walk engine,
+              one subset batch per retained round under the SAME round
+              keys; vertex-keyed per-lane RNG (``WalkSpec.rng_mode ==
+              "vertex"``) makes the subset walks bit-identical to what a
+              full-batch walk on the mutated graph would produce, and
+              ``corpus.ring_replace`` swaps them into their original
+              round-aligned ring slots (untouched slots stay bit-identical
+              by construction);
+    gate    — the Eq. 7 ΔD controller continues SEEDED from the prior
+              run's D_r history (no cold-start burn-in): if churn moved
+              the degree/occurrence divergence beyond delta, extra
+              subset rounds append until it re-converges;
+    tune    — DSGL fine-tunes in place over the refreshed ring through the
+              existing ``StreamingEmbedPipeline`` training path (decayed
+              mini-schedule, node-space alias table rebuilt from the
+              exact refreshed ocn).
+
+Detection modes
+---------------
+``"traversal"`` (default, the paper-spirit detector): a stored walk is
+stale iff it traverses a changed arc; plus all churn endpoints. Walks that
+merely pass nearby keep slightly stale *sampling distributions* (quality
+is guarded by the refresh AUC benchmarks), but every kept slot is
+bit-identical to its pre-update contents.
+
+``"paranoid"``: additionally re-walks every root whose walk visits the
+closed neighborhood of the churn. Kept walks are then PROVABLY identical
+to a from-scratch walk of the mutated graph (no visited node's candidate
+row, degree, or Cm inputs changed) — the detector to use when exact
+distributional freshness matters more than re-walk volume.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import incom
+from repro.graph.csr import CSRGraph
+from repro.graph.delta import DeltaCSR, EdgeBatch
+
+
+def changed_arc_codes(edges: np.ndarray, num_nodes: int) -> np.ndarray:
+    """Sorted row-major arc codes for both directions of ``edges``."""
+    if len(edges) == 0:
+        return np.zeros(0, np.int64)
+    e = np.asarray(edges, np.int64)
+    arcs = np.concatenate([e, e[:, ::-1]], axis=0)
+    codes = arcs[:, 0] * np.int64(num_nodes) + arcs[:, 1]
+    return np.unique(codes)
+
+
+def closed_neighborhood(graph: CSRGraph, nodes: np.ndarray) -> np.ndarray:
+    """(|V|,) bool mask of ``nodes`` plus all their neighbors."""
+    g = graph.to_numpy()
+    indptr = np.asarray(g.indptr, np.int64)
+    indices = np.asarray(g.indices, np.int64)
+    n = len(indptr) - 1
+    mark = np.zeros(n, bool)
+    nodes = np.asarray(nodes, np.int64)
+    nodes = nodes[nodes < n]
+    mark[nodes] = True
+    for v in nodes:
+        mark[indices[indptr[v]:indptr[v + 1]]] = True
+    return mark
+
+
+def affected_roots(
+    walks: np.ndarray,
+    roots: np.ndarray,
+    changed_edges: np.ndarray,
+    touched: np.ndarray,
+    num_nodes: int,
+    *,
+    mode: str = "traversal",
+    old_graph: Optional[CSRGraph] = None,
+    new_graph: Optional[CSRGraph] = None,
+) -> np.ndarray:
+    """(num_nodes,) bool — which vertices' walks must be re-simulated.
+
+    ``walks`` are the recorded (-1 padded) corpus buffers, ``roots`` the
+    per-row source vertex. Everything is recovered from the corpus —
+    detection never steps the walk engine.
+    """
+    affected = np.zeros(num_nodes, bool)
+    touched = np.asarray(touched, np.int64)
+    affected[touched[touched < num_nodes]] = True
+    if len(walks) == 0:
+        return affected
+
+    roots = np.asarray(roots, np.int64)
+    if num_nodes * num_nodes < 2**31:
+        codes = changed_arc_codes(changed_edges, num_nodes)
+        hit = np.asarray(incom.paths_traverse_edges(
+            jnp.asarray(walks, jnp.int32),
+            jnp.asarray(codes, jnp.int32), num_nodes))
+    else:
+        # Host int64 fallback for graphs whose pair codes overflow int32.
+        codes = changed_arc_codes(changed_edges, num_nodes)
+        a, b = walks[:, :-1].astype(np.int64), walks[:, 1:].astype(np.int64)
+        valid = (a >= 0) & (b >= 0)
+        pair = np.maximum(a, 0) * np.int64(num_nodes) + np.maximum(b, 0)
+        hit = (np.isin(pair, codes) & valid).any(axis=1)
+    affected[roots[hit]] = True
+
+    if mode == "paranoid":
+        mark = closed_neighborhood(old_graph, touched)
+        if new_graph is not None:
+            mark |= closed_neighborhood(new_graph, touched)[:num_nodes]
+        visit = np.asarray(incom.paths_visit_nodes(
+            jnp.asarray(walks, jnp.int32), jnp.asarray(mark)))
+        affected[roots[visit]] = True
+    elif mode != "traversal":
+        raise ValueError(f"unknown detection mode {mode!r}")
+    return affected
+
+
+@dataclasses.dataclass
+class RefreshStats:
+    """Cost/quality record of one refresh (also the BENCH_incremental row)."""
+
+    changed_edges: int
+    churn_frac: float              # changed edges / |E_und| pre-churn
+    affected: int
+    affected_frac: float           # affected roots / |V|
+    retained_rounds: int
+    extra_rounds: int
+    rewalk_walks: int              # walks re-simulated (roots x rounds)
+    rewalk_supersteps: int
+    fine_tune_steps: int
+    wall_s: float
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+class IncrementalRefresh:
+    """Owns the mutate → detect → re-walk → fine-tune lifecycle around one
+    ``StreamingEmbedPipeline`` and one ``DeltaCSR`` overlay.
+
+    The pipeline must have been built with ``WalkSpec.rng_mode ==
+    "vertex"`` (the subset-re-walk bit-identity contract);
+    ``core.api.embed_graph(..., return_state=True)`` arranges this.
+    """
+
+    def __init__(self, pipeline, delta: Optional[DeltaCSR] = None,
+                 *, detect: str = "traversal"):
+        if pipeline.spec.rng_mode != "vertex":
+            raise ValueError(
+                "incremental refresh needs vertex-keyed walk RNG "
+                "(WalkSpec.rng_mode='vertex'); re-embed with "
+                "embed_graph(..., return_state=True)")
+        self.pipeline = pipeline
+        self.delta = delta if delta is not None else DeltaCSR(pipeline.graph)
+        self.detect = detect
+        self.last_stats: Optional[RefreshStats] = None
+
+    def apply_updates(self, batch: EdgeBatch) -> "IncrementalRefresh":
+        """Stage one churn batch in the overlay (cheap; no refresh yet)."""
+        self.delta.apply_batch(batch)
+        return self
+
+    def refresh(self, **kwargs) -> RefreshStats:
+        """Absorb all staged churn: compact the overlay, detect affected
+        vertices from the corpus, re-walk them, fine-tune DSGL in place."""
+        old_graph = self.pipeline.graph
+        n_old = old_graph.num_nodes
+        if self.delta.num_nodes != n_old:
+            # Validate BEFORE draining the churn log / compacting: a
+            # failed refresh must leave the refresher consistent (the
+            # overlay supports |V| growth, the pipeline does not yet).
+            raise ValueError(
+                f"staged churn grows the vertex set "
+                f"({self.delta.num_nodes} != {n_old}), which "
+                "refresh_embedding cannot absorb yet; rebuild with "
+                "embed_graph on the mutated graph")
+        arcs_und = old_graph.num_edges / 2.0
+        ins, dele = self.delta.take_changes()
+        changed = np.concatenate([ins, dele], axis=0)
+        touched = (np.unique(changed.reshape(-1))
+                   if len(changed) else np.zeros(0, np.int64))
+        new_graph = self.delta.compact()
+
+        walks, roots, valid = self.pipeline.corpus_slots()
+        affected_mask = affected_roots(
+            walks[valid], roots[valid], changed, touched, n_old,
+            mode=self.detect, old_graph=old_graph, new_graph=new_graph)
+        stats = self.pipeline.refresh(new_graph, affected_mask, **kwargs)
+        stats = RefreshStats(
+            changed_edges=int(len(changed)),
+            churn_frac=float(len(changed) / max(arcs_und, 1.0)),
+            **stats)
+        self.last_stats = stats
+        return stats
+
+    def embeddings(self) -> Tuple[np.ndarray, np.ndarray]:
+        return self.pipeline.embeddings()

@@ -132,15 +132,30 @@ def _assign_stream(
     num_parts: int,
     gamma: float,
     use_ps2: bool = True,
+    tau_weight: str = "nodes",
 ) -> None:
     """Assign ``nodes`` (in order) in-place into ``assignment``/``counts``.
 
     ``assignment`` may already contain other segments' results (parallel
     MPGP merges into shared state); -1 marks unassigned.
+
+    ``tau_weight`` selects the LOAD each node contributes to the Eq. 15
+    capacity term tau(P_i): ``"nodes"`` is the paper-literal node count;
+    ``"degree"`` charges deg(v) + 1, so capacity tracks DEGREE MASS.
+    Walker occupancy follows degree mass, not node count (a walker at v
+    next occupies a neighbor drawn from N(v)), so on degree-skewed graphs
+    the node-count tau lets one shard accumulate most of the edge mass
+    and with it most of the walkers — BENCH_walk's peak_lane_occupancy
+    measured 384/512 walkers piling onto one shard of a 4-way rmat
+    partition. Degree-weighted tau makes the gamma*B/k slot-pool bound of
+    the partition-local engine actually bind.
     """
     indptr = graph_np.indptr
     indices = graph_np.indices
     weights = graph_np.weights
+    if tau_weight not in ("nodes", "degree"):
+        raise ValueError(f"unknown tau_weight {tau_weight!r}")
+    degree_tau = tau_weight == "degree"
 
     for v in nodes:
         lo, hi = indptr[v], indptr[v + 1]
@@ -176,7 +191,7 @@ def _assign_stream(
         obj = scores * tau if scores.any() else tau
         p = int(np.argmax(obj))
         assignment[v] = p
-        counts[p] += 1
+        counts[p] += (hi - lo + 1) if degree_tau else 1
 
 
 def mpgp_partition(
@@ -187,21 +202,27 @@ def mpgp_partition(
     order: str = "dfs+degree",
     use_ps2: bool = True,
     seed: int = 0,
+    tau_weight: str = "nodes",
 ) -> PartitionResult:
-    """Sequential MPGP (paper-recommended order: DFS+degree)."""
+    """Sequential MPGP (paper-recommended order: DFS+degree).
+
+    ``tau_weight="degree"`` switches Eq. 15's capacity term to degree
+    mass so walker load balances across shards (see ``_assign_stream``).
+    """
     t0 = time.perf_counter()
     g = graph.to_numpy()
     n = g.num_nodes
     nodes = stream_order(graph, order, seed)
     assignment = np.full(n, -1, dtype=np.int32)
     counts = np.zeros(num_parts, dtype=np.int64)
-    _assign_stream(g, nodes, assignment, counts, num_parts, gamma, use_ps2)
+    _assign_stream(g, nodes, assignment, counts, num_parts, gamma, use_ps2,
+                   tau_weight)
     dt = time.perf_counter() - t0
     return PartitionResult(
         assignment=assignment,
         num_parts=num_parts,
         gamma=gamma,
-        order=order,
+        order=order if tau_weight == "nodes" else f"{order}:tau={tau_weight}",
         seconds=dt,
         locality=edge_locality(graph, assignment),
         balance=partition_balance(assignment, num_parts),
@@ -217,6 +238,7 @@ def mpgp_partition_parallel(
     num_segments: int = 4,
     use_ps2: bool = True,
     seed: int = 0,
+    tau_weight: str = "nodes",
 ) -> PartitionResult:
     """Parallel MPGP (paper optimization 4): the stream is cut into
     ``num_segments`` segments, each partitioned independently (as if alone),
@@ -235,7 +257,7 @@ def mpgp_partition_parallel(
         seg_assign = np.full(n, -1, dtype=np.int32)
         seg_counts = np.zeros(num_parts, dtype=np.int64)
         _assign_stream(g, seg_nodes, seg_assign, seg_counts,
-                       num_parts, gamma, use_ps2)
+                       num_parts, gamma, use_ps2, tau_weight)
         seg_results.append((seg_nodes, seg_assign))
     # Merge: later segments overwrite nothing (disjoint node sets).
     for seg_nodes, seg_assign in seg_results:

@@ -119,6 +119,7 @@ def _shard_program_replicated(
     k_ring = max(spec.reg_window, 1)
     cap = spec.supersteps_cap()
 
+    ufn = wk.make_uniform_fn(spec, sources)
     resident0 = owner[sources] == sid
     # Fragment init: the source node's first visit is recorded at ITS owner.
     path0 = jnp.full((b, spec.max_len), -1, jnp.int32)
@@ -146,7 +147,7 @@ def _shard_program_replicated(
         return (lax.psum(live, AXIS) > 0) & (st["t"] < cap)
 
     def body(st):
-        u1, u2 = wk.step_uniforms(root_key, st["t"], b)
+        u1, u2 = ufn(root_key, st["t"])
         cand, _, accept_raw, has_nbrs = wk.propose(
             graph, policy, st["cur"], st["prev"], u1, u2)
         live = st["resident"] & st["active"]
@@ -327,6 +328,8 @@ def _shard_program_local(
     from repro.dist.collectives import (
         packed_all_gather, packed_all_to_all, rank_search, take_ranked)
 
+    ufn = wk.make_uniform_fn(spec, sources)
+
     # ---- pool init: resident source lanes claim slots in lane order -------
     resident0 = owner[sources] == sid
     lane0_all, valid0 = take_ranked(
@@ -440,7 +443,7 @@ def _shard_program_local(
         ls = jnp.maximum(lane, 0)
         live_n = lax.psum(jnp.sum(occ, dtype=jnp.int32), AXIS)
         stepping = (live_n > 0) & (st["t"] < step_cap)
-        u1f, u2f = wk.step_uniforms(root_key, st["t"], b)
+        u1f, u2f = ufn(root_key, st["t"])
         u1, u2 = u1f[ls], u2f[ls]
 
         # ---- phase A on the local slice ------------------------------------
@@ -879,12 +882,17 @@ def partitioned_csr_for(graph: CSRGraph, assignment: np.ndarray,
     hit). Entries hold the key object by WEAKREF so a dropped graph's
     device-resident slices free with it, and the key carries the slicing
     graph's edge_cm presence so a cm-less entry is never served to a
-    policy that needs Cm."""
+    policy that needs Cm. The key also carries the graph's MUTATION
+    VERSION (``graph.delta.graph_version``): a graph mutated through the
+    delta overlay bumps its version, so an in-place edit of a held object
+    can never be served the pre-mutation slices (identity alone would
+    silently alias them)."""
     import weakref
+    from repro.graph.delta import graph_version
     key_obj = graph if key_obj is None else key_obj
     asn = np.asarray(assignment)
-    key = (id(key_obj), num_shards, graph.edge_cm is not None,
-           hash(asn.tobytes()))
+    key = (id(key_obj), graph_version(key_obj), num_shards,
+           graph.edge_cm is not None, hash(asn.tobytes()))
     hit = _PCSR_CACHE.get(key)
     if hit is not None and hit[0]() is key_obj:
         return hit[1]
@@ -983,8 +991,9 @@ def run_walk_sharded(
     # weakly hold the keying graph so a recycled id() can never alias and
     # dead graphs don't pin memory.
     import weakref
-    pool_key = (id(graph_key), num_shards, b, spec, float(pool_factor),
-                hash(asn_np.tobytes()))
+    from repro.graph.delta import graph_version
+    pool_key = (id(graph_key), graph_version(graph_key), num_shards, b,
+                spec, float(pool_factor), hash(asn_np.tobytes()))
     hit = _POOL_CACHE.get(pool_key)
     if hit is not None and hit[0]() is graph_key:
         pool = max(pool, hit[1])

@@ -28,16 +28,30 @@ class WalkCountController:
     that noise ~``window``-fold (the smoothed delta is
     |D_r - D_{r-w}| / w for a flat-noise series) while leaving the
     macroscopic convergence trend untouched; ``window=1`` is the exact
-    paper-literal Eq. 7 gate."""
+    paper-literal Eq. 7 gate.
+
+    ``seed_history`` warm-starts the gate from a PRIOR run's D_r series
+    (the incremental-refresh posture: after edge churn, the refreshed
+    corpus's D is judged against the converged pre-churn trajectory
+    instead of cold-starting through ``min_rounds`` burn-in rounds —
+    "seeded from prior-round InCoM state"). The windowed smoothing is
+    replayed over the seed so the first post-churn delta compares like
+    with like."""
 
     delta: float = 1e-3
     min_rounds: int = 2
     max_rounds: int = 20
     window: int = 1
+    seed_history: Optional[List[float]] = None
 
     def __post_init__(self):
         self.history: List[float] = []
         self._smooth: List[float] = []
+        if self.seed_history:
+            w = max(self.window, 1)
+            for d in self.seed_history:
+                self.history.append(float(d))
+                self._smooth.append(float(np.mean(self.history[-w:])))
 
     def update(self, degrees: np.ndarray, ocn: np.ndarray) -> bool:
         """Record D_r for the corpus so far; return True if walking should

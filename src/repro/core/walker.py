@@ -62,6 +62,12 @@ class WalkSpec:
     reg_window: int = 0         # optional ring-buffer variant: R^2 over the
                                 # last K points (incom.windowed_r_squared)
     max_supersteps: int = 0     # 0 => 8 * max_len safety cap
+    rng_mode: str = "lane"      # "lane": draws keyed by batch position
+                                # (the historical stream); "vertex": keyed
+                                # by SOURCE VERTEX id, so a walk's draws do
+                                # not depend on which lanes ride along —
+                                # the property incremental subset re-walks
+                                # need (repro.core.incremental)
 
     def supersteps_cap(self) -> int:
         return self.max_supersteps or 8 * self.max_len
@@ -157,6 +163,41 @@ def step_uniforms(root_key: jax.Array, superstep: jax.Array,
     step_key = jax.random.fold_in(root_key, superstep)
     k1, k2 = jax.random.split(step_key)
     return jax.random.uniform(k1, (b,)), jax.random.uniform(k2, (b,))
+
+
+def make_uniform_fn(spec: WalkSpec, sources: jax.Array):
+    """Per-lane uniform source for one walk batch: ``fn(root_key, t)`` ->
+    ``(u1, u2)``, each (B,).
+
+    ``rng_mode == "lane"`` keeps the historical position-indexed stream.
+    ``rng_mode == "vertex"`` FOLDS each lane's SOURCE VERTEX id into the
+    per-step key (vmapped fold_in + scalar uniform): lane i's draws
+    become a pure function of (root, t, source[i]) — independent of
+    batch composition — so re-walking any subset of sources under the
+    same key reproduces the full-batch walks bit-for-bit (the
+    incremental-refresh contract). Cost is O(B) threefry work per
+    superstep regardless of |V| — a (|V|,)-wide counter row gathered by
+    source id would pay O(|V|) per DISPATCH CHUNK per superstep, a
+    ~|V|/B overdraw exactly in the chunked/subset cases vertex keying
+    exists for.
+    """
+    if spec.rng_mode == "vertex":
+        src = sources.astype(jnp.int32)
+
+        def fn(root_key, t):
+            step_key = jax.random.fold_in(root_key, t)
+            k1, k2 = jax.random.split(step_key)
+            u1 = jax.vmap(
+                lambda v: jax.random.uniform(jax.random.fold_in(k1, v)))(src)
+            u2 = jax.vmap(
+                lambda v: jax.random.uniform(jax.random.fold_in(k2, v)))(src)
+            return u1, u2
+
+        return fn
+    if spec.rng_mode != "lane":
+        raise ValueError(f"unknown rng_mode {spec.rng_mode!r}")
+    b = int(sources.shape[0])
+    return lambda root_key, t: step_uniforms(root_key, t, b)
 
 
 # ---------------------------------------------------------------------------
@@ -311,9 +352,13 @@ def _superstep(
     policy: Policy,
     spec: WalkSpec,
     st: WalkerBatchState,
+    ufn=None,
 ) -> WalkerBatchState:
     b = st.cur.shape[0]
-    u1, u2 = step_uniforms(st.key, st.supersteps, b)
+    if ufn is None:
+        u1, u2 = step_uniforms(st.key, st.supersteps, b)
+    else:
+        u1, u2 = ufn(st.key, st.supersteps)
     cand, _, accept_raw, has_nbrs = propose(graph, policy, st.cur, st.prev,
                                             u1, u2)
     accept = st.active & accept_raw
@@ -353,12 +398,13 @@ def _run_walk_batch_single(
 ) -> WalkerBatchState:
     st = init_batch(sources, key, spec)
     cap = spec.supersteps_cap()
+    ufn = make_uniform_fn(spec, sources)
 
     def cond(s: WalkerBatchState):
         return jnp.any(s.active) & (s.supersteps < cap)
 
     def body(s: WalkerBatchState):
-        return _superstep(graph, policy, spec, s)
+        return _superstep(graph, policy, spec, s, ufn)
 
     return jax.lax.while_loop(cond, body, st)
 

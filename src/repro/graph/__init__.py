@@ -1,4 +1,5 @@
 from repro.graph.csr import CSRGraph, build_csr, edge_common_neighbors
+from repro.graph.delta import DeltaCSR, EdgeBatch
 from repro.graph.generators import rmat_graph, erdos_renyi_graph, barabasi_albert_graph
 from repro.graph.io import load_edge_list, save_edge_list
 
@@ -6,6 +7,8 @@ __all__ = [
     "CSRGraph",
     "build_csr",
     "edge_common_neighbors",
+    "DeltaCSR",
+    "EdgeBatch",
     "rmat_graph",
     "erdos_renyi_graph",
     "barabasi_albert_graph",

@@ -106,3 +106,78 @@ def connected_rmat_graph(
     return build_csr(
         np.concatenate([edges, ring], axis=0), num_nodes, undirected=True
     )
+
+
+def undirected_edges(graph: CSRGraph) -> np.ndarray:
+    """(m, 2) undirected edge list (u < v) recovered from the CSR arcs."""
+    g = graph.to_numpy()
+    indptr = np.asarray(g.indptr, np.int64)
+    indices = np.asarray(g.indices, np.int64)
+    src = np.repeat(np.arange(len(indptr) - 1, dtype=np.int64),
+                    np.diff(indptr))
+    keep = src < indices
+    return np.stack([src[keep], indices[keep]], axis=1)
+
+
+def churn_batch(
+    graph: CSRGraph,
+    frac: float = 0.05,
+    *,
+    seed: int = 0,
+    pool_frac: float = 0.08,
+    delete_share: float = 0.04,
+):
+    """Synthetic LOCALIZED edge churn for dynamic-graph benchmarks/tests.
+
+    Mutates ``frac`` of the undirected edges, concentrated the way real
+    churn is (a community updates; a cohort of users joins): all inserts
+    and preferentially the deletes fall inside a POOL of the
+    ``pool_frac`` lowest-degree (nonzero) vertices, so the affected
+    region — and with it the incremental re-walk set — stays a small
+    slice of the graph instead of a uniform sprinkle whose endpoints
+    alone would touch most vertices. ``delete_share`` of the churn is
+    deletions (chosen among pool-incident edges, lowest degree-sum first
+    — the edges real decay removes and the ones walks traverse least);
+    the rest are fresh intra-pool insertions.
+
+    Returns a ``repro.graph.delta.EdgeBatch``.
+    """
+    from repro.graph.delta import EdgeBatch
+
+    rng = np.random.default_rng(seed)
+    und = undirected_edges(graph)
+    deg = np.asarray(graph.degrees(), np.int64)
+    n = graph.num_nodes
+    n_total = max(1, int(frac * len(und)))
+    n_del = max(1, int(n_total * delete_share))
+    n_ins = max(0, n_total - n_del)
+
+    nonzero = np.nonzero(deg > 0)[0]
+    pool_sz = max(8, int(pool_frac * n))
+    pool = nonzero[np.argsort(deg[nonzero], kind="stable")][:pool_sz]
+    in_pool = np.zeros(n, bool)
+    in_pool[pool] = True
+
+    # Deletes: pool-incident edges, lowest degree-sum first (both-endpoint
+    # pool edges sort ahead naturally since pool degrees are smallest).
+    cand = und[in_pool[und[:, 0]] | in_pool[und[:, 1]]]
+    order = np.argsort(deg[cand[:, 0]] + deg[cand[:, 1]], kind="stable")
+    delete = cand[order[:min(n_del, len(cand))]]
+
+    # Inserts: fresh intra-pool pairs.
+    existing = set(map(tuple, np.sort(und, axis=1).tolist()))
+    dele_set = set(map(tuple, np.sort(delete, axis=1).tolist()))
+    seen = set()
+    ins = []
+    tries = 0
+    while len(ins) < n_ins and tries < 50 * max(n_ins, 1):
+        tries += 1
+        a, b = rng.choice(pool, 2, replace=False)
+        key = (min(int(a), int(b)), max(int(a), int(b)))
+        if key in existing or key in seen or key in dele_set:
+            continue
+        seen.add(key)
+        ins.append(key)
+    insert = (np.asarray(ins, np.int64).reshape(-1, 2)
+              if ins else np.zeros((0, 2), np.int64))
+    return EdgeBatch(insert=insert, delete=delete)

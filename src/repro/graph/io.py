@@ -56,5 +56,12 @@ def save_edge_list(graph: CSRGraph, path: str) -> None:
         np.savez_compressed(path, **payload)
     else:
         with open(path, "w") as f:
-            for s, d in edges:
-                f.write(f"{s} {d}\n")
+            if g.weights is not None:
+                # Weighted text round-trips: "src dst w" is the same
+                # 3-column form load_edge_list parses; .9g keeps enough
+                # digits for exact float32 round-trips.
+                for (s, d), w in zip(edges, np.asarray(g.weights)):
+                    f.write(f"{s} {d} {w:.9g}\n")
+            else:
+                for s, d in edges:
+                    f.write(f"{s} {d}\n")

@@ -386,38 +386,73 @@ class StreamingEmbedPipeline:
         self._stats = {k: jnp.zeros(()) for k in (
             "supersteps", "accepts", "rejects", "msg_count", "msg_bytes",
             "msg_bytes_analytic")}
+        self._ft = None       # (start_step, total, lr0) fine-tune schedule
+        # Host mirror of the ring layout: which ROOT VERTEX and which walk
+        # ROUND each slot currently holds (-1 = never written). Maintained
+        # from the host-known dispatch chunks — no device sync — so the
+        # incremental refresh can locate every resident walk of an
+        # affected vertex (and the round key that produced it) even after
+        # partial extra rounds or ring wraps, where slot arithmetic fails.
+        self._slot_root = np.full(self.ring.capacity, -1, np.int64)
+        self._slot_round = np.full(self.ring.capacity, -1, np.int64)
+        self._cursor = 0
+        self._rounds_walked = 0
 
     # --- walk side --------------------------------------------------------
-    def _run_round(self, r: int):
-        """Dispatch all walk batches of round r; returns async states."""
+    def _run_round(self, r: int, sources: Optional[np.ndarray] = None):
+        """Dispatch all walk batches of round r; returns async
+        (chunk_sources, state) pairs.
+
+        Under vertex-keyed RNG every chunk of a round shares the ROUND key
+        (lane draws are disambiguated by source-vertex id, not position),
+        which is what lets the incremental refresh re-walk an arbitrary
+        subset of sources later and reproduce this round's walks
+        bit-for-bit without knowing the original chunk boundaries.
+        """
         from repro.core.walker import run_walk_batch
 
+        if sources is None:
+            sources = self.sources
+        by_vertex = self.spec.rng_mode == "vertex"
         round_key = jax.random.fold_in(self.key_walk, r)
-        states = []
-        for start in range(0, len(self.sources), self.walker_batch):
-            chunk = self.sources[start:start + self.walker_batch]
-            k = jax.random.fold_in(round_key, start)
-            states.append(run_walk_batch(
+        pairs = []
+        for start in range(0, len(sources), self.walker_batch):
+            chunk = np.asarray(sources[start:start + self.walker_batch])
+            k = (round_key if by_vertex
+                 else jax.random.fold_in(round_key, start))
+            pairs.append((chunk, run_walk_batch(
                 self.graph, jnp.asarray(chunk, jnp.int32), k, self.policy,
                 self.spec, self.assignment,
                 num_shards=self.num_shards if self.assignment is not None
-                else None))
-        return states
+                else None)))
+        return pairs
 
-    def _append(self, states):
+    def _append(self, pairs, round_idx: int):
         # Donated: the old ring version is dropped right here; XLA aliases
         # the buffers when no queued trainer gather still reads them and
         # falls back to a copy when one does — either way no per-batch
         # full-ring copy survives on the steady-state hot path.
         from repro.core.corpus import ring_append_donated
-        for st in states:
+        cap = self.ring.capacity
+        for chunk, st in pairs:
             self.ring = ring_append_donated(
                 self.ring, st.path, st.info.L.astype(jnp.int32))
+            slots = (self._cursor + np.arange(len(chunk))) % cap
+            self._slot_root[slots] = chunk
+            self._slot_round[slots] = round_idx
+            self._cursor = int((self._cursor + len(chunk)) % cap)
             for k in self._stats:
                 self._stats[k] = self._stats[k] + getattr(st, k)
 
     # --- train side -------------------------------------------------------
     def _lrs(self, count: int) -> jnp.ndarray:
+        if self._ft is not None:
+            start, total, lr0 = self._ft     # fine-tune mini-schedule
+            fracs = (self.global_step - start + np.arange(count)) / max(
+                total, 1)
+            return jnp.asarray(
+                np.maximum(lr0 * (1.0 - fracs), self.cfg.min_lr),
+                jnp.float32)
         fracs = (self.global_step + np.arange(count)) / max(self.total_steps, 1)
         return jnp.asarray(
             np.maximum(self.cfg.lr * (1.0 - fracs), self.cfg.min_lr),
@@ -479,8 +514,7 @@ class StreamingEmbedPipeline:
         from repro.core.info import relative_entropy_dpq
 
         t0 = time.perf_counter()
-        states = self._run_round(0)
-        self._append(states)
+        self._append(self._run_round(0), 0)
         r = 0
         while True:
             ocn_host = np.asarray(self.ring.ocn)          # per-round sync
@@ -497,9 +531,10 @@ class StreamingEmbedPipeline:
                 break
             if not self.overlap:
                 nxt = self._run_round(r + 1)
-                jax.block_until_ready(nxt[-1].path)
-            self._append(nxt)
+                jax.block_until_ready(nxt[-1][1].path)
+            self._append(nxt, r + 1)
             r += 1
+        self._rounds_walked = self.controller.rounds
 
         # Schedule-completion tail: re-consume the filled ring until the
         # a-priori lr schedule ends (extra decayed passes over the corpus).
@@ -521,11 +556,7 @@ class StreamingEmbedPipeline:
         jax.block_until_ready(self.phi_in)
         wall = time.perf_counter() - t0
 
-        if self.num_shards > 1:
-            phi_in = jnp.mean(self.phi_in, axis=0)
-            phi_out = jnp.mean(self.phi_out, axis=0)
-        else:
-            phi_in, phi_out = self.phi_in[0], self.phi_out[0]
+        phi_in, phi_out = self.embeddings(as_numpy=False)
         stats = {k: float(v) for k, v in self._stats.items()}
         stats["mean_len"] = (float(np.asarray(self.ring.lengths).sum())
                              / max(self.ring.num_filled, 1))
@@ -549,3 +580,163 @@ class StreamingEmbedPipeline:
         return Corpus(walks=walks, lengths=lengths,
                       ocn=np.asarray(self.ring.ocn, dtype=np.int64),
                       rounds=self.controller.rounds, stats=stats)
+
+    def embeddings(self, as_numpy: bool = True):
+        """Current (phi_in, phi_out) in node space, replica-averaged."""
+        if self.num_shards > 1:
+            phi_in = jnp.mean(self.phi_in, axis=0)
+            phi_out = jnp.mean(self.phi_out, axis=0)
+        else:
+            phi_in, phi_out = self.phi_in[0], self.phi_out[0]
+        if as_numpy:
+            return np.asarray(phi_in), np.asarray(phi_out)
+        return phi_in, phi_out
+
+    # --- incremental refresh (repro.core.incremental drives this) ---------
+    def corpus_slots(self):
+        """(walks, roots, valid) for the resident ring slots.
+
+        ``roots`` is the host-maintained slot→source-vertex map (updated
+        at every append from the dispatch chunks, so it survives partial
+        refresh rounds and ring wraps where slot arithmetic would lie);
+        ``valid`` masks slots ever written. This is the corpus surface
+        affected-vertex detection reads (one host pull per refresh).
+        """
+        walks = np.asarray(self.ring.walks)
+        return walks, self._slot_root, self._slot_root >= 0
+
+    def refresh(self, new_graph, affected_mask: np.ndarray, *,
+                fine_tune_steps: Optional[int] = None,
+                fine_tune_frac: float = 0.5,
+                fine_tune_lr_scale: float = 0.3,
+                max_extra_rounds: int = 2) -> Dict[str, Any]:
+        """Absorb a mutated graph: re-walk ONLY the affected roots through
+        the sharded engine, splice the delta corpus into the ring, continue
+        the seeded ΔD gate, and fine-tune DSGL in place.
+
+        Per retained round r the affected roots re-walk under round r's
+        ORIGINAL key; vertex-keyed RNG reproduces exactly the walks a
+        from-scratch round on the mutated graph would give them, and
+        ``ring_replace`` swaps them into their original round-aligned
+        slots — every other slot (every walk rooted at an unaffected
+        vertex) stays bit-identical. The Eq. 7 controller then continues
+        from the PRIOR run's D_r history: if churn moved the
+        degree/occurrence divergence by more than delta, extra
+        affected-subset rounds append until it re-converges (bounded by
+        ``max_extra_rounds``). Finally DSGL fine-tunes over the refreshed
+        ring on a decayed mini-schedule (``fine_tune_frac`` of the
+        original schedule at ``fine_tune_lr_scale``·lr), with the negative
+        alias table rebuilt from the exact refreshed occurrence counts.
+        """
+        from repro.core.corpus import ring_replace_donated
+        from repro.core.info import relative_entropy_dpq
+        from repro.core.termination import WalkCountController
+
+        if self.spec.rng_mode != "vertex":
+            raise ValueError("refresh requires WalkSpec.rng_mode='vertex'")
+        n = len(self.sources)
+        if new_graph.num_nodes != n:
+            raise ValueError(
+                f"refresh cannot change the vertex set yet "
+                f"({new_graph.num_nodes} != {n}); rebuild with embed_graph")
+        if (getattr(self.policy, "needs_edge_cm", False)
+                and new_graph.edge_cm is None):
+            new_graph = new_graph.with_edge_cm()
+        t0 = time.perf_counter()
+        self.graph = new_graph
+        self.degrees = np.asarray(new_graph.degrees(), dtype=np.int64)
+
+        affected = np.nonzero(np.asarray(affected_mask))[0].astype(np.int32)
+        cap = self.ring.capacity
+        slot_ids = np.arange(cap)
+        aff_slot = (self._slot_root >= 0) & np.asarray(affected_mask)[
+            np.maximum(self._slot_root, 0)]
+        rounds_resident = np.unique(self._slot_round[aff_slot])
+        sup0 = int(jnp.sum(self._stats["supersteps"]))
+
+        # --- re-walk every resident walk of an affected root; splice ------
+        # each new walk into the slot its stale predecessor occupies.
+        # Rounds are re-walked under their ORIGINAL round keys, so the
+        # spliced walks are bit-identical to a from-scratch round on the
+        # mutated graph; a root's slot within a round comes from the
+        # slot_root map (a full round holds every root once, a partial
+        # extra round from an earlier refresh only its subset).
+        rewalk_walks = 0
+        for r in rounds_resident:
+            sel = aff_slot & (self._slot_round == r)
+            roots_r = self._slot_root[sel]
+            slot_of = np.full(n, -1, np.int64)
+            slot_of[roots_r] = slot_ids[sel]
+            for chunk, st in self._run_round(int(r), sources=roots_r):
+                slots = slot_of[chunk]
+                self.ring = ring_replace_donated(
+                    self.ring, jnp.asarray(slots, jnp.int32), st.path,
+                    st.info.L.astype(jnp.int32))
+                for k in self._stats:
+                    self._stats[k] = self._stats[k] + getattr(st, k)
+                rewalk_walks += len(chunk)
+        retained = int(len(rounds_resident))
+
+        # --- seeded ΔD gate: append extra subset rounds if D moved --------
+        hist = list(self.controller.history)
+        gate = WalkCountController(
+            delta=self.controller.delta, min_rounds=1,
+            max_rounds=len(hist) + 1 + max_extra_rounds,
+            window=self.controller.window, seed_history=hist)
+        extra = 0
+        r_next = self._rounds_walked
+        while len(affected):
+            ocn_host = np.asarray(self.ring.ocn)
+            if not gate.update_d(relative_entropy_dpq(self.degrees,
+                                                      ocn_host)):
+                break
+            # Appends must FIT: a wrap would overwrite retained walks of
+            # UNAFFECTED roots (breaking the kept-walk bit-identity
+            # contract) and _ring_append never subtracts the overwritten
+            # tokens, so ocn would drift. A full ring simply stops the
+            # top-up — the spliced per-round re-walks above already
+            # refreshed the corpus.
+            if int(self.ring.total) + len(affected) > cap:
+                break
+            self._append(self._run_round(r_next, sources=affected), r_next)
+            rewalk_walks += len(affected)
+            extra += 1
+            r_next += 1
+        self._rounds_walked = r_next
+        self.controller = gate        # next refresh seeds from here
+
+        # --- fine-tune DSGL over the refreshed ring -----------------------
+        from repro.core.corpus import FrequencyOrder
+        from repro.core.dsgl import build_alias_table
+
+        ocn_host = np.asarray(self.ring.ocn)
+        filled = self.ring.num_filled
+        ft = (int(fine_tune_steps) if fine_tune_steps is not None
+              else max(1, int(fine_tune_frac * self.total_steps)))
+        self._ft = (self.global_step, ft,
+                    float(self.cfg.lr * fine_tune_lr_scale))
+        try:
+            table = build_alias_table(ocn_host, self.cfg.neg_power)
+            order = (FrequencyOrder.from_ocn(ocn_host)
+                     if self.num_shards > 1 else None)
+            done = 0
+            while done < ft:
+                step = min(self.steps_per_round, ft - done)
+                self._train_slots(0, filled, ocn_host, step,
+                                  table=table, order=order)
+                done += step
+        finally:
+            self._ft = None
+        jax.block_until_ready(self.phi_in)
+
+        sup1 = int(jnp.sum(self._stats["supersteps"]))
+        return {
+            "affected": int(len(affected)),
+            "affected_frac": float(len(affected) / max(n, 1)),
+            "retained_rounds": int(retained),
+            "extra_rounds": int(extra),
+            "rewalk_walks": int(rewalk_walks),
+            "rewalk_supersteps": int(sup1 - sup0),
+            "fine_tune_steps": int(ft),
+            "wall_s": float(time.perf_counter() - t0),
+        }

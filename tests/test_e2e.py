@@ -10,25 +10,8 @@ from repro.core.corpus import FrequencyOrder
 
 def _link_prediction_auc(graph, phi_in, phi_out, rng, n_pairs=2000):
     """AUC of dot-product scores: positive edges vs non-edges."""
-    indptr = np.asarray(graph.indptr)
-    indices = np.asarray(graph.indices)
-    n = graph.num_nodes
-    src = np.repeat(np.arange(n), np.diff(indptr))
-    pos_idx = rng.choice(len(src), size=min(n_pairs, len(src)), replace=False)
-    pos = np.stack([src[pos_idx], indices[pos_idx]], 1)
-    adj = {(int(a), int(b)) for a, b in zip(src, indices)}
-    neg = []
-    while len(neg) < len(pos):
-        a, b = rng.integers(0, n, 2)
-        if a != b and (int(a), int(b)) not in adj:
-            neg.append((a, b))
-    neg = np.array(neg)
-    emb = phi_in
-    s_pos = (emb[pos[:, 0]] * emb[pos[:, 1]]).sum(-1)
-    s_neg = (emb[neg[:, 0]] * emb[neg[:, 1]]).sum(-1)
-    # AUC = P(score_pos > score_neg)
-    diff = s_pos[:, None] - s_neg[None, :]
-    return float((diff > 0).mean() + 0.5 * (diff == 0).mean())
+    from benchmarks.common import link_prediction_auc
+    return link_prediction_auc(graph, phi_in, rng, n_pairs=n_pairs)
 
 
 @pytest.mark.slow

@@ -71,3 +71,44 @@ def test_partition_counts_sum_to_nodes(m):
     g = rmat_graph(128, 6, seed=m)
     res = mpgp_partition(g, m, gamma=2.0)
     assert int(res.counts().sum()) == g.num_nodes
+
+
+def test_degree_tau_balances_degree_mass(medium_graph):
+    """Eq. 15 with tau_weight='degree' and a tight gamma must spread the
+    DEGREE mass (the quantity walker occupancy follows) across all
+    shards, where the node-count tau lets a couple of shards absorb the
+    whole rich club (the BENCH_walk 384/512 walker pile-up)."""
+    import numpy as np
+    from repro.core.mpgp import mpgp_partition
+
+    deg = np.asarray(medium_graph.degrees(), dtype=np.int64)
+    nodes = mpgp_partition(medium_graph, 4, gamma=2.0)
+    degree = mpgp_partition(medium_graph, 4, gamma=1.15,
+                            tau_weight="degree")
+    dm_nodes = np.bincount(nodes.assignment, weights=deg, minlength=4)
+    dm_degree = np.bincount(degree.assignment, weights=deg, minlength=4)
+    # skew = max shard degree mass / mean
+    skew_nodes = dm_nodes.max() / max(dm_nodes.mean(), 1)
+    skew_degree = dm_degree.max() / max(dm_degree.mean(), 1)
+    assert skew_degree < skew_nodes
+    assert skew_degree < 1.3              # the gamma*B/k bound can bind
+    # still a full valid partition
+    assert (degree.assignment >= 0).all()
+    assert degree.counts().sum() == medium_graph.num_nodes
+
+
+def test_degree_tau_parallel_variant(small_graph):
+    from repro.core.mpgp import mpgp_partition_parallel
+
+    res = mpgp_partition_parallel(small_graph, 3, gamma=1.2,
+                                  tau_weight="degree")
+    assert (res.assignment >= 0).all()
+    assert res.counts().sum() == small_graph.num_nodes
+
+
+def test_unknown_tau_weight_rejected(small_graph):
+    import pytest
+    from repro.core.mpgp import mpgp_partition
+
+    with pytest.raises(ValueError):
+        mpgp_partition(small_graph, 2, tau_weight="edges")
