@@ -1,0 +1,160 @@
+"""Fault-tolerance benchmark: MTTR and WAL-replay cost (ISSUE 6 tracker).
+
+Two questions a recovery story must answer with numbers:
+
+1. **MTTR** — a worker dies late in the walk→train run; how long until the
+   embedding is back, (a) resuming from the last crash-consistent snapshot
+   vs (b) recomputing from scratch? Snapshots are worthless unless (a) is
+   decisively cheaper; the ISSUE 6 acceptance floor is resume >= 3x faster.
+   Also reported: the snapshot tax (wall overhead of checkpointing every
+   round vs not checkpointing at all) and the on-disk snapshot size.
+
+2. **WAL replay vs churn** — a continuous-ingest driver dies with k
+   durable-but-unapplied churn batches in its write-ahead log; how does
+   recovery time scale with the backlog? Reported per backlog size: the
+   pure log scan/decode time and the full ``IngestDriver.recover`` wall
+   (snapshot restore + replay + one batched refresh + re-snapshot).
+
+Repo-root ``BENCH_recovery.json`` is emitted by
+``benchmarks.run --only recovery``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict
+
+import numpy as np
+
+from benchmarks.common import save
+from repro.core.api import EmbedConfig, make_walk_plan
+from repro.core.dsgl import DSGLConfig
+from repro.graph.generators import churn_batch, rmat_graph
+from repro.runtime.faults import FaultInjector, SimulatedFailure
+from repro.runtime.ingest import IngestConfig, IngestDriver
+from repro.runtime.trainer import StreamingEmbedPipeline
+
+
+def _plan(dim: int, seed: int = 3):
+    cfg = EmbedConfig(dim=dim, epochs=1, lr=0.05, delta=1e-3, max_len=40,
+                      min_len=10, window=6, negatives=4, rng_mode="vertex",
+                      seed=seed)
+    policy, spec, rounds = make_walk_plan(cfg)
+    dsgl = DSGLConfig(dim=dim, epochs=1, lr=0.05, window=6, negatives=4,
+                      seed=seed)
+    return policy, spec, rounds, dsgl
+
+
+def _dir_bytes(path: str) -> int:
+    import os
+    total = 0
+    for base, _, files in os.walk(path):
+        total += sum(os.path.getsize(os.path.join(base, f)) for f in files)
+    return total
+
+
+def run(quick: bool = True) -> Dict:
+    import os
+    import tempfile
+
+    n = 1024 if quick else 4096
+    dim = 32
+    g = rmat_graph(n, 10, seed=3)
+    policy, spec, rounds, dsgl = _plan(dim)
+
+    def fresh():
+        return StreamingEmbedPipeline(g, policy, spec, rounds, dsgl)
+
+    # --- warmup + reference: uninterrupted run (cold, pays compile) -----
+    base = fresh()
+    base.run()
+    phi_ref, _ = base.embeddings()
+
+    with tempfile.TemporaryDirectory() as root:
+        ckpt = os.path.join(root, "ckpt")
+        # --- warm from-scratch wall (= recovery cost with no snapshots) -
+        t0 = time.perf_counter()
+        scratch = fresh()
+        scratch.run()
+        mttr_scratch = time.perf_counter() - t0
+        wall_scratch = mttr_scratch
+
+        # --- snapshot tax: the same run checkpointing every round. The
+        # empty-plan injector never fires but counts lifecycle
+        # occurrences, giving the tail-iteration count for the crash
+        # placement below.
+        counter = FaultInjector()
+        t0 = time.perf_counter()
+        taxed = fresh()
+        taxed.run(ckpt_root=os.path.join(root, "tax"), ckpt_every_rounds=1,
+                  faults=counter)
+        wall_ckpt = time.perf_counter() - t0
+        n_tail = counter.counts.get("tail", 1)
+
+        # --- checkpointed run, crashed at the LAST schedule-tail
+        # iteration — the late-crash case checkpointing exists for: the
+        # run is ~done, scratch recovery redoes everything, resume
+        # replays at most one checkpoint interval.
+        faults = FaultInjector({"tail": [n_tail - 1]})
+        victim = fresh()
+        t0 = time.perf_counter()
+        try:
+            victim.run(ckpt_root=ckpt, ckpt_every_rounds=1, faults=faults)
+            raise RuntimeError("planned fault did not fire")
+        except SimulatedFailure:
+            pass
+        wall_to_crash = time.perf_counter() - t0
+        snapshot_bytes = _dir_bytes(ckpt) // max(
+            len([d for d in os.listdir(ckpt) if d.startswith("step_")]), 1)
+
+        # --- MTTR: resume from the newest snapshot and finish -----------
+        t0 = time.perf_counter()
+        resumed = StreamingEmbedPipeline.resume(ckpt, policy, spec, dsgl)
+        resumed.run(ckpt_root=ckpt, ckpt_every_rounds=1)
+        mttr_resume = time.perf_counter() - t0
+        phi_res, _ = resumed.embeddings()
+        bit_identical = bool(np.array_equal(phi_ref, phi_res))
+
+        # --- WAL replay vs churn backlog --------------------------------
+        wal_rows = []
+        for k in (1, 4, 8):
+            wroot = os.path.join(root, f"wal_{k}")
+            drv = IngestDriver(wroot, base,
+                               cfg=IngestConfig(apply_every=10**9))
+            edges = 0
+            for i in range(k):
+                b = churn_batch(g, 0.01, seed=100 * k + i)
+                drv.submit(b)
+                edges += b.num_changes
+            t0 = time.perf_counter()
+            tail, _ = drv.wal.replay()
+            wal_scan_s = time.perf_counter() - t0
+            assert len(tail) == k
+            t0 = time.perf_counter()
+            rec = IngestDriver.recover(wroot, policy, spec, dsgl,
+                                       cfg=IngestConfig(apply_every=10**9))
+            recover_wall_s = time.perf_counter() - t0
+            assert rec.staleness()["applied_seq"] == k
+            wal_rows.append({
+                "backlog_batches": k,
+                "backlog_edges": edges,
+                "wal_scan_s": wal_scan_s,
+                "recover_wall_s": recover_wall_s,
+            })
+
+    rec = {
+        "num_nodes": n,
+        "wall_scratch_s": wall_scratch,
+        "wall_ckpt_s": wall_ckpt,
+        "snapshot_overhead_frac": wall_ckpt / max(wall_scratch, 1e-9) - 1.0,
+        "snapshot_bytes": snapshot_bytes,
+        "wall_to_crash_s": wall_to_crash,
+        "mttr_resume_s": mttr_resume,
+        "mttr_scratch_s": mttr_scratch,
+        "mttr_speedup": mttr_scratch / max(mttr_resume, 1e-9),
+        "resume_bit_identical": bit_identical,
+        "wal_replay": wal_rows,
+    }
+    save("recovery", rec)
+    return rec

@@ -18,7 +18,7 @@ import traceback
 
 from benchmarks import (
     classification, e2e, generality, incom_bench, incremental, partitioning,
-    scaling, sync_bytes, train_efficiency, walk_efficiency,
+    recovery, scaling, sync_bytes, train_efficiency, walk_efficiency,
 )
 
 BENCHES = {
@@ -32,6 +32,7 @@ BENCHES = {
     "generality": generality.run,             # Fig. 12
     "classification": classification.run,     # Fig. 9
     "incremental": incremental.run,           # dynamic-graph refresh (PR 4)
+    "recovery": recovery.run,                 # fault-tolerance MTTR (PR 6)
 }
 
 REPO_ROOT = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
@@ -246,6 +247,39 @@ def _emit_bench_incremental(rec: dict) -> None:
     print(f"wrote {path}", flush=True)
 
 
+def _emit_bench_recovery(rec: dict) -> None:
+    """Repo-root BENCH_recovery.json: the fault-tolerance trajectory —
+    MTTR of snapshot-resume vs from-scratch recompute, the snapshot tax,
+    and WAL replay wall-clock vs churn backlog."""
+    bench = {
+        "workload": {"num_nodes": rec.get("num_nodes")},
+        "mttr": {
+            "resume_s": rec.get("mttr_resume_s"),
+            "scratch_s": rec.get("mttr_scratch_s"),
+            "speedup": rec.get("mttr_speedup"),
+            "resume_bit_identical": rec.get("resume_bit_identical"),
+        },
+        "snapshot": {
+            "bytes": rec.get("snapshot_bytes"),
+            "overhead_frac": rec.get("snapshot_overhead_frac"),
+            "wall_ckpt_s": rec.get("wall_ckpt_s"),
+            "wall_scratch_s": rec.get("wall_scratch_s"),
+        },
+        "wal_replay": rec.get("wal_replay"),
+        # ISSUE 6 acceptance tracker: resuming from the last snapshot must
+        # beat a from-scratch recompute by >= 3x, and the resumed run must
+        # reproduce the uninterrupted run bit-for-bit.
+        "acceptance": {
+            "resume_ge_3x": bool(rec.get("mttr_speedup", 0.0) >= 3.0),
+            "bit_identical": bool(rec.get("resume_bit_identical", False)),
+        },
+    }
+    path = os.path.join(REPO_ROOT, "BENCH_recovery.json")
+    with open(path, "w") as f:
+        json.dump(bench, f, indent=1, default=float)
+    print(f"wrote {path}", flush=True)
+
+
 def main() -> int:
     p = argparse.ArgumentParser()
     p.add_argument("--full", action="store_true",
@@ -271,6 +305,8 @@ def main() -> int:
                 _emit_bench_walk(rec)
             if name == "incremental" and args.only == name:
                 _emit_bench_incremental(rec)
+            if name == "recovery" and args.only == name:
+                _emit_bench_recovery(rec)
         except Exception as e:
             failures += 1
             print(f"    FAILED: {type(e).__name__}: {e}", flush=True)

@@ -7,6 +7,19 @@ data cursor, RNG key, mesh shape at save time). Writes go to
 half-written checkpoint is never visible, so crash-during-save is safe
 (classic fault-tolerance posture).
 
+Durability: every leaf file and the manifest are fsynced, then the tmp
+directory itself, *before* the rename, and the parent directory after it.
+Rename-atomicity alone is not enough on a real filesystem — a crash after
+the rename can otherwise commit a directory whose data blocks never hit
+disk (truncated ``.npy``s behind a valid-looking name). Stale ``.tmp``
+directories from crashed saves are swept on the next save.
+
+Reads are defensive: ``latest_step``/``load_checkpoint`` treat a step
+directory with a corrupt or missing ``manifest.json`` (or missing leaf
+files) as non-existent and fall back to the newest *valid* step — a torn
+checkpoint from a pre-fsync writer or a partial copy must cost one
+snapshot of progress, not the whole run.
+
 Elastic restore: leaves are saved as FULL (unsharded) host arrays, so a
 checkpoint written on one mesh restores onto ANY mesh — ``reshard_to_mesh``
 device_puts with the new shardings. (At real 1000-node scale the same
@@ -19,7 +32,7 @@ from __future__ import annotations
 import json
 import os
 import shutil
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -40,17 +53,42 @@ def _path_str(path) -> str:
     return "/".join(parts)
 
 
+def _fsync_file(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _fsync_dir(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY | getattr(os, "O_DIRECTORY", 0))
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _sweep_stale_tmp(root: str) -> None:
+    """Remove leftover ``step_*.tmp`` dirs from crashed saves."""
+    if not os.path.isdir(root):
+        return
+    for d in os.listdir(root):
+        if d.startswith("step_") and d.endswith(".tmp"):
+            shutil.rmtree(os.path.join(root, d), ignore_errors=True)
+
+
 def save_checkpoint(
     root: str,
     step: int,
     tree: Any,
     meta: Optional[Dict[str, Any]] = None,
 ) -> str:
-    """Write tree leaves + manifest; atomic rename commit. Returns path."""
+    """Write tree leaves + manifest; fsync everything; atomic rename commit.
+    Returns path."""
     final = os.path.join(root, f"step_{step:08d}")
     tmp = final + ".tmp"
-    if os.path.exists(tmp):
-        shutil.rmtree(tmp)
+    _sweep_stale_tmp(root)            # includes our own tmp if it survived
     os.makedirs(tmp, exist_ok=True)
 
     leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
@@ -66,33 +104,86 @@ def save_checkpoint(
             # bit-exact, np.save of ml_dtypes is not round-trippable
             arr = arr.view({1: np.uint8, 2: np.uint16,
                             4: np.uint32}[arr.dtype.itemsize])
-        np.save(os.path.join(tmp, fname), arr)
+        fpath = os.path.join(tmp, fname)
+        with open(fpath, "wb") as f:
+            np.save(f, arr)
+            f.flush()
+            os.fsync(f.fileno())
         index[_path_str(path)] = {
             "file": fname, "dtype": true_dtype, "shape": list(arr.shape)}
     manifest = {"step": step, "leaves": index, "meta": meta or {}}
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    _fsync_dir(tmp)                   # leaf entries durable before commit
     if os.path.exists(final):
         shutil.rmtree(final)
-    os.rename(tmp, final)                     # atomic commit
+    os.rename(tmp, final)             # atomic commit
+    _fsync_dir(root)                  # the rename itself durable
     return final
 
 
-def latest_step(root: str) -> Optional[int]:
-    if not os.path.isdir(root):
+def _read_manifest(root: str, step: int) -> Optional[Dict[str, Any]]:
+    """Manifest of step, or None if the checkpoint is torn/corrupt."""
+    d = os.path.join(root, f"step_{step:08d}")
+    try:
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        for info in manifest["leaves"].values():
+            if not os.path.exists(os.path.join(d, info["file"])):
+                return None
+        return manifest
+    except (OSError, ValueError, KeyError):
         return None
+
+
+def _step_candidates(root: str) -> List[int]:
+    if not os.path.isdir(root):
+        return []
     steps = [int(d.split("_")[1]) for d in os.listdir(root)
              if d.startswith("step_") and not d.endswith(".tmp")]
-    return max(steps) if steps else None
+    return sorted(steps, reverse=True)
+
+
+def latest_step(root: str) -> Optional[int]:
+    """Newest step with a VALID manifest (torn checkpoints are skipped)."""
+    for step in _step_candidates(root):
+        if _read_manifest(root, step) is not None:
+            return step
+    return None
+
+
+def read_meta(root: str, step: Optional[int] = None
+              ) -> Tuple[int, Dict[str, Any]]:
+    """(step, meta) of the newest valid checkpoint without loading arrays
+    (recovery drivers peek at cursors — e.g. the WAL applied-seq — before
+    deciding what to restore)."""
+    if step is None:
+        step = latest_step(root)
+        if step is None:
+            raise FileNotFoundError(f"no valid checkpoints under {root}")
+    manifest = _read_manifest(root, step)
+    if manifest is None:
+        raise FileNotFoundError(
+            f"checkpoint step {step} under {root} is missing or torn")
+    return manifest["step"], manifest["meta"]
 
 
 def load_checkpoint(root: str, step: Optional[int] = None
                     ) -> Tuple[int, Dict[str, np.ndarray], Dict[str, Any]]:
-    """Returns (step, {path: array}, meta)."""
+    """Returns (step, {path: array}, meta).
+
+    With ``step=None`` the newest VALID checkpoint is loaded — a corrupt
+    or missing manifest (a torn write, a partial copy) makes that step
+    invisible and the next-newest valid one is used instead. An explicitly
+    requested step that is torn still raises (the caller asked for *that*
+    state; silently substituting another would be worse than failing).
+    """
     if step is None:
         step = latest_step(root)
         if step is None:
-            raise FileNotFoundError(f"no checkpoints under {root}")
+            raise FileNotFoundError(f"no valid checkpoints under {root}")
     d = os.path.join(root, f"step_{step:08d}")
     with open(os.path.join(d, "manifest.json")) as f:
         manifest = json.load(f)

@@ -1,23 +1,72 @@
-"""Tiny structured logger (stdlib logging, one-line setup)."""
+"""Tiny structured logger (stdlib logging, one-line setup).
+
+``REPRO_LOG_LEVEL`` (DEBUG/INFO/WARNING/ERROR, or a number) sets the level
+at first use. ``log_context(round=3, shard=1)`` pushes structured fields
+that every log line emitted inside the ``with`` block carries as trailing
+``key=value`` pairs — the pipeline/ingest drivers wrap their phases in it
+so postmortems can grep a crash down to the exact round/shard/
+graph_version without the call sites threading those fields by hand.
+"""
 
 from __future__ import annotations
 
+import contextlib
+import contextvars
 import logging
+import os
 import sys
 
 _CONFIGURED = False
+_CONTEXT: contextvars.ContextVar[tuple] = contextvars.ContextVar(
+    "repro_log_context", default=())
+
+
+class _ContextFilter(logging.Filter):
+    """Append the active ``log_context`` fields to every record."""
+
+    def filter(self, record: logging.LogRecord) -> bool:
+        fields = {}
+        for frame in _CONTEXT.get():
+            fields.update(frame)
+        record.ctx = (
+            " [" + " ".join(f"{k}={v}" for k, v in fields.items()) + "]"
+            if fields else "")
+        return True
+
+
+def _env_level(default: int = logging.INFO) -> int:
+    raw = os.environ.get("REPRO_LOG_LEVEL", "").strip()
+    if not raw:
+        return default
+    if raw.isdigit():
+        return int(raw)
+    return getattr(logging, raw.upper(), default)
 
 
 def get_logger(name: str = "repro") -> logging.Logger:
     global _CONFIGURED
     if not _CONFIGURED:
         handler = logging.StreamHandler(sys.stderr)
-        handler.setFormatter(
-            logging.Formatter("%(asctime)s %(name)s %(levelname)s %(message)s")
-        )
+        handler.setFormatter(logging.Formatter(
+            "%(asctime)s %(name)s %(levelname)s %(message)s%(ctx)s"))
+        handler.addFilter(_ContextFilter())
         root = logging.getLogger("repro")
         root.addHandler(handler)
-        root.setLevel(logging.INFO)
+        root.setLevel(_env_level())
         root.propagate = False
         _CONFIGURED = True
     return logging.getLogger(name)
+
+
+@contextlib.contextmanager
+def log_context(**fields):
+    """Attach ``key=value`` fields to every log line in this block.
+
+    Nested contexts merge (inner wins on key collision); the contextvar
+    scoping keeps prefetch/driver threads from seeing each other's frames.
+    """
+    token = _CONTEXT.set(_CONTEXT.get() + (fields,))
+    try:
+        yield
+    finally:
+        _CONTEXT.reset(token)

@@ -181,6 +181,32 @@ ring_replace = jax.jit(_ring_replace)
 ring_replace_donated = jax.jit(_ring_replace, donate_argnums=(0,))
 
 
+def ring_export(ring: CorpusRing) -> Dict[str, np.ndarray]:
+    """Full ring state as host arrays — the snapshot surface. Unlike
+    ``ring_to_numpy`` (which rotates and drops the write cursor for numpy
+    consumers), this is a lossless dump: importing it reproduces the ring
+    bit-for-bit including cursor/total, so slot-indexed host maps
+    (slot→root, slot→round) stay aligned across a save/restore cycle."""
+    return {
+        "walks": np.asarray(ring.walks),
+        "lengths": np.asarray(ring.lengths),
+        "ocn": np.asarray(ring.ocn),
+        "cursor": np.asarray(ring.cursor),
+        "total": np.asarray(ring.total),
+    }
+
+
+def ring_import(state: Dict[str, np.ndarray]) -> CorpusRing:
+    """Rebuild a device ring from ``ring_export`` output."""
+    return CorpusRing(
+        walks=jnp.asarray(state["walks"], jnp.int32),
+        lengths=jnp.asarray(state["lengths"], jnp.int32),
+        ocn=jnp.asarray(state["ocn"], jnp.int32),
+        cursor=jnp.asarray(state["cursor"], jnp.int32),
+        total=jnp.asarray(state["total"], jnp.int32),
+    )
+
+
 def ring_to_numpy(ring: CorpusRing) -> Tuple[np.ndarray, np.ndarray]:
     """Materialize the filled slots (oldest -> newest) on host — the API
     boundary for numpy consumers; the hot path never calls this."""

@@ -76,3 +76,27 @@ class WalkCountController:
     @property
     def rounds(self) -> int:
         return len(self.history)
+
+    # --- crash-consistent snapshot surface --------------------------------
+    def to_state(self) -> dict:
+        """JSON-serializable gate state for pipeline snapshots: config plus
+        the full D_r history (the windowed smoothing is a pure function of
+        the history, so it is replayed on restore rather than stored)."""
+        return {
+            "delta": float(self.delta),
+            "min_rounds": int(self.min_rounds),
+            "max_rounds": int(self.max_rounds),
+            "window": int(self.window),
+            "history": [float(d) for d in self.history],
+        }
+
+    @classmethod
+    def from_state(cls, state: dict) -> "WalkCountController":
+        """Rebuild a gate mid-trajectory. ``seed_history`` replay computes
+        exactly the same ``_smooth`` series the live gate accumulated (the
+        same windowed mean over the same history), so the first post-restore
+        ``update_d`` decision is bit-identical to the uninterrupted run's."""
+        return cls(
+            delta=state["delta"], min_rounds=state["min_rounds"],
+            max_rounds=state["max_rounds"], window=state["window"],
+            seed_history=list(state["history"]))

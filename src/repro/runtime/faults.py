@@ -1,0 +1,156 @@
+"""Fault-injection harness for the walk→train lifecycle.
+
+The LM trainer shipped a step-granular ``FailureInjector``; this module
+generalizes it into named **injection points** threaded through the whole
+embedding pipeline so recovery invariants can be exercised at every host
+boundary where a real crash can land:
+
+    ``superstep``   — between walk dispatch chunks inside a round (a crash
+                      mid-round: some chunks walked, none committed);
+    ``round``       — at the top of a round iteration (after the ΔD
+                      decision, before training);
+    ``tail``        — between schedule-tail training iterations;
+    ``refresh``     — at refresh entry (churn staged, nothing spliced);
+    ``refresh_splice`` — between per-round ``ring_replace`` splices inside
+                      a refresh (the half-updated-ring hazard);
+    ``ckpt_write``  — immediately before a snapshot commits (the snapshot
+                      is lost; recovery must fall back one snapshot);
+    ``wal_append``  — after a WAL record is durable but before it applies.
+
+Each point carries a cumulative occurrence counter (monotonic across
+supervisor restarts — the same injector object rides through the restart
+loop), and a plan maps point → occurrence indices at which to raise
+``SimulatedFailure``. Every planned occurrence fires at most once, which is
+exactly the "crash once, then the retry succeeds" shape a restart test
+needs.
+
+Torn-write simulation: ``torn("ckpt")`` / ``torn("wal")`` report whether
+the *current* occurrence should leave a torn artifact behind (half a WAL
+record, a committed checkpoint directory with a corrupt manifest) before
+raising — the writer cooperates by truncating its own output. This models
+a crash midway through the physical write, the case the fsync-before-
+rename and WAL-checksum protocols exist for.
+
+``run_with_restarts`` is the generic supervisor loop a cluster agent would
+drive: attempt → on ``SimulatedFailure`` recover from durable state →
+re-attempt, bounded.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Iterable, Mapping, Optional, Tuple
+
+
+class SimulatedFailure(RuntimeError):
+    """Stands in for a node crash / preemption."""
+
+
+#: Canonical pipeline injection points (tests sweep these).
+PIPELINE_POINTS = ("superstep", "round", "tail", "ckpt_write")
+INGEST_POINTS = ("wal_append", "refresh", "refresh_splice")
+
+
+@dataclasses.dataclass
+class FaultInjector:
+    """Raise ``SimulatedFailure`` at planned (point, occurrence) pairs.
+
+    plan:  {"round": (1,), "wal_append": (0,)} — fail the 2nd time the
+           ``round`` point is reached and the 1st ``wal_append``.
+    torn_plan: occurrences at which the failure should additionally leave
+           a torn artifact ({"ckpt": (0,), "wal": (0,)}); consumed by the
+           writer via ``torn(kind)`` *before* the matching ``fire``.
+    """
+
+    plan: Mapping[str, Iterable[int]] = dataclasses.field(default_factory=dict)
+    torn_plan: Mapping[str, Iterable[int]] = dataclasses.field(
+        default_factory=dict)
+
+    def __post_init__(self):
+        self._plan = {p: set(occ) for p, occ in dict(self.plan).items()}
+        self._torn = {p: set(occ) for p, occ in dict(self.torn_plan).items()}
+        self.counts: Dict[str, int] = {}
+        self.fired: list = []          # [(point, occurrence), ...]
+
+    def fire(self, point: str, note: Any = None) -> None:
+        """Count one occurrence of ``point``; raise if the plan says so."""
+        i = self.counts.get(point, 0)
+        self.counts[point] = i + 1
+        planned = self._plan.get(point)
+        if planned and i in planned:
+            planned.discard(i)         # fire at most once per occurrence
+            self.fired.append((point, i))
+            raise SimulatedFailure(
+                f"injected failure at {point}[{i}]"
+                + (f" ({note})" if note is not None else ""))
+
+    def torn(self, kind: str) -> bool:
+        """Should the current write of ``kind`` be left torn? (Consumes the
+        planned occurrence; the caller raises via ``fire`` afterwards.)"""
+        i = self.counts.get(f"torn_{kind}", 0)
+        self.counts[f"torn_{kind}"] = i + 1
+        planned = self._torn.get(kind)
+        if planned and i in planned:
+            planned.discard(i)
+            return True
+        return False
+
+    @property
+    def pending(self) -> int:
+        return sum(len(v) for v in self._plan.values()) + sum(
+            len(v) for v in self._torn.values())
+
+
+class NullInjector(FaultInjector):
+    """Injector that never fires (the production default)."""
+
+    def __init__(self):
+        super().__init__(plan={}, torn_plan={})
+
+    def fire(self, point: str, note: Any = None) -> None:  # noqa: D102
+        pass
+
+    def torn(self, kind: str) -> bool:                     # noqa: D102
+        return False
+
+
+NULL_INJECTOR = NullInjector()
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    """Step-granular injector (the original LM-trainer interface, kept as
+    the compatibility surface; ``FaultInjector`` is the generalized form)."""
+
+    fail_at_steps: tuple = ()
+    fired: set = dataclasses.field(default_factory=set)
+
+    def check(self, step: int):
+        if step in self.fail_at_steps and step not in self.fired:
+            self.fired.add(step)
+            raise SimulatedFailure(f"injected failure at step {step}")
+
+
+def run_with_restarts(
+    attempt: Callable[[int], Any],
+    *,
+    recover: Optional[Callable[[int], None]] = None,
+    max_restarts: int = 8,
+) -> Tuple[Any, int]:
+    """Supervisor loop: run ``attempt(restart_idx)``; on ``SimulatedFailure``
+    call ``recover(restart_idx)`` (restore from durable state) and retry.
+
+    Returns (result, restarts). Raises the last failure once
+    ``max_restarts`` is exhausted — a supervisor must not loop forever on a
+    deterministic crash.
+    """
+    restarts = 0
+    while True:
+        try:
+            return attempt(restarts), restarts
+        except SimulatedFailure:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            if recover is not None:
+                recover(restarts)

@@ -1,0 +1,349 @@
+"""Resilient continuous-ingest driver: WAL → apply → refresh → snapshot.
+
+PR 4 made edge churn a one-shot call (``refresh_embedding``); the ROADMAP
+asks for continuous ingestion at production cadence, and at production
+cadence the driver must survive crashes at ANY point of its own protocol.
+This module is that driver. The durability protocol per churn batch is
+
+    append   — the ``EdgeBatch`` is serialized into a write-ahead log
+               record (length + CRC32 framed) and **fsynced** before the
+               driver acknowledges it: an accepted batch can never be
+               lost, only re-applied;
+    apply    — the batch is staged into the ``DeltaCSR`` overlay;
+    refresh  — the incremental refresh absorbs the staged churn (subset
+               re-walk + in-place fine-tune), with bounded retry and
+               exponential backoff — each retry RESTORES the pipeline
+               from the last snapshot first, so a half-applied refresh is
+               never retried on top of itself;
+    snapshot — the pipeline checkpoints (atomic, fsynced) with the WAL
+               sequence number it now covers (``applied_seq``);
+    truncate — WAL records at or below ``applied_seq`` are dropped (atomic
+               rewrite): the log only ever holds churn the snapshot does
+               not.
+
+Crash recovery (``IngestDriver.recover``) inverts the protocol: restore
+the newest valid snapshot, replay the un-truncated WAL tail (records past
+the snapshot's ``applied_seq``; a torn final record — the crash landed
+mid-append — is detected by the CRC frame and discarded), and re-run
+apply → refresh → snapshot → truncate. Because refresh re-walks under the
+original round keys and fine-tunes under persisted step-keyed RNG, the
+recovered state is bit-identical to a run that never crashed.
+
+Bounded staleness: ``staleness()`` accounts appended-vs-applied sequence
+numbers and pending churn volume; ``IngestConfig.max_pending_edges`` turns
+the bound into backpressure (a submit that crosses it forces a refresh
+instead of letting the embedding drift arbitrarily far behind the graph).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import io
+import os
+import struct
+import time
+import zlib
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.ckpt.checkpoint import read_meta
+from repro.common.logging import get_logger, log_context
+from repro.graph.delta import EdgeBatch
+from repro.runtime.faults import FaultInjector, NULL_INJECTOR
+
+log = get_logger("repro.runtime.ingest")
+
+_HEADER = struct.Struct("<QII")          # (seq, payload_len, crc32)
+
+
+def _encode_batch(batch: EdgeBatch) -> bytes:
+    buf = io.BytesIO()
+    arrays = {"insert": batch.insert, "delete": batch.delete}
+    if batch.insert_weights is not None:
+        arrays["insert_weights"] = batch.insert_weights
+    np.savez(buf, **arrays)
+    return buf.getvalue()
+
+
+def _decode_batch(payload: bytes) -> EdgeBatch:
+    with np.load(io.BytesIO(payload), allow_pickle=False) as z:
+        return EdgeBatch(
+            insert=z["insert"], delete=z["delete"],
+            insert_weights=(z["insert_weights"]
+                            if "insert_weights" in z.files else None))
+
+
+class WriteAheadLog:
+    """Append-only, CRC-framed, fsync-on-append batch log.
+
+    Record layout: ``<QII`` header (monotonic seq, payload length, CRC32 of
+    the payload) followed by the payload (an npz of the batch arrays).
+    ``replay`` stops at the first torn record — a short header, a short
+    payload, or a CRC mismatch all mean the crash landed mid-append, and
+    everything from that offset on is garbage by construction (records are
+    written in order and fsynced before acknowledgement).
+    """
+
+    def __init__(self, path: str):
+        self.path = path
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+
+    # -- write side --------------------------------------------------------
+    def append(self, seq: int, batch: EdgeBatch,
+               faults: FaultInjector = NULL_INJECTOR) -> int:
+        payload = _encode_batch(batch)
+        record = _HEADER.pack(seq, len(payload),
+                              zlib.crc32(payload)) + payload
+        if faults.torn("wal"):
+            # Crash mid-append: only a prefix of the record reaches disk.
+            with open(self.path, "ab") as f:
+                f.write(record[:max(1, len(record) // 2)])
+                f.flush()
+                os.fsync(f.fileno())
+            from repro.runtime.faults import SimulatedFailure
+            raise SimulatedFailure(f"torn WAL append at seq {seq}")
+        with open(self.path, "ab") as f:
+            f.write(record)
+            f.flush()
+            os.fsync(f.fileno())
+        return seq
+
+    # -- read side ---------------------------------------------------------
+    def replay(self, after_seq: int = 0
+               ) -> Tuple[List[Tuple[int, EdgeBatch]], int]:
+        """(records with seq > after_seq, valid_prefix_bytes). Torn tails
+        are detected, reported, and excluded."""
+        if not os.path.exists(self.path):
+            return [], 0
+        with open(self.path, "rb") as f:
+            data = f.read()
+        records, off = [], 0
+        while off + _HEADER.size <= len(data):
+            seq, length, crc = _HEADER.unpack_from(data, off)
+            body = data[off + _HEADER.size: off + _HEADER.size + length]
+            if len(body) < length or zlib.crc32(body) != crc:
+                log.warning("WAL %s: torn record at offset %d (seq %d) — "
+                            "discarding tail", self.path, off, seq)
+                break
+            if seq > after_seq:
+                records.append((seq, _decode_batch(body)))
+            off += _HEADER.size + length
+        else:
+            if off < len(data):
+                log.warning("WAL %s: %d trailing bytes (torn header) — "
+                            "discarding", self.path, len(data) - off)
+        return records, off
+
+    def truncate_upto(self, applied_seq: int) -> None:
+        """Atomically drop records with seq <= applied_seq (and any torn
+        tail). The usual steady state truncates to an empty log."""
+        keep, _ = self.replay(after_seq=applied_seq)
+        tmp = self.path + ".tmp"
+        with open(tmp, "wb") as f:
+            for seq, batch in keep:
+                payload = _encode_batch(batch)
+                f.write(_HEADER.pack(seq, len(payload),
+                                     zlib.crc32(payload)) + payload)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, self.path)
+        dir_fd = os.open(os.path.dirname(self.path) or ".", os.O_RDONLY)
+        try:
+            os.fsync(dir_fd)
+        finally:
+            os.close(dir_fd)
+
+
+@dataclasses.dataclass
+class IngestConfig:
+    apply_every: int = 1            # WAL batches per refresh application
+    max_pending_edges: Optional[int] = None   # staleness bound (backpressure)
+    max_retries: int = 3            # refresh retries (after restore) per drain
+    backoff_s: float = 0.05         # exponential: backoff_s * 2**attempt
+    snapshot_dir: str = "snapshots"
+    wal_name: str = "wal.log"
+
+
+class IngestDriver:
+    """Long-running churn driver around one ``StreamingEmbedPipeline``.
+
+    ``submit`` is the ingress: batches become durable in the WAL
+    immediately and are absorbed (apply → refresh → snapshot → truncate)
+    every ``apply_every`` batches, or sooner when ``max_pending_edges``
+    backpressure trips, or explicitly via ``drain()``. ``recover`` rebuilds
+    a driver after a process death from the snapshot + WAL tail alone.
+    """
+
+    def __init__(self, root: str, pipeline, *,
+                 detect: str = "traversal",
+                 cfg: IngestConfig = IngestConfig(),
+                 refresh_kwargs: Optional[Dict[str, Any]] = None,
+                 faults: FaultInjector = NULL_INJECTOR,
+                 sleep: Callable[[float], None] = time.sleep,
+                 _initial_snapshot: bool = True):
+        from repro.core.incremental import IncrementalRefresh
+
+        self.root = root
+        self.cfg = cfg
+        self.detect = detect
+        self.refresh_kwargs = dict(refresh_kwargs or {})
+        self.faults = faults
+        self.sleep = sleep
+        self.pipeline = pipeline
+        self.refresher = IncrementalRefresh(pipeline, detect=detect)
+        self.ckpt_dir = os.path.join(root, cfg.snapshot_dir)
+        self.wal = WriteAheadLog(os.path.join(root, cfg.wal_name))
+        self.applied_seq = 0
+        self.appended_seq = 0
+        self._pending: List[Tuple[int, EdgeBatch]] = []
+        self.drains = 0
+        self.retries = 0
+        if _initial_snapshot:
+            # The recovery base: a driver must never hold churn the WAL
+            # covers without a snapshot to replay it against.
+            self._snapshot()
+
+    # -- ingress -----------------------------------------------------------
+    def submit(self, batch: EdgeBatch) -> int:
+        """Durably accept one churn batch; absorb when the cadence or the
+        staleness bound says so. Returns the batch's WAL sequence number."""
+        seq = self.appended_seq + 1
+        self.wal.append(seq, batch, faults=self.faults)
+        self.appended_seq = seq
+        self._pending.append((seq, batch))
+        self.faults.fire("wal_append", seq)
+        over_staleness = (
+            self.cfg.max_pending_edges is not None
+            and self.pending_edges() > self.cfg.max_pending_edges)
+        if len(self._pending) >= self.cfg.apply_every or over_staleness:
+            self.drain()
+        return seq
+
+    def pending_edges(self) -> int:
+        return sum(b.num_changes for _, b in self._pending)
+
+    def staleness(self) -> Dict[str, Any]:
+        """Bounded-staleness accounting: how far the served embedding lags
+        the accepted churn."""
+        return {
+            "appended_seq": self.appended_seq,
+            "applied_seq": self.applied_seq,
+            "pending_batches": len(self._pending),
+            "pending_edges": self.pending_edges(),
+            "max_pending_edges": self.cfg.max_pending_edges,
+            "graph_version": self._graph_version(),
+            "drains": self.drains,
+            "retries": self.retries,
+        }
+
+    def _graph_version(self) -> int:
+        from repro.graph.delta import graph_version
+        return int(graph_version(self.pipeline.graph))
+
+    # -- absorption --------------------------------------------------------
+    def drain(self) -> Optional[Any]:
+        """Absorb all pending batches: apply → refresh (bounded retry with
+        restore-from-snapshot between attempts) → snapshot → truncate."""
+        if not self._pending:
+            return None
+        batches = list(self._pending)
+        last_seq = batches[-1][0]
+        with log_context(applied_seq=self.applied_seq, target_seq=last_seq,
+                         graph_version=self._graph_version()):
+            stats = self._apply_with_retry(batches)
+            self.applied_seq = last_seq
+            self._pending = []
+            self._snapshot()
+            self.wal.truncate_upto(self.applied_seq)
+            self.drains += 1
+            log.info("drained %d batches (%d edges) in refresh: "
+                     "affected=%s wall=%.3fs", len(batches),
+                     sum(b.num_changes for _, b in batches),
+                     getattr(stats, "affected", "?"),
+                     getattr(stats, "wall_s", float("nan")))
+        return stats
+
+    def _apply_with_retry(self, batches) -> Any:
+        cfg = self.cfg
+        for attempt in range(cfg.max_retries + 1):
+            try:
+                for _, b in batches:
+                    self.refresher.apply_updates(b)
+                return self.refresher.refresh(faults=self.faults,
+                                              **self.refresh_kwargs)
+            except Exception as e:
+                # A failed refresh may have spliced part of the ring /
+                # mutated the overlay: restore the pre-churn snapshot
+                # before any retry so the batch is never applied on top
+                # of its own wreckage.
+                self._restore_last_snapshot()
+                if attempt >= cfg.max_retries:
+                    raise
+                self.retries += 1
+                delay = cfg.backoff_s * (2 ** attempt)
+                log.warning("refresh attempt %d failed (%s: %s); restored "
+                            "snapshot, backing off %.3fs", attempt,
+                            type(e).__name__, e, delay)
+                self.sleep(delay)
+
+    def _snapshot(self) -> None:
+        self.pipeline.save(self.ckpt_dir, faults=self.faults,
+                           meta_extra={"applied_seq": int(self.applied_seq),
+                                       "ingest": True})
+
+    def _restore_last_snapshot(self) -> None:
+        from repro.core.incremental import IncrementalRefresh
+        from repro.runtime.trainer import StreamingEmbedPipeline
+
+        self.pipeline = StreamingEmbedPipeline.resume(
+            self.ckpt_dir, self.pipeline.policy, self.pipeline.spec,
+            self.pipeline.cfg)
+        self.refresher = IncrementalRefresh(self.pipeline,
+                                            detect=self.detect)
+
+    # -- crash recovery ----------------------------------------------------
+    @classmethod
+    def recover(cls, root: str, policy, spec, dsgl_cfg, *,
+                detect: str = "traversal",
+                cfg: IngestConfig = IngestConfig(),
+                refresh_kwargs: Optional[Dict[str, Any]] = None,
+                faults: FaultInjector = NULL_INJECTOR,
+                sleep: Callable[[float], None] = time.sleep
+                ) -> "IngestDriver":
+        """Rebuild a driver after a crash: newest valid snapshot + WAL tail.
+
+        Replays every durable-but-unapplied batch through the normal
+        absorption path (apply → refresh → snapshot → truncate), so a
+        recovered driver ends in exactly the state the crashed one was
+        headed for — including the case where the crash hit mid-refresh or
+        mid-snapshot (the torn artifact is skipped by the validating
+        loaders) or mid-append (the torn WAL record is dropped; that batch
+        was never acknowledged).
+        """
+        from repro.runtime.trainer import StreamingEmbedPipeline
+
+        ckpt_dir = os.path.join(root, cfg.snapshot_dir)
+        step, meta = read_meta(ckpt_dir)
+        pipeline = StreamingEmbedPipeline.resume(
+            ckpt_dir, policy, spec, dsgl_cfg, step=step)
+        driver = cls(root, pipeline, detect=detect, cfg=cfg,
+                     refresh_kwargs=refresh_kwargs, faults=faults,
+                     sleep=sleep, _initial_snapshot=False)
+        driver.applied_seq = int(meta.get("applied_seq", 0))
+        tail, _ = driver.wal.replay(after_seq=driver.applied_seq)
+        driver.appended_seq = (tail[-1][0] if tail else driver.applied_seq)
+        with log_context(applied_seq=driver.applied_seq,
+                         wal_tail=len(tail)):
+            log.info("recovering ingest driver from snapshot %d + %d WAL "
+                     "tail batches", step, len(tail))
+        if tail:
+            driver._pending = tail
+            driver.drain()
+        else:
+            # Nothing to replay; still drop any torn tail bytes.
+            driver.wal.truncate_upto(driver.applied_seq)
+        return driver
+
+    def embeddings(self):
+        return self.pipeline.embeddings()

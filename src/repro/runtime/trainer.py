@@ -31,8 +31,9 @@ Eq. 7 ΔD controller). See DESIGN.md §9.
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -41,26 +42,21 @@ import numpy as np
 from repro.ckpt.checkpoint import (
     latest_step, load_checkpoint, restore_into, save_checkpoint,
 )
+from repro.common.logging import get_logger, log_context
 from repro.data.pipeline import BackupShardFetcher, TokenStream
 from repro.models import zoo
 from repro.models.config import ModelConfig
 from repro.optim.optimizers import AdamWConfig, init_opt_state, opt_update
 from repro.optim.schedules import cosine_warmup
 
+# The fault-injection machinery lives in repro.runtime.faults; the names
+# are re-exported here because this module introduced them (existing tests
+# and callers import them from repro.runtime.trainer).
+from repro.runtime.faults import (            # noqa: F401  (re-export)
+    NULL_INJECTOR, FailureInjector, FaultInjector, SimulatedFailure,
+)
 
-class SimulatedFailure(RuntimeError):
-    """Stands in for a node crash / preemption."""
-
-
-@dataclasses.dataclass
-class FailureInjector:
-    fail_at_steps: tuple = ()
-    fired: set = dataclasses.field(default_factory=set)
-
-    def check(self, step: int):
-        if step in self.fail_at_steps and step not in self.fired:
-            self.fired.add(step)
-            raise SimulatedFailure(f"injected failure at step {step}")
+log = get_logger("repro.runtime.trainer")
 
 
 @dataclasses.dataclass
@@ -397,9 +393,23 @@ class StreamingEmbedPipeline:
         self._slot_round = np.full(self.ring.capacity, -1, np.int64)
         self._cursor = 0
         self._rounds_walked = 0
+        # Crash-consistent run cursor (all persisted by ``save``): the run
+        # loop is a state machine over phase ∈ rounds → tail → done with
+        # ``_trained_rounds`` counting fully-trained rounds, so ``resume``
+        # re-enters the exact round the snapshot committed and replays
+        # forward deterministically (round keys are fold_in(key_walk, r),
+        # training keys fold_in(key_train, global_step)).
+        self._rounds_cfg = dict(rounds_cfg)
+        self._trained_rounds = 0
+        self._phase = "rounds"          # rounds | tail | done
+        self._ckpt_seq = 0              # snapshot numbering (monotonic)
+        self._ckpt_root: Optional[str] = None
+        self._ckpt_every = 0
+        self._ckpt_tick = 0
 
     # --- walk side --------------------------------------------------------
-    def _run_round(self, r: int, sources: Optional[np.ndarray] = None):
+    def _run_round(self, r: int, sources: Optional[np.ndarray] = None,
+                   faults: FaultInjector = NULL_INJECTOR):
         """Dispatch all walk batches of round r; returns async
         (chunk_sources, state) pairs.
 
@@ -408,6 +418,11 @@ class StreamingEmbedPipeline:
         which is what lets the incremental refresh re-walk an arbitrary
         subset of sources later and reproduce this round's walks
         bit-for-bit without knowing the original chunk boundaries.
+
+        ``faults`` fires the ``superstep`` injection point at every chunk
+        dispatch — the host boundary where a crash interrupts a round with
+        some walks computed but nothing committed to the ring; recovery
+        simply re-dispatches the whole round under its original key.
         """
         from repro.core.walker import run_walk_batch
 
@@ -417,6 +432,7 @@ class StreamingEmbedPipeline:
         round_key = jax.random.fold_in(self.key_walk, r)
         pairs = []
         for start in range(0, len(sources), self.walker_batch):
+            faults.fire("superstep", f"round {r} chunk @{start}")
             chunk = np.asarray(sources[start:start + self.walker_batch])
             k = (round_key if by_vertex
                  else jax.random.fold_in(round_key, start))
@@ -510,50 +526,87 @@ class StreamingEmbedPipeline:
             done += count
 
     # --- driver -----------------------------------------------------------
-    def run(self) -> Dict[str, Any]:
+    def run(self, *, ckpt_root: Optional[str] = None,
+            ckpt_every_rounds: int = 0,
+            faults: FaultInjector = NULL_INJECTOR) -> Dict[str, Any]:
+        """Run (or CONTINUE, after ``resume``) the walk→train lifecycle.
+
+        The loop is a state machine over persisted cursors (see ``save``):
+        phase ``rounds`` iterates round r = ``_trained_rounds`` with the
+        invariant that rounds 0..r are appended and the ΔD gate holds r
+        decisions; phase ``tail`` re-consumes the frozen ring until the
+        a-priori schedule completes. A snapshot taken at any iteration
+        boundary is therefore a consistent cut, and because every source of
+        randomness is keyed off persisted state (round keys
+        fold_in(key_walk, r), train keys fold_in(key_train, global_step),
+        hotness rng seeded by global_step), a resumed run replays the
+        remaining rounds/chunks bit-identically to the uninterrupted one.
+
+        ``ckpt_root``/``ckpt_every_rounds`` enable periodic snapshots (one
+        every N round/tail iterations plus a final one); ``faults`` is the
+        injection harness (production default never fires).
+        """
         from repro.core.info import relative_entropy_dpq
 
         t0 = time.perf_counter()
-        self._append(self._run_round(0), 0)
-        r = 0
-        while True:
-            ocn_host = np.asarray(self.ring.ocn)          # per-round sync
-            cont = self.controller.update_d(
-                relative_entropy_dpq(self.degrees, ocn_host))
-            if cont and self.overlap:
-                nxt = self._run_round(r + 1)              # walks ∥ training
-            n = len(self.sources)
-            self._train_slots((r * n) % self.ring.capacity, n, ocn_host,
-                              self.steps_per_round)
-            if not self.overlap:
-                jax.block_until_ready(self.phi_in)
-            if not cont:
-                break
-            if not self.overlap:
-                nxt = self._run_round(r + 1)
-                jax.block_until_ready(nxt[-1][1].path)
-            self._append(nxt, r + 1)
-            r += 1
-        self._rounds_walked = self.controller.rounds
+        self._ckpt_root, self._ckpt_every = ckpt_root, ckpt_every_rounds
+        n = len(self.sources)
+        if self._phase == "rounds":
+            if self._rounds_walked == 0:
+                self._append(self._run_round(0, faults=faults), 0)
+                self._rounds_walked = 1
+            while True:
+                r = self._trained_rounds
+                with log_context(round=r):
+                    faults.fire("round", r)
+                    ocn_host = np.asarray(self.ring.ocn)  # per-round sync
+                    cont = self.controller.update_d(
+                        relative_entropy_dpq(self.degrees, ocn_host))
+                    if cont and self.overlap:
+                        nxt = self._run_round(r + 1, faults=faults)  # ∥ train
+                    self._train_slots((r * n) % self.ring.capacity, n,
+                                      ocn_host, self.steps_per_round)
+                    if not self.overlap:
+                        jax.block_until_ready(self.phi_in)
+                    self._trained_rounds = r + 1
+                    if not cont:
+                        break
+                    if not self.overlap:
+                        nxt = self._run_round(r + 1, faults=faults)
+                        jax.block_until_ready(nxt[-1][1].path)
+                    self._append(nxt, r + 1)
+                    self._rounds_walked = r + 2
+                    self._maybe_snapshot(faults)
+            self._phase = "tail"
+            self._maybe_snapshot(faults)
 
-        # Schedule-completion tail: re-consume the filled ring until the
-        # a-priori lr schedule ends (extra decayed passes over the corpus).
-        # ocn is frozen now, so the alias table / frequency order are built
-        # once and reused across every tail iteration.
-        from repro.core.corpus import FrequencyOrder
-        from repro.core.dsgl import build_alias_table
+        if self._phase == "tail":
+            # Schedule-completion tail: re-consume the filled ring until
+            # the a-priori lr schedule ends (extra decayed passes over the
+            # corpus). ocn is frozen now, so the alias table / frequency
+            # order are built once and reused across every tail iteration
+            # (and rebuilt identically on resume — they are pure functions
+            # of the persisted ring.ocn).
+            from repro.core.corpus import FrequencyOrder
+            from repro.core.dsgl import build_alias_table
 
-        ocn_host = np.asarray(self.ring.ocn)
-        filled = self.ring.num_filled
-        tail_table = build_alias_table(ocn_host, self.cfg.neg_power)
-        tail_order = (FrequencyOrder.from_ocn(ocn_host)
-                      if self.num_shards > 1 else None)
-        while self.global_step < self.total_steps:
-            self._train_slots(
-                0, filled, ocn_host,
-                min(self.steps_per_round, self.total_steps - self.global_step),
-                table=tail_table, order=tail_order)
-        jax.block_until_ready(self.phi_in)
+            ocn_host = np.asarray(self.ring.ocn)
+            filled = self.ring.num_filled
+            tail_table = build_alias_table(ocn_host, self.cfg.neg_power)
+            tail_order = (FrequencyOrder.from_ocn(ocn_host)
+                          if self.num_shards > 1 else None)
+            while self.global_step < self.total_steps:
+                faults.fire("tail", self.global_step)
+                self._train_slots(
+                    0, filled, ocn_host,
+                    min(self.steps_per_round,
+                        self.total_steps - self.global_step),
+                    table=tail_table, order=tail_order)
+                self._maybe_snapshot(faults)
+            jax.block_until_ready(self.phi_in)
+            self._phase = "done"
+            if ckpt_root and ckpt_every_rounds:
+                self.save(ckpt_root, faults=faults)     # final snapshot
         wall = time.perf_counter() - t0
 
         phi_in, phi_out = self.embeddings(as_numpy=False)
@@ -569,6 +622,160 @@ class StreamingEmbedPipeline:
             "ring": self.ring,
             "stats": stats,
         }
+
+    # --- crash-consistent snapshots (DESIGN.md §11) ------------------------
+    def _maybe_snapshot(self, faults: FaultInjector) -> None:
+        if not self._ckpt_root or not self._ckpt_every:
+            return
+        self._ckpt_tick += 1
+        if self._ckpt_tick % self._ckpt_every == 0:
+            self.save(self._ckpt_root, faults=faults)
+
+    def _state_tree(self) -> Dict[str, Any]:
+        from repro.core.corpus import ring_export
+
+        tree: Dict[str, Any] = {
+            "phi_in": self.phi_in,
+            "phi_out": self.phi_out,
+            "ring": ring_export(self.ring),
+            "slot_root": self._slot_root,
+            "slot_round": self._slot_round,
+            "key_walk": self.key_walk,
+            "key_train": self.key_train,
+            "stats": dict(self._stats),
+            "graph": {"indptr": self.graph.indptr,
+                      "indices": self.graph.indices},
+        }
+        if self.graph.weights is not None:
+            tree["graph"]["weights"] = self.graph.weights
+        if self.graph.edge_cm is not None:
+            tree["graph"]["edge_cm"] = self.graph.edge_cm
+        if self.assignment is not None:
+            tree["assignment"] = self.assignment
+        return tree
+
+    def save(self, root: str, *, faults: FaultInjector = NULL_INJECTOR,
+             meta_extra: Optional[Dict[str, Any]] = None) -> str:
+        """Checkpoint the COMPLETE walk→train state as one atomic
+        ``repro.ckpt`` tree: phi replicas, the corpus ring (walks, lengths,
+        ocn, cursor — lossless), the host slot→root/slot→round maps, both
+        RNG keys, the ΔD controller history, the run cursors, the MPGP
+        assignment, and the graph's CSR arrays (so recovery needs no
+        external graph handle and restores the exact mutated topology).
+
+        ``faults`` can crash the write two ways: the ``ckpt_write`` point
+        fires before anything is written (the snapshot is simply lost) and
+        ``torn("ckpt")`` commits the directory, then corrupts its manifest
+        before raising — the committed-but-unsynced-data crash the reader
+        fallback in ``ckpt.checkpoint`` exists for.
+        """
+        from repro.graph.delta import graph_version
+
+        faults.fire("ckpt_write", self._ckpt_seq)
+        torn = faults.torn("ckpt")
+        meta = {
+            "kind": "streaming_pipeline",
+            "global_step": int(self.global_step),
+            "cursor": int(self._cursor),
+            "rounds_walked": int(self._rounds_walked),
+            "trained_rounds": int(self._trained_rounds),
+            "phase": self._phase,
+            "controller": self.controller.to_state(),
+            "rounds_cfg": self._rounds_cfg,
+            "total_steps": int(self.total_steps),
+            "num_shards": int(self.num_shards),
+            "walker_batch": int(self.walker_batch),
+            "overlap": bool(self.overlap),
+            "graph_version": int(graph_version(self.graph)),
+        }
+        if meta_extra:
+            meta.update(meta_extra)
+        path = save_checkpoint(root, self._ckpt_seq, self._state_tree(),
+                               meta=meta)
+        if torn:
+            with open(os.path.join(path, "manifest.json"), "w") as f:
+                f.write('{"step": ')          # data blocks never hit disk
+            raise SimulatedFailure(
+                f"torn checkpoint write at snapshot {self._ckpt_seq}")
+        with log_context(round=self._trained_rounds,
+                         graph_version=meta["graph_version"]):
+            log.info("snapshot %d committed at %s (phase=%s step=%d)",
+                     self._ckpt_seq, path, self._phase, self.global_step)
+        self._ckpt_seq += 1
+        return path
+
+    @classmethod
+    def resume(cls, root: str, policy, spec, dsgl_cfg, *,
+               step: Optional[int] = None,
+               rounds_cfg: Optional[Dict] = None,
+               walker_batch: Optional[int] = None,
+               overlap: Optional[bool] = None) -> "StreamingEmbedPipeline":
+        """Rebuild a pipeline from the newest VALID snapshot under ``root``
+        (or an explicit ``step``) and re-enter its exact cursor state.
+
+        The caller re-provides the non-serializable plan objects (policy,
+        spec, dsgl config — the same posture as ``Trainer.try_restore``
+        rebuilding from the model config); everything mutable, including
+        the graph itself, comes out of the checkpoint. Call ``run()`` on
+        the result to continue — the rounds/chunks past the cursor
+        re-dispatch under their original round keys, so the finished
+        embedding is bit-identical to the uninterrupted run's.
+        """
+        from repro.core.corpus import ring_import
+        from repro.core.termination import WalkCountController
+        from repro.graph.csr import CSRGraph
+
+        step_loaded, arrays, meta = load_checkpoint(root, step)
+        if meta.get("kind") != "streaming_pipeline":
+            raise ValueError(
+                f"checkpoint at {root} step {step_loaded} is not a "
+                "streaming-pipeline snapshot")
+        graph = CSRGraph(
+            indptr=jnp.asarray(arrays["graph/indptr"], jnp.int32),
+            indices=jnp.asarray(arrays["graph/indices"], jnp.int32),
+            weights=(jnp.asarray(arrays["graph/weights"], jnp.float32)
+                     if "graph/weights" in arrays else None),
+            edge_cm=(jnp.asarray(arrays["graph/edge_cm"], jnp.int32)
+                     if "graph/edge_cm" in arrays else None),
+        )
+        pipe = cls(
+            graph, policy, spec,
+            rounds_cfg if rounds_cfg is not None else meta["rounds_cfg"],
+            dsgl_cfg,
+            assignment=arrays.get("assignment"),
+            num_shards=int(meta["num_shards"]),
+            walker_batch=(walker_batch if walker_batch is not None
+                          else int(meta["walker_batch"])),
+            overlap=(overlap if overlap is not None
+                     else bool(meta["overlap"])))
+        ring = ring_import({k: arrays[f"ring/{k}"] for k in
+                            ("walks", "lengths", "ocn", "cursor", "total")})
+        if ring.capacity != pipe.ring.capacity:
+            raise ValueError(
+                f"snapshot ring capacity {ring.capacity} does not match "
+                f"the rebuilt pipeline's {pipe.ring.capacity}; resume with "
+                "the original rounds_cfg/spec")
+        pipe.ring = ring
+        pipe.phi_in = jnp.asarray(arrays["phi_in"], jnp.float32)
+        pipe.phi_out = jnp.asarray(arrays["phi_out"], jnp.float32)
+        pipe.key_walk = jnp.asarray(arrays["key_walk"])
+        pipe.key_train = jnp.asarray(arrays["key_train"])
+        pipe._stats = {k: jnp.asarray(arrays[f"stats/{k}"])
+                       for k in pipe._stats}
+        pipe._slot_root = np.asarray(arrays["slot_root"], np.int64)
+        pipe._slot_round = np.asarray(arrays["slot_round"], np.int64)
+        pipe.controller = WalkCountController.from_state(meta["controller"])
+        pipe.global_step = int(meta["global_step"])
+        pipe.total_steps = int(meta["total_steps"])
+        pipe._cursor = int(meta["cursor"])
+        pipe._rounds_walked = int(meta["rounds_walked"])
+        pipe._trained_rounds = int(meta["trained_rounds"])
+        pipe._phase = meta["phase"]
+        pipe._ckpt_seq = step_loaded + 1
+        log.info("resumed pipeline from %s snapshot %d "
+                 "(phase=%s round=%d step=%d)", root, step_loaded,
+                 pipe._phase, pipe._trained_rounds, pipe.global_step)
+        return pipe
 
     def corpus(self):
         """Materialize the ring as a host ``Corpus`` (API boundary only)."""
@@ -605,11 +812,89 @@ class StreamingEmbedPipeline:
         walks = np.asarray(self.ring.walks)
         return walks, self._slot_root, self._slot_root >= 0
 
+    def _rewalk_resident(self, root_mask: np.ndarray,
+                         faults: FaultInjector = NULL_INJECTOR
+                         ) -> Tuple[int, int]:
+        """Re-walk every resident walk rooted in ``root_mask`` under its
+        ORIGINAL round key and splice it into the slot its predecessor
+        occupies (``ring_replace`` keeps ocn exact: − old tokens + new).
+
+        Shared by the incremental refresh (stale roots after churn) and
+        shard-loss recovery (resident roots of a dead shard) — in both
+        cases vertex-keyed RNG makes the subset walks bit-identical to a
+        full-batch round. Fires ``refresh_splice`` once per resident round
+        BEFORE that round's splices land — an injected crash therefore dies
+        with earlier rounds spliced and later rounds stale, the exact
+        half-updated-ring hazard; recovery (resume from the pre-refresh
+        snapshot, replay the churn, redo the refresh) must never expose
+        that intermediate state. Returns (rewalk_walks, rounds_resident).
+        """
+        from repro.core.corpus import ring_replace_donated
+
+        n = len(self.sources)
+        slot_ids = np.arange(self.ring.capacity)
+        aff_slot = (self._slot_root >= 0) & np.asarray(root_mask)[
+            np.maximum(self._slot_root, 0)]
+        rounds_resident = np.unique(self._slot_round[aff_slot])
+        rewalk_walks = 0
+        for r in rounds_resident:
+            faults.fire("refresh_splice", int(r))
+            sel = aff_slot & (self._slot_round == r)
+            roots_r = self._slot_root[sel]
+            slot_of = np.full(n, -1, np.int64)
+            slot_of[roots_r] = slot_ids[sel]
+            for chunk, st in self._run_round(int(r), sources=roots_r,
+                                             faults=faults):
+                slots = slot_of[chunk]
+                self.ring = ring_replace_donated(
+                    self.ring, jnp.asarray(slots, jnp.int32), st.path,
+                    st.info.L.astype(jnp.int32))
+                for k in self._stats:
+                    self._stats[k] = self._stats[k] + getattr(st, k)
+                rewalk_walks += len(chunk)
+        return rewalk_walks, int(len(rounds_resident))
+
+    def recover_shard_loss(self, shard_id: int, *,
+                           faults: FaultInjector = NULL_INJECTOR
+                           ) -> Dict[str, Any]:
+        """Degraded-mode recovery for one lost walk shard: instead of
+        restarting every in-flight round globally, re-walk ONLY the lost
+        shard's resident roots through the subset-re-walk path under their
+        original round keys. Vertex-keyed RNG makes the recovered walks
+        bit-identical to what the lost shard had produced, so the ring —
+        and everything downstream of it — is exactly restored, not
+        approximated. Requires ``WalkSpec.rng_mode == 'vertex'``."""
+        if self.spec.rng_mode != "vertex":
+            raise ValueError(
+                "shard-loss recovery requires WalkSpec.rng_mode='vertex'")
+        n = len(self.sources)
+        if self.assignment is None:
+            if shard_id != 0:
+                raise ValueError(
+                    f"pipeline has no shard assignment (shard {shard_id})")
+            mask = np.ones(n, bool)       # single shard: everything resident
+        else:
+            mask = np.asarray(self.assignment) == shard_id
+        t0 = time.perf_counter()
+        with log_context(shard=shard_id):
+            rewalk, rounds = self._rewalk_resident(mask, faults)
+            jax.block_until_ready(self.ring.walks)
+            log.info("shard-loss recovery re-walked %d walks over %d "
+                     "resident rounds", rewalk, rounds)
+        return {
+            "shard": int(shard_id),
+            "lost_roots": int(mask.sum()),
+            "rewalk_walks": int(rewalk),
+            "rounds_resident": int(rounds),
+            "wall_s": float(time.perf_counter() - t0),
+        }
+
     def refresh(self, new_graph, affected_mask: np.ndarray, *,
                 fine_tune_steps: Optional[int] = None,
                 fine_tune_frac: float = 0.5,
                 fine_tune_lr_scale: float = 0.3,
-                max_extra_rounds: int = 2) -> Dict[str, Any]:
+                max_extra_rounds: int = 2,
+                faults: FaultInjector = NULL_INJECTOR) -> Dict[str, Any]:
         """Absorb a mutated graph: re-walk ONLY the affected roots through
         the sharded engine, splice the delta corpus into the ring, continue
         the seeded ΔD gate, and fine-tune DSGL in place.
@@ -628,9 +913,9 @@ class StreamingEmbedPipeline:
         original schedule at ``fine_tune_lr_scale``·lr), with the negative
         alias table rebuilt from the exact refreshed occurrence counts.
         """
-        from repro.core.corpus import ring_replace_donated
         from repro.core.info import relative_entropy_dpq
         from repro.core.termination import WalkCountController
+        from repro.graph.delta import graph_version
 
         if self.spec.rng_mode != "vertex":
             raise ValueError("refresh requires WalkSpec.rng_mode='vertex'")
@@ -643,15 +928,12 @@ class StreamingEmbedPipeline:
                 and new_graph.edge_cm is None):
             new_graph = new_graph.with_edge_cm()
         t0 = time.perf_counter()
+        faults.fire("refresh", graph_version(new_graph))
         self.graph = new_graph
         self.degrees = np.asarray(new_graph.degrees(), dtype=np.int64)
 
         affected = np.nonzero(np.asarray(affected_mask))[0].astype(np.int32)
         cap = self.ring.capacity
-        slot_ids = np.arange(cap)
-        aff_slot = (self._slot_root >= 0) & np.asarray(affected_mask)[
-            np.maximum(self._slot_root, 0)]
-        rounds_resident = np.unique(self._slot_round[aff_slot])
         sup0 = int(jnp.sum(self._stats["supersteps"]))
 
         # --- re-walk every resident walk of an affected root; splice ------
@@ -661,21 +943,7 @@ class StreamingEmbedPipeline:
         # mutated graph; a root's slot within a round comes from the
         # slot_root map (a full round holds every root once, a partial
         # extra round from an earlier refresh only its subset).
-        rewalk_walks = 0
-        for r in rounds_resident:
-            sel = aff_slot & (self._slot_round == r)
-            roots_r = self._slot_root[sel]
-            slot_of = np.full(n, -1, np.int64)
-            slot_of[roots_r] = slot_ids[sel]
-            for chunk, st in self._run_round(int(r), sources=roots_r):
-                slots = slot_of[chunk]
-                self.ring = ring_replace_donated(
-                    self.ring, jnp.asarray(slots, jnp.int32), st.path,
-                    st.info.L.astype(jnp.int32))
-                for k in self._stats:
-                    self._stats[k] = self._stats[k] + getattr(st, k)
-                rewalk_walks += len(chunk)
-        retained = int(len(rounds_resident))
+        rewalk_walks, retained = self._rewalk_resident(affected_mask, faults)
 
         # --- seeded ΔD gate: append extra subset rounds if D moved --------
         hist = list(self.controller.history)

@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 
 from repro.ckpt.checkpoint import (
-    latest_step, load_checkpoint, restore_into, save_checkpoint,
+    latest_step, load_checkpoint, read_meta, restore_into, save_checkpoint,
 )
 
 
@@ -73,6 +73,64 @@ def test_trainer_restart_is_bit_exact(tmp_path):
     for a, b in zip(jax.tree_util.tree_leaves(out1["state"]["params"]),
                     jax.tree_util.tree_leaves(out2["state"]["params"])):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_stale_tmp_swept_on_next_save(tmp_path):
+    """A crashed save's ``step_*.tmp`` debris is removed by the next save
+    and never shadows a committed step."""
+    tree = _tree(jax.random.PRNGKey(3))
+    stale = tmp_path / "step_00000009.tmp"
+    stale.mkdir()
+    (stale / "leaf_00000.npy").write_bytes(b"partial garbage")
+    save_checkpoint(str(tmp_path), 1, tree)
+    entries = os.listdir(tmp_path)
+    assert not any(e.endswith(".tmp") for e in entries)
+    assert latest_step(str(tmp_path)) == 1
+
+
+def test_torn_manifest_falls_back_to_valid_step(tmp_path):
+    """A newest step with a corrupt manifest is invisible: ``latest_step``
+    and ``load_checkpoint`` fall back to the newest VALID one."""
+    tree = _tree(jax.random.PRNGKey(4))
+    save_checkpoint(str(tmp_path), 1, tree, meta={"mark": "good"})
+    save_checkpoint(str(tmp_path), 2, tree, meta={"mark": "torn"})
+    with open(tmp_path / "step_00000002" / "manifest.json", "w") as f:
+        f.write('{"step": ')                    # torn mid-write
+    assert latest_step(str(tmp_path)) == 1
+    step, _, meta = load_checkpoint(str(tmp_path))
+    assert step == 1 and meta["mark"] == "good"
+    # An EXPLICITLY requested torn step still raises — silently
+    # substituting other state would be worse than failing.
+    with pytest.raises((OSError, ValueError)):
+        load_checkpoint(str(tmp_path), step=2)
+
+
+def test_missing_leaf_invalidates_step(tmp_path):
+    tree = _tree(jax.random.PRNGKey(5))
+    save_checkpoint(str(tmp_path), 1, tree)
+    save_checkpoint(str(tmp_path), 2, tree)
+    os.remove(tmp_path / "step_00000002" / "leaf_00000.npy")
+    assert latest_step(str(tmp_path)) == 1
+    step, _, _ = load_checkpoint(str(tmp_path))
+    assert step == 1
+
+
+def test_all_steps_torn_raises(tmp_path):
+    tree = _tree(jax.random.PRNGKey(6))
+    save_checkpoint(str(tmp_path), 1, tree)
+    os.remove(tmp_path / "step_00000001" / "manifest.json")
+    assert latest_step(str(tmp_path)) is None
+    with pytest.raises(FileNotFoundError):
+        load_checkpoint(str(tmp_path))
+
+
+def test_read_meta_without_arrays(tmp_path):
+    tree = _tree(jax.random.PRNGKey(7))
+    save_checkpoint(str(tmp_path), 4, tree, meta={"applied_seq": 17})
+    step, meta = read_meta(str(tmp_path))
+    assert step == 4 and meta["applied_seq"] == 17
+    with pytest.raises(FileNotFoundError):
+        read_meta(str(tmp_path / "void"))
 
 
 def test_elastic_reshard_roundtrip(tmp_path):

@@ -1,0 +1,540 @@
+"""Fault-tolerance tests for the walk→train lifecycle.
+
+The recovery contract under test: every host-boundary crash — mid-round,
+mid-superstep, mid-tail, mid-checkpoint, mid-refresh-splice, mid-WAL-append
+— is survivable from durable state alone, and the recovered run's final
+embeddings are BIT-IDENTICAL to an uninterrupted run (vertex-keyed walk
+RNG + step-keyed train RNG + persisted cursors make replay deterministic,
+not merely statistically equivalent).
+"""
+
+import dataclasses
+import logging
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.api import EmbedConfig, make_walk_plan
+from repro.core.dsgl import DSGLConfig
+from repro.core.incremental import IncrementalRefresh
+from repro.core.termination import WalkCountController
+from repro.graph.delta import EdgeBatch
+from repro.graph.generators import churn_batch, rmat_graph
+from repro.runtime.faults import (FaultInjector, NullInjector,
+                                  SimulatedFailure, run_with_restarts)
+from repro.runtime.ingest import IngestConfig, IngestDriver, WriteAheadLog
+from repro.runtime.trainer import StreamingEmbedPipeline
+
+
+def _plan(seed=3, dim=16):
+    cfg = dataclasses.replace(EmbedConfig(dim=dim, seed=seed),
+                              rng_mode="vertex")
+    policy, spec, rounds = make_walk_plan(cfg)
+    return policy, spec, rounds, DSGLConfig(dim=dim, seed=seed)
+
+
+def _pipeline(graph, **kw):
+    policy, spec, rounds, dsgl = _plan()
+    return StreamingEmbedPipeline(graph, policy, spec, rounds, dsgl, **kw)
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return rmat_graph(128, 7, seed=7)
+
+
+@pytest.fixture(scope="module")
+def reference(graph):
+    """Uninterrupted run: the bit-identity target for every crash test."""
+    p = _pipeline(graph)
+    res = p.run()
+    phi_in, phi_out = p.embeddings()
+    return {"pipe": p, "res": res, "phi_in": phi_in, "phi_out": phi_out}
+
+
+# ---------------------------------------------------------------------------
+# Snapshot round-trip
+# ---------------------------------------------------------------------------
+
+
+class TestSnapshotRoundTrip:
+    def test_save_resume_bit_identical(self, graph, reference, tmp_path):
+        p = reference["pipe"]
+        root = str(tmp_path / "ckpt")
+        p.save(root)
+        policy, spec, _, dsgl = _plan()
+        q = StreamingEmbedPipeline.resume(root, policy, spec, dsgl)
+
+        a_in, a_out = p.embeddings()
+        b_in, b_out = q.embeddings()
+        np.testing.assert_array_equal(a_in, b_in)
+        np.testing.assert_array_equal(a_out, b_out)
+        assert jnp.array_equal(p.ring.walks, q.ring.walks)
+        assert jnp.array_equal(p.ring.ocn, q.ring.ocn)
+        assert int(p.ring.cursor) == int(q.ring.cursor)
+        assert int(p.ring.total) == int(q.ring.total)
+        np.testing.assert_array_equal(p._slot_root, q._slot_root)
+        np.testing.assert_array_equal(p._slot_round, q._slot_round)
+        np.testing.assert_array_equal(np.asarray(p.key_walk),
+                                      np.asarray(q.key_walk))
+        np.testing.assert_array_equal(np.asarray(p.key_train),
+                                      np.asarray(q.key_train))
+        assert p.controller.history == q.controller.history
+        assert (p._phase, p._trained_rounds, p._rounds_walked,
+                p.global_step) == (q._phase, q._trained_rounds,
+                                   q._rounds_walked, q.global_step)
+
+    def test_resume_empty_root_raises(self, graph, tmp_path):
+        policy, spec, _, dsgl = _plan()
+        with pytest.raises(FileNotFoundError):
+            StreamingEmbedPipeline.resume(str(tmp_path / "nothing"),
+                                          policy, spec, dsgl)
+
+    def test_controller_state_round_trip(self):
+        c = WalkCountController(delta=1e-3, min_rounds=2, max_rounds=20,
+                                window=3)
+        rng = np.random.default_rng(0)
+        d = 1.0
+        for _ in range(6):
+            d *= 0.7 + 0.02 * rng.standard_normal()
+            c.update_d(d)
+        c2 = WalkCountController.from_state(c.to_state())
+        assert c2.history == c.history
+        assert c2._smooth == c._smooth
+        # Identical future decisions from the restored gate.
+        for nxt in (d * 0.9, d * 0.9001, d * 0.89999):
+            ca = WalkCountController.from_state(c.to_state())
+            cb = WalkCountController.from_state(c.to_state())
+            assert ca.update_d(nxt) == cb.update_d(nxt)
+
+
+# ---------------------------------------------------------------------------
+# Crash-at-every-injection-point sweep
+# ---------------------------------------------------------------------------
+
+
+def _run_with_crashes(graph, root, plan, torn_plan=None, max_restarts=8):
+    """Supervise a pipeline run under an injection plan: crash → resume
+    from the newest durable snapshot → continue. Returns (pipe, injector,
+    restarts)."""
+    policy, spec, rounds, dsgl = _plan()
+    faults = FaultInjector(plan, torn_plan or {})
+    state = {"p": StreamingEmbedPipeline(graph, policy, spec, rounds, dsgl)}
+
+    def attempt(i):
+        return state["p"].run(ckpt_root=root, ckpt_every_rounds=1,
+                              faults=faults)
+
+    def recover(i):
+        try:
+            state["p"] = StreamingEmbedPipeline.resume(root, policy, spec,
+                                                       dsgl)
+        except FileNotFoundError:
+            # Crashed before the first snapshot: start over from zero.
+            state["p"] = StreamingEmbedPipeline(graph, policy, spec, rounds,
+                                                dsgl)
+
+    _, restarts = run_with_restarts(attempt, recover=recover,
+                                    max_restarts=max_restarts)
+    return state["p"], faults, restarts
+
+
+class TestCrashReplay:
+    @pytest.mark.parametrize("point,occurrence", [
+        ("round", 2),        # crash at a round boundary
+        ("superstep", 5),    # crash mid-round, some chunks dispatched
+        ("tail", 1),         # crash between schedule-tail iterations
+        ("ckpt_write", 3),   # crash before a snapshot commits
+    ])
+    def test_crash_point_bit_identical(self, graph, reference, tmp_path,
+                                       point, occurrence):
+        p, faults, restarts = _run_with_crashes(
+            graph, str(tmp_path / "ckpt"), {point: [occurrence]})
+        assert restarts == 1 and faults.fired == [(point, occurrence)]
+        phi_in, phi_out = p.embeddings()
+        np.testing.assert_array_equal(reference["phi_in"], phi_in)
+        np.testing.assert_array_equal(reference["phi_out"], phi_out)
+        assert jnp.array_equal(reference["pipe"].ring.walks, p.ring.walks)
+
+    def test_multi_crash_run(self, graph, reference, tmp_path):
+        p, faults, restarts = _run_with_crashes(
+            graph, str(tmp_path / "ckpt"),
+            {"round": [3], "superstep": [9], "tail": [2]})
+        assert restarts == 3 and faults.pending == 0
+        phi_in, _ = p.embeddings()
+        np.testing.assert_array_equal(reference["phi_in"], phi_in)
+
+    def test_torn_checkpoint_falls_back(self, graph, reference, tmp_path):
+        # The 3rd snapshot write crashes mid-commit, leaving a torn
+        # (corrupt-manifest) step directory behind; the validating loader
+        # must treat it as invisible, fall back one snapshot, and the run
+        # must still converge bit-identically.
+        root = str(tmp_path / "ckpt")
+        p, faults, restarts = _run_with_crashes(
+            graph, root, {}, torn_plan={"ckpt": [2]})
+        assert restarts == 1
+        phi_in, _ = p.embeddings()
+        np.testing.assert_array_equal(reference["phi_in"], phi_in)
+
+    def test_crash_without_snapshot_exhausts_supervisor(self, graph,
+                                                        tmp_path):
+        # A deterministic crash with no progress possible must surface,
+        # not loop forever: plan more failures than max_restarts.
+        with pytest.raises(SimulatedFailure):
+            _run_with_crashes(graph, str(tmp_path / "ckpt"),
+                              {"round": list(range(20))}, max_restarts=3)
+
+    def test_injector_fires_once_and_counts(self):
+        f = FaultInjector({"round": [1]})
+        f.fire("round")                       # occurrence 0: no fire
+        with pytest.raises(SimulatedFailure):
+            f.fire("round")                   # occurrence 1: fires
+        f.fire("round")                       # occurrence 1 consumed
+        assert f.counts["round"] == 3
+        assert f.fired == [("round", 1)]
+        assert f.pending == 0
+        null = NullInjector()
+        null.fire("round"); null.fire("round")
+        assert not null.torn("ckpt")
+
+
+# ---------------------------------------------------------------------------
+# Shard-loss degraded recovery
+# ---------------------------------------------------------------------------
+
+
+class TestShardLoss:
+    def test_lost_shard_rewalk_restores_ring(self, graph):
+        from repro.core.corpus import ring_replace
+        from repro.core.mpgp import mpgp_partition
+
+        part = mpgp_partition(graph, 2).assignment
+        p = _pipeline(graph, assignment=part, num_shards=2)
+        p.run()
+        walks_ref = np.asarray(p.ring.walks).copy()
+        ocn_ref = np.asarray(p.ring.ocn).copy()
+        phi_ref, _ = p.embeddings()
+
+        # Simulate losing shard 1: zap every resident slot rooted in it
+        # (ring_replace keeps ocn consistent with the corrupted corpus, the
+        # state a surviving host actually observes after a peer dies).
+        lost = np.asarray(part) == 1
+        bad_slots = np.nonzero(
+            (p._slot_root >= 0) & lost[np.maximum(p._slot_root, 0)])[0]
+        assert len(bad_slots) > 0
+        garbage = jnp.zeros((len(bad_slots), p.ring.walks.shape[1]),
+                            jnp.int32)
+        p.ring = ring_replace(p.ring, jnp.asarray(bad_slots, jnp.int32),
+                              garbage, jnp.ones(len(bad_slots), jnp.int32))
+        assert not np.array_equal(np.asarray(p.ring.walks), walks_ref)
+
+        info = p.recover_shard_loss(1)
+        assert info["lost_roots"] == int(lost.sum())
+        assert info["rewalk_walks"] >= len(bad_slots)
+        # Vertex-keyed replay under original round keys: EXACT restoration.
+        np.testing.assert_array_equal(np.asarray(p.ring.walks), walks_ref)
+        np.testing.assert_array_equal(np.asarray(p.ring.ocn), ocn_ref)
+
+        # Degraded-mode quality: embeddings trained from the recovered
+        # corpus score like the undamaged run (bit-equal here, but the
+        # AUC comparison is the contract a lossy recovery would have to
+        # meet too).
+        from benchmarks.common import link_prediction_auc
+        phi_now, _ = p.embeddings()
+        auc_ref = link_prediction_auc(graph, phi_ref,
+                                      np.random.default_rng(7))
+        auc_now = link_prediction_auc(graph, phi_now,
+                                      np.random.default_rng(7))
+        assert abs(auc_now - auc_ref) <= 0.02, (auc_now, auc_ref)
+
+    def test_shard_loss_needs_vertex_rng(self, graph):
+        cfg = EmbedConfig(dim=16, seed=3)      # default lane-keyed RNG
+        policy, spec, rounds = make_walk_plan(cfg)
+        p = StreamingEmbedPipeline(graph, policy, spec, rounds,
+                                   DSGLConfig(dim=16, seed=3))
+        with pytest.raises(ValueError, match="vertex"):
+            p.recover_shard_loss(0)
+
+    def test_unknown_shard_rejected(self, graph, reference):
+        with pytest.raises(ValueError, match="shard"):
+            reference["pipe"].recover_shard_loss(3)
+
+
+# ---------------------------------------------------------------------------
+# Refresh interrupted mid-splice (the half-updated-ring hazard)
+# ---------------------------------------------------------------------------
+
+
+class TestRefreshCrash:
+    def test_splice_crash_recovery_bit_identical(self, graph, tmp_path):
+        policy, spec, _, dsgl = _plan()
+        p = _pipeline(graph)
+        p.run()
+        root = str(tmp_path / "pre_refresh")
+        p.save(root)
+        batch = churn_batch(graph, 0.05, seed=11)
+
+        # Reference: the same snapshot refreshed without interruption.
+        q = StreamingEmbedPipeline.resume(root, policy, spec, dsgl)
+        IncrementalRefresh(q).apply_updates(batch).refresh()
+        phi_ref, _ = q.embeddings()
+
+        # Crash after the first resident round's splices landed: the ring
+        # is now half old, half new — the state that must never survive.
+        faults = FaultInjector({"refresh_splice": [1]})
+        with pytest.raises(SimulatedFailure):
+            IncrementalRefresh(p).apply_updates(batch).refresh(faults=faults)
+        # Recovery protocol: restore the pre-refresh snapshot, re-apply
+        # the churn, redo the refresh. Bit-identical to the uninterrupted
+        # refresh — the torn intermediate state is unobservable.
+        p2 = StreamingEmbedPipeline.resume(root, policy, spec, dsgl)
+        IncrementalRefresh(p2).apply_updates(batch).refresh()
+        phi_in, _ = p2.embeddings()
+        np.testing.assert_array_equal(phi_ref, phi_in)
+        assert jnp.array_equal(q.ring.walks, p2.ring.walks)
+        assert jnp.array_equal(q.ring.ocn, p2.ring.ocn)
+
+
+# ---------------------------------------------------------------------------
+# WAL + ingest driver
+# ---------------------------------------------------------------------------
+
+
+def _batches(n, seed=5, num_nodes=128, k=6):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        ins = rng.integers(0, num_nodes, (k, 2))
+        out.append(EdgeBatch(insert=ins[ins[:, 0] != ins[:, 1]]))
+    return out
+
+
+class TestWriteAheadLog:
+    def test_append_replay_truncate(self, tmp_path):
+        wal = WriteAheadLog(str(tmp_path / "wal.log"))
+        batches = _batches(3)
+        for i, b in enumerate(batches, start=1):
+            wal.append(i, b)
+        recs, _ = wal.replay()
+        assert [s for s, _ in recs] == [1, 2, 3]
+        for (_, got), want in zip(recs, batches):
+            np.testing.assert_array_equal(got.insert, want.insert)
+            np.testing.assert_array_equal(got.delete, want.delete)
+        recs, _ = wal.replay(after_seq=2)
+        assert [s for s, _ in recs] == [3]
+        wal.truncate_upto(2)
+        recs, _ = wal.replay()
+        assert [s for s, _ in recs] == [3]
+        wal.truncate_upto(3)
+        assert wal.replay() == ([], 0)
+
+    def test_torn_tail_detected(self, tmp_path):
+        wal = WriteAheadLog(str(tmp_path / "wal.log"))
+        b1, b2 = _batches(2)
+        wal.append(1, b1)
+        # Crash mid-append: half of record 2 reaches disk.
+        faults = FaultInjector(torn_plan={"wal": [0]})
+        with pytest.raises(SimulatedFailure):
+            wal.append(2, b2, faults=faults)
+        recs, _ = wal.replay()
+        assert [s for s, _ in recs] == [1]      # torn record 2 discarded
+        # Truncation rewrites only the valid prefix; the tail is gone.
+        wal.truncate_upto(0)
+        recs, _ = wal.replay()
+        assert [s for s, _ in recs] == [1]
+
+    def test_garbage_file_is_all_torn(self, tmp_path):
+        path = str(tmp_path / "wal.log")
+        with open(path, "wb") as f:
+            f.write(b"not a wal record at all")
+        assert WriteAheadLog(path).replay() == ([], 0)
+
+
+class TestIngestDriver:
+    @pytest.fixture(scope="class")
+    def trained(self, graph):
+        p = _pipeline(graph)
+        p.run()
+        root_store = {}
+        return p, root_store
+
+    def _driver(self, graph, tmp_path, name, **cfg_kw):
+        p = _pipeline(graph)
+        p.run()
+        cfg = IngestConfig(**cfg_kw)
+        return IngestDriver(str(tmp_path / name), p, cfg=cfg)
+
+    def test_submit_drain_staleness(self, graph, tmp_path):
+        drv = self._driver(graph, tmp_path, "a", apply_every=2)
+        b1, b2, b3 = _batches(3, seed=5)
+        drv.submit(b1)
+        st = drv.staleness()
+        assert st["pending_batches"] == 1 and st["applied_seq"] == 0
+        drv.submit(b2)                       # cadence reached → drain
+        st = drv.staleness()
+        assert st["pending_batches"] == 0
+        assert st["applied_seq"] == st["appended_seq"] == 2
+        assert st["drains"] == 1
+        # WAL truncated back to empty after the drain.
+        assert drv.wal.replay() == ([], 0)
+        drv.submit(b3)
+        assert drv.staleness()["pending_batches"] == 1
+
+    def test_staleness_backpressure(self, graph, tmp_path):
+        drv = self._driver(graph, tmp_path, "b", apply_every=100,
+                           max_pending_edges=4)
+        (b,) = _batches(1, seed=6, k=8)
+        drv.submit(b)                        # > 4 pending edges → forced
+        assert drv.staleness()["pending_batches"] == 0
+
+    def test_crash_recovery_equals_uninterrupted(self, graph, tmp_path):
+        root = str(tmp_path / "c")
+        drv = self._driver(graph, tmp_path, "c", apply_every=10)
+        b1, b2 = _batches(2, seed=7)
+        drv.submit(b1)
+        drv.submit(b2)                       # durable in WAL, not applied
+        assert drv.staleness()["pending_batches"] == 2
+
+        # Process dies here. Recover purely from disk: snapshot + WAL tail.
+        rec = IngestDriver.recover(root, drv.pipeline.policy,
+                                   drv.pipeline.spec, drv.pipeline.cfg)
+        assert rec.staleness()["applied_seq"] == 2
+        assert rec.staleness()["pending_batches"] == 0
+        # ... and matches the never-crashed driver draining the same WAL.
+        drv.drain()
+        a_in, _ = drv.embeddings()
+        b_in, _ = rec.embeddings()
+        np.testing.assert_array_equal(a_in, b_in)
+
+    def test_torn_wal_append_not_acknowledged(self, graph, tmp_path):
+        root = str(tmp_path / "d")
+        faults = FaultInjector(torn_plan={"wal": [0]})
+        p = _pipeline(graph)
+        p.run()
+        drv = IngestDriver(root, p, cfg=IngestConfig(apply_every=10),
+                           faults=faults)
+        (b,) = _batches(1, seed=8)
+        with pytest.raises(SimulatedFailure):
+            drv.submit(b)                    # crash mid-append
+        # Recovery sees no acknowledged batch: the torn record is dropped.
+        rec = IngestDriver.recover(root, p.policy, p.spec, p.cfg)
+        st = rec.staleness()
+        assert st["appended_seq"] == st["applied_seq"] == 0
+        assert rec.wal.replay() == ([], 0)
+
+    def test_refresh_failure_restores_then_retries(self, graph, tmp_path):
+        root = str(tmp_path / "e")
+        p = _pipeline(graph)
+        p.run()
+        delays = []
+        # First refresh attempt dies at entry (churn staged, nothing
+        # spliced); the driver must restore the snapshot and retry.
+        faults = FaultInjector({"refresh": [0]})
+        drv = IngestDriver(root, p, cfg=IngestConfig(
+            apply_every=1, max_retries=2, backoff_s=0.01),
+            faults=faults, sleep=delays.append)
+        (b,) = _batches(1, seed=9)
+        drv.submit(b)
+        st = drv.staleness()
+        assert st["applied_seq"] == 1 and st["retries"] == 1
+        assert delays == [0.01]              # exponential backoff engaged
+
+        # Same churn, no faults: the retried result is bit-identical.
+        q = _pipeline(graph)
+        q.run()
+        ref = IngestDriver(str(tmp_path / "e_ref"), q,
+                           cfg=IngestConfig(apply_every=1))
+        ref.submit(b)
+        a_in, _ = drv.embeddings()
+        b_in, _ = ref.embeddings()
+        np.testing.assert_array_equal(a_in, b_in)
+
+    def test_refresh_failure_exhausts_retries(self, graph, tmp_path):
+        p = _pipeline(graph)
+        p.run()
+        faults = FaultInjector({"refresh": [0, 1]})
+        drv = IngestDriver(str(tmp_path / "f"), p, cfg=IngestConfig(
+            apply_every=1, max_retries=1, backoff_s=0.0),
+            faults=faults, sleep=lambda s: None)
+        (b,) = _batches(1, seed=10)
+        with pytest.raises(SimulatedFailure):
+            drv.submit(b)
+        # The batch stays durable in the WAL: recovery can still absorb it
+        # once the fault condition clears.
+        rec = IngestDriver.recover(str(tmp_path / "f"), p.policy, p.spec,
+                                   p.cfg)
+        assert rec.staleness()["applied_seq"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Structured logging
+# ---------------------------------------------------------------------------
+
+
+class TestLogging:
+    def test_env_level_parsing(self, monkeypatch):
+        from repro.common import logging as rlog
+        monkeypatch.setenv("REPRO_LOG_LEVEL", "DEBUG")
+        assert rlog._env_level() == logging.DEBUG
+        monkeypatch.setenv("REPRO_LOG_LEVEL", "41")
+        assert rlog._env_level() == 41
+        monkeypatch.setenv("REPRO_LOG_LEVEL", "bogus")
+        assert rlog._env_level() == logging.INFO
+        monkeypatch.delenv("REPRO_LOG_LEVEL")
+        assert rlog._env_level() == logging.INFO
+
+    def test_env_level_applied_at_configure(self, monkeypatch):
+        from repro.common import logging as rlog
+        monkeypatch.setenv("REPRO_LOG_LEVEL", "WARNING")
+        root = logging.getLogger("repro")
+        saved = (rlog._CONFIGURED, root.handlers[:], root.level)
+        root.handlers, rlog._CONFIGURED = [], False
+        try:
+            rlog.get_logger("repro.test.envlvl")
+            assert root.level == logging.WARNING
+        finally:
+            rlog._CONFIGURED, root.handlers = saved[0], saved[1]
+            root.setLevel(saved[2])
+
+    def _captured(self):
+        """(handler, buffer, old_stream) of the configured repro handler."""
+        import io
+        from repro.common.logging import get_logger
+        get_logger()
+        h = logging.getLogger("repro").handlers[0]
+        buf = io.StringIO()
+        return h, buf, h.setStream(buf)
+
+    def test_log_context_fields(self):
+        from repro.common.logging import get_logger, log_context
+        lg = get_logger("repro.test.ctx")
+        h, buf, old = self._captured()
+        try:
+            with log_context(round=4, shard=1):
+                lg.info("inside")
+            lg.info("outside")
+        finally:
+            h.setStream(old)
+        lines = buf.getvalue().splitlines()
+        inside = [ln for ln in lines if "inside" in ln]
+        outside = [ln for ln in lines if "outside" in ln]
+        assert inside and "round=4" in inside[0] and "shard=1" in inside[0]
+        assert outside and "round=" not in outside[0]
+
+    def test_log_context_nests_and_restores(self):
+        from repro.common.logging import get_logger, log_context
+        lg = get_logger("repro.test.ctx2")
+        h, buf, old = self._captured()
+        try:
+            with log_context(a=1):
+                with log_context(b=2):
+                    lg.info("deep")
+                lg.info("shallow")
+        finally:
+            h.setStream(old)
+        lines = buf.getvalue().splitlines()
+        deep = [ln for ln in lines if "deep" in ln][0]
+        shallow = [ln for ln in lines if "shallow" in ln][0]
+        assert "a=1" in deep and "b=2" in deep
+        assert "a=1" in shallow and "b=2" not in shallow
