@@ -1,6 +1,6 @@
-"""Fault-tolerance benchmark: MTTR and WAL-replay cost (ISSUE 6 tracker).
+"""Fault-tolerance benchmark: MTTR, WAL-replay cost, degraded modes.
 
-Two questions a recovery story must answer with numbers:
+Questions a recovery story must answer with numbers:
 
 1. **MTTR** — a worker dies late in the walk→train run; how long until the
    embedding is back, (a) resuming from the last crash-consistent snapshot
@@ -14,6 +14,14 @@ Two questions a recovery story must answer with numbers:
    recovery time scale with the backlog? Reported per backlog size: the
    pure log scan/decode time and the full ``IngestDriver.recover`` wall
    (snapshot restore + replay + one batched refresh + re-snapshot).
+
+3. **Degraded modes** (DESIGN.md §12) — the self-healing loops under
+   injected faults: watchdog detection latency + rollback/heal cost for a
+   NaN divergence, elastic shard-loss reconfiguration time + the degraded
+   (k-1 survivors) throughput against the fault-free k-shard run, and the
+   ingest SLO degrade ladder's mode mix under deadline pressure. The fault
+   schedule is randomized by ``REPRO_CHAOS_SEED`` (logged in the output)
+   so the nightly chaos job sweeps different placements.
 
 Repo-root ``BENCH_recovery.json`` is emitted by
 ``benchmarks.run --only recovery``.
@@ -30,8 +38,10 @@ import numpy as np
 from benchmarks.common import save
 from repro.core.api import EmbedConfig, make_walk_plan
 from repro.core.dsgl import DSGLConfig
+from repro.core.mpgp import mpgp_partition
 from repro.graph.generators import churn_batch, rmat_graph
-from repro.runtime.faults import FaultInjector, SimulatedFailure
+from repro.runtime.faults import FaultInjector, LivenessProbe, SimulatedFailure
+from repro.runtime.health import HealthConfig, HealthMonitor
 from repro.runtime.ingest import IngestConfig, IngestDriver
 from repro.runtime.trainer import StreamingEmbedPipeline
 
@@ -143,6 +153,10 @@ def run(quick: bool = True) -> Dict:
                 "recover_wall_s": recover_wall_s,
             })
 
+        # --- degraded modes (self-healing loops, chaos-seeded) ----------
+        degraded = _degraded_modes(g, policy, spec, rounds, dsgl,
+                                   phi_ref, root)
+
     rec = {
         "num_nodes": n,
         "wall_scratch_s": wall_scratch,
@@ -155,6 +169,100 @@ def run(quick: bool = True) -> Dict:
         "mttr_speedup": mttr_scratch / max(mttr_resume, 1e-9),
         "resume_bit_identical": bit_identical,
         "wal_replay": wal_rows,
+        **degraded,
     }
     save("recovery", rec)
     return rec
+
+
+def _degraded_modes(g, policy, spec, rounds, dsgl, phi_ref, root) -> Dict:
+    """Self-healing degraded-mode rows under a REPRO_CHAOS_SEED schedule."""
+    import os
+
+    seed = int(os.environ.get("REPRO_CHAOS_SEED", "0"))
+    rng = np.random.default_rng(seed)
+    print(f"[recovery] degraded-mode fault schedule: REPRO_CHAOS_SEED={seed}")
+
+    def fresh(**kw):
+        return StreamingEmbedPipeline(g, policy, spec, rounds, dsgl, **kw)
+
+    # --- watchdog: NaN divergence -> detect, roll back, heal ------------
+    inject_at = int(rng.integers(3, 6))
+    mon = HealthMonitor(HealthConfig(check_every=1, lr_backoff=1.0))
+    victim = fresh(health=mon)
+    t0 = time.perf_counter()
+    victim.run(ckpt_root=os.path.join(root, "watchdog"),
+               ckpt_every_rounds=1,
+               faults=FaultInjector(inject_plan={"phi_nan": [inject_at]}))
+    heal_wall = time.perf_counter() - t0
+    rep = mon.report()
+    phi_heal, _ = victim.embeddings()
+    watchdog_row = {
+        "inject_at": inject_at,
+        "detections": rep["detections"],
+        "rollbacks": rep["rollbacks"],
+        "detection_latency_steps": (rep["detection_steps"][0]
+                                    if rep["detection_steps"] else None),
+        "quarantined_slots": rep["quarantined_slots"],
+        "heal_wall_s": heal_wall,
+        "healed_bit_identical": bool(np.array_equal(phi_ref, phi_heal)),
+    }
+
+    # --- elastic: permanent shard loss at k=4 -> continue at k=3 --------
+    part = mpgp_partition(g, 4, tau_weight="degree").assignment
+    t0 = time.perf_counter()
+    ref4 = fresh(assignment=part, num_shards=4)
+    ref4.run()
+    wall_k4 = time.perf_counter() - t0
+    phi4, _ = ref4.embeddings()
+
+    dead = int(rng.integers(0, 4))
+    down_at = int(rng.integers(2, 5))
+    t0 = time.perf_counter()
+    p = fresh(assignment=part, num_shards=4)
+    res = p.run(ckpt_root=os.path.join(root, "elastic"),
+                ckpt_every_rounds=2,
+                faults=FaultInjector(down_plan={dead: down_at}),
+                liveness=LivenessProbe(num_shards=4, misses_to_dead=2))
+    wall_deg = time.perf_counter() - t0
+    phi_el, _ = p.embeddings()
+    reconf = res["reconfigs"][0] if res["reconfigs"] else {}
+    elastic_row = {
+        "dead_shard": dead,
+        "down_at_probe": down_at,
+        "reconfig_wall_s": reconf.get("wall_s"),
+        "moved_roots": reconf.get("moved_roots"),
+        "rewalk_walks": reconf.get("rewalk_walks"),
+        "reused_shards": reconf.get("reused_shards"),
+        "wall_faultfree_k4_s": wall_k4,
+        "wall_degraded_s": wall_deg,
+        "degraded_throughput_frac": wall_k4 / max(wall_deg, 1e-9),
+        "bit_identical_to_k4": bool(np.array_equal(phi4, phi_el)),
+    }
+
+    # --- ingest SLO: deadline pressure -> degrade ladder ----------------
+    base = fresh()
+    base.run()
+    drv = IngestDriver(os.path.join(root, "slo"), base,
+                       cfg=IngestConfig(apply_every=10**9,
+                                        staleness_slo_s=0.05))
+    for i in range(3):
+        drv.submit(churn_batch(g, 0.005, seed=seed * 10 + i))
+        drv.drain()
+    # Relax the deadline so a final full drain pays any accumulated debt.
+    drv.cfg = dataclasses.replace(drv.cfg, staleness_slo_s=None)
+    drv.submit(churn_batch(g, 0.005, seed=seed * 10 + 9))
+    drv.drain()
+    s = drv.staleness()
+    slo_row = {
+        "staleness_slo_s": 0.05,
+        "mode_counts": s["mode_counts"],
+        "slo_violations": s["slo_violations"],
+        "latency_p50_s": s["latency_p50_s"],
+        "latency_p99_s": s["latency_p99_s"],
+        "debt_roots_after_full": s["debt_roots"],
+        "wall_ema_s": s["wall_ema_s"],
+    }
+
+    return {"chaos_seed": seed, "watchdog": watchdog_row,
+            "elastic": elastic_row, "ingest_slo": slo_row}

@@ -250,7 +250,8 @@ def _emit_bench_incremental(rec: dict) -> None:
 def _emit_bench_recovery(rec: dict) -> None:
     """Repo-root BENCH_recovery.json: the fault-tolerance trajectory —
     MTTR of snapshot-resume vs from-scratch recompute, the snapshot tax,
-    and WAL replay wall-clock vs churn backlog."""
+    WAL replay wall-clock vs churn backlog, and the self-healing
+    degraded-mode rows (DESIGN.md §12) under the logged chaos seed."""
     bench = {
         "workload": {"num_nodes": rec.get("num_nodes")},
         "mttr": {
@@ -266,12 +267,29 @@ def _emit_bench_recovery(rec: dict) -> None:
             "wall_scratch_s": rec.get("wall_scratch_s"),
         },
         "wal_replay": rec.get("wal_replay"),
+        # Self-healing degraded modes (nightly chaos job artifact): the
+        # fault schedule is randomized by REPRO_CHAOS_SEED (logged here).
+        "chaos_seed": rec.get("chaos_seed"),
+        "degraded": {
+            "watchdog": rec.get("watchdog"),
+            "elastic": rec.get("elastic"),
+            "ingest_slo": rec.get("ingest_slo"),
+        },
         # ISSUE 6 acceptance tracker: resuming from the last snapshot must
         # beat a from-scratch recompute by >= 3x, and the resumed run must
-        # reproduce the uninterrupted run bit-for-bit.
+        # reproduce the uninterrupted run bit-for-bit. ISSUE 8 adds: a
+        # NaN divergence heals (rollback) onto the fault-free trajectory,
+        # and an elastic k-1 continuation stays bit-identical to the
+        # fault-free k-shard run.
         "acceptance": {
             "resume_ge_3x": bool(rec.get("mttr_speedup", 0.0) >= 3.0),
             "bit_identical": bool(rec.get("resume_bit_identical", False)),
+            "watchdog_healed_bit_identical": bool(
+                (rec.get("watchdog") or {}).get("healed_bit_identical",
+                                                False)),
+            "elastic_bit_identical_to_k4": bool(
+                (rec.get("elastic") or {}).get("bit_identical_to_k4",
+                                               False)),
         },
     }
     path = os.path.join(REPO_ROOT, "BENCH_recovery.json")

@@ -154,6 +154,32 @@ def latest_step(root: str) -> Optional[int]:
     return None
 
 
+def prune_steps(root: str, keep_last: int) -> int:
+    """Bounded snapshot retention: delete all but the newest ``keep_last``
+    VALID checkpoints (torn/corrupt step dirs older than the newest kept
+    one are swept too — they can never be restored from). Long-running
+    self-healing pipelines snapshot every few rounds forever; without
+    retention the checkpoint root grows without bound. Returns the number
+    of step directories removed. Never removes the newest valid step, so
+    rollback/recovery always keeps a base."""
+    keep_last = max(int(keep_last), 1)
+    kept = 0
+    removed = 0
+    for step in _step_candidates(root):
+        valid = _read_manifest(root, step) is not None
+        if valid and kept < keep_last:
+            kept += 1
+            continue
+        if not valid and kept == 0:
+            continue      # torn-but-newest: the reader skips it anyway
+        shutil.rmtree(os.path.join(root, f"step_{step:08d}"),
+                      ignore_errors=True)
+        removed += 1
+    if removed:
+        _fsync_dir(root)
+    return removed
+
+
 def read_meta(root: str, step: Optional[int] = None
               ) -> Tuple[int, Dict[str, Any]]:
     """(step, meta) of the newest valid checkpoint without loading arrays

@@ -271,6 +271,29 @@ def _replica_step(phi_in, phi_out, walks, negs, lr, window: int,
     return phi_in, phi_out, loss.reshape(s_cnt, g_cnt).sum(axis=1)
 
 
+def _chunk_scan(phi_in, phi_out, walks, neg_table, sync_rows, key, lrs,
+                window: int, negatives: int, use_kernel: bool, sync: bool):
+    """The shared chunk body: scan C lifetimes, optional hotness sync."""
+    s_cnt = phi_in.shape[0]
+    _, _, g_cnt, _, t_len = walks.shape
+
+    def step(carry, inp):
+        pi, po, k = carry
+        wb, lr = inp
+        k, sub = jax.random.split(k)
+        negs = sample_alias(neg_table, sub, (s_cnt, g_cnt, t_len, negatives))
+        pi, po, loss = _replica_step(pi, po, wb, negs, lr, window, use_kernel)
+        return (pi, po, k), loss
+
+    (phi_in, phi_out, _), losses = jax.lax.scan(
+        step, (phi_in, phi_out, key), (walks, lrs))
+
+    if sync and s_cnt > 1:
+        from repro.core.sync import hotness_sync_stacked
+        phi_in, phi_out = hotness_sync_stacked(phi_in, phi_out, sync_rows)
+    return phi_in, phi_out, losses
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("window", "negatives", "use_kernel", "sync"),
@@ -295,24 +318,49 @@ def train_chunk(
     kernel launch per step, and when ``sync`` is set the chunk ends with
     the Improvement-III hotness-row exchange across the replica axis.
     Returns (phi_in', phi_out', losses (C, S))."""
-    s_cnt = phi_in.shape[0]
-    _, _, g_cnt, _, t_len = walks.shape
+    return _chunk_scan(phi_in, phi_out, walks, neg_table, sync_rows, key,
+                       lrs, window, negatives, use_kernel, sync)
 
-    def step(carry, inp):
-        pi, po, k = carry
-        wb, lr = inp
-        k, sub = jax.random.split(k)
-        negs = sample_alias(neg_table, sub, (s_cnt, g_cnt, t_len, negatives))
-        pi, po, loss = _replica_step(pi, po, wb, negs, lr, window, use_kernel)
-        return (pi, po, k), loss
 
-    (phi_in, phi_out, _), losses = jax.lax.scan(
-        step, (phi_in, phi_out, key), (walks, lrs))
-
-    if sync and s_cnt > 1:
-        from repro.core.sync import hotness_sync_stacked
-        phi_in, phi_out = hotness_sync_stacked(phi_in, phi_out, sync_rows)
-    return phi_in, phi_out, losses
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "negatives", "use_kernel", "sync"))
+def train_chunk_checked(
+    phi_in: jax.Array,        # (S, N, d) — NOT donated (update norm needs
+    phi_out: jax.Array,       # (S, N, d)   the pre-chunk matrices)
+    walks: jax.Array,         # (C, S, G, W, T)
+    neg_table: AliasTable,
+    sync_rows: jax.Array,
+    key: jax.Array,
+    lrs: jax.Array,
+    window: int,
+    negatives: int,
+    use_kernel: bool = False,
+    sync: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array, dict]:
+    """``train_chunk`` plus the watchdog's health reductions, in the SAME
+    dispatch: the chunk math is bit-identical (``_chunk_scan`` is shared),
+    and four cheap scalar reductions ride along — non-finite counts over
+    the new matrices and the chunk losses, the Frobenius norm of the phi
+    update (the optimizer-step magnitude a blow-up spikes first), and the
+    new phi norm. The inputs are not donated so the update delta can be
+    formed against the pre-chunk matrices; the extra live copy is why the
+    pipeline only routes every ``HealthConfig.check_every``-th window of
+    steps through this variant. Returns (phi_in', phi_out', losses,
+    {nonfinite, loss_nonfinite, loss_sum, update_norm, phi_norm})."""
+    new_in, new_out, losses = _chunk_scan(
+        phi_in, phi_out, walks, neg_table, sync_rows, key, lrs,
+        window, negatives, use_kernel, sync)
+    health = {
+        "nonfinite": (jnp.sum(~jnp.isfinite(new_in))
+                      + jnp.sum(~jnp.isfinite(new_out))),
+        "loss_nonfinite": jnp.sum(~jnp.isfinite(losses)),
+        "loss_sum": jnp.sum(jnp.where(jnp.isfinite(losses), losses, 0.0)),
+        "update_norm": jnp.sqrt(jnp.sum((new_in - phi_in) ** 2)
+                                + jnp.sum((new_out - phi_out) ** 2)),
+        "phi_norm": jnp.sqrt(jnp.sum(new_in ** 2)),
+    }
+    return new_in, new_out, losses, health
 
 
 # ---------------------------------------------------------------------------

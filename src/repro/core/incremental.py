@@ -47,6 +47,7 @@ distributional freshness matters more than re-walk volume.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, Optional, Tuple
 
 import jax.numpy as jnp
@@ -146,6 +147,7 @@ class RefreshStats:
     rewalk_supersteps: int
     fine_tune_steps: int
     wall_s: float
+    mode: str = "full"             # degrade ladder rung (DESIGN.md §12)
 
     def as_dict(self) -> Dict:
         return dataclasses.asdict(self)
@@ -171,15 +173,30 @@ class IncrementalRefresh:
         self.delta = delta if delta is not None else DeltaCSR(pipeline.graph)
         self.detect = detect
         self.last_stats: Optional[RefreshStats] = None
+        self.last_affected_mask: Optional[np.ndarray] = None
 
     def apply_updates(self, batch: EdgeBatch) -> "IncrementalRefresh":
         """Stage one churn batch in the overlay (cheap; no refresh yet)."""
         self.delta.apply_batch(batch)
         return self
 
-    def refresh(self, **kwargs) -> RefreshStats:
+    def refresh(self, *, mode: str = "full",
+                extra_affected: Optional[np.ndarray] = None,
+                **kwargs) -> RefreshStats:
         """Absorb all staged churn: compact the overlay, detect affected
-        vertices from the corpus, re-walk them, fine-tune DSGL in place."""
+        vertices from the corpus, re-walk them, fine-tune DSGL in place.
+
+        ``mode`` is the SLO degrade ladder rung (DESIGN.md §12):
+        ``"full"`` the complete lifecycle; ``"no_finetune"`` skips the
+        DSGL fine-tune and the ΔD top-up rounds (walks stay exact, phi
+        lags); ``"detect_only"`` runs detection and graph adoption only —
+        the ring keeps its stale walks and the caller must carry
+        ``last_affected_mask`` forward as debt. ``extra_affected`` is that
+        debt: a (|V|,) bool mask OR-ed into this refresh's detected set so
+        a deferred re-walk happens under the CURRENT graph/keys."""
+        if mode not in ("full", "no_finetune", "detect_only"):
+            raise ValueError(f"unknown refresh mode {mode!r}")
+        t0 = time.perf_counter()
         old_graph = self.pipeline.graph
         n_old = old_graph.num_nodes
         if self.delta.num_nodes != n_old:
@@ -202,11 +219,30 @@ class IncrementalRefresh:
         affected_mask = affected_roots(
             walks[valid], roots[valid], changed, touched, n_old,
             mode=self.detect, old_graph=old_graph, new_graph=new_graph)
-        stats = self.pipeline.refresh(new_graph, affected_mask, **kwargs)
+        if extra_affected is not None:
+            affected_mask = affected_mask | np.asarray(extra_affected, bool)
+        self.last_affected_mask = affected_mask.copy()
+
+        if mode == "detect_only":
+            self.pipeline.adopt_graph(new_graph)
+            body = {
+                "affected": int(affected_mask.sum()),
+                "affected_frac": float(affected_mask.mean()),
+                "retained_rounds": 0, "extra_rounds": 0,
+                "rewalk_walks": 0, "rewalk_supersteps": 0,
+                "fine_tune_steps": 0,
+                "wall_s": float(time.perf_counter() - t0),
+            }
+        else:
+            if mode == "no_finetune":
+                kwargs = {**kwargs, "fine_tune_steps": 0,
+                          "max_extra_rounds": 0}
+            body = self.pipeline.refresh(new_graph, affected_mask, **kwargs)
         stats = RefreshStats(
             changed_edges=int(len(changed)),
             churn_frac=float(len(changed) / max(arcs_und, 1.0)),
-            **stats)
+            mode=mode,
+            **body)
         self.last_stats = stats
         return stats
 

@@ -133,11 +133,15 @@ def _assign_stream(
     gamma: float,
     use_ps2: bool = True,
     tau_weight: str = "nodes",
+    allowed: Optional[np.ndarray] = None,
 ) -> None:
     """Assign ``nodes`` (in order) in-place into ``assignment``/``counts``.
 
     ``assignment`` may already contain other segments' results (parallel
-    MPGP merges into shared state); -1 marks unassigned.
+    MPGP merges into shared state); -1 marks unassigned. ``allowed``
+    (bool (num_parts,)) restricts the argmax to a subset of partitions —
+    the elastic-reconfiguration path streams a dead shard's orphans into
+    the SURVIVORS only.
 
     ``tau_weight`` selects the LOAD each node contributes to the Eq. 15
     capacity term tau(P_i): ``"nodes"`` is the paper-literal node count;
@@ -189,6 +193,8 @@ def _assign_stream(
         # Nodes with no placed neighbors score 0 everywhere: tau breaks the
         # tie toward the least-loaded partition (keeps balance).
         obj = scores * tau if scores.any() else tau
+        if allowed is not None:
+            obj = np.where(allowed, obj, -np.inf)
         p = int(np.argmax(obj))
         assignment[v] = p
         counts[p] += (hi - lo + 1) if degree_tau else 1
@@ -227,6 +233,80 @@ def mpgp_partition(
         locality=edge_locality(graph, assignment),
         balance=partition_balance(assignment, num_parts),
     )
+
+
+def reassign_dead_shard(
+    graph: CSRGraph,
+    assignment: np.ndarray,
+    dead: int,
+    *,
+    num_parts: Optional[int] = None,
+    gamma: float = 2.0,
+    use_ps2: bool = True,
+    tau_weight: str = "degree",
+) -> np.ndarray:
+    """Elastic reconfiguration (DESIGN.md §12): stream the orphans of a
+    permanently-lost shard into the SURVIVORS via the same Eq. 14/15
+    objective as the original partition.
+
+    The survivors' existing placements are kept fixed — only the orphans
+    re-stream, so PS1/PS2 see the full survivor context and the rebuilt
+    partition reuses the survivor slices untouched. Orphans stream in
+    descending-degree order (the high-degree nodes anchor the proximity
+    scores for the rest, mirroring the '+degree' stream orders). Eq. 15's
+    capacity counts are primed from the survivors' CURRENT load so the
+    orphan mass spreads instead of piling onto one survivor;
+    ``tau_weight="degree"`` (the walker-occupancy default, see
+    ``_assign_stream``) charges degree mass. Returns a NEW assignment over
+    the ORIGINAL partition ids with no node left on ``dead`` — compact the
+    id space afterwards with ``compact_assignment``.
+    """
+    asn = np.asarray(assignment, dtype=np.int32)
+    if num_parts is None:      # a shard may own zero nodes; callers that
+        num_parts = int(asn.max()) + 1   # know k should pass it explicitly
+    if not (0 <= dead < num_parts):
+        raise ValueError(f"dead shard {dead} out of range for {num_parts}")
+    if num_parts <= 1:
+        raise ValueError("cannot reassign the only shard")
+    g = graph.to_numpy()
+    deg = (g.indptr[1:] - g.indptr[:-1]).astype(np.int64)
+
+    new_asn = asn.copy()
+    orphans = np.flatnonzero(new_asn == dead)
+    new_asn[orphans] = -1
+    order = orphans[np.argsort(-deg[orphans], kind="stable")]
+
+    counts = np.zeros(num_parts, dtype=np.int64)
+    placed = np.flatnonzero(new_asn >= 0)
+    load = (deg[placed] + 1) if tau_weight == "degree" else \
+        np.ones(placed.size, dtype=np.int64)
+    np.add.at(counts, new_asn[placed], load)
+
+    allowed = np.ones(num_parts, dtype=bool)
+    allowed[dead] = False
+    _assign_stream(g, order, new_asn, counts, num_parts, gamma, use_ps2,
+                   tau_weight, allowed=allowed)
+    assert not np.any(new_asn == dead) and not np.any(new_asn < 0)
+    return new_asn
+
+
+def compact_assignment(
+    assignment: np.ndarray, dead: int, *, num_parts: Optional[int] = None
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Compact the partition id space after ``reassign_dead_shard``: ids
+    above ``dead`` shift down by one so the k-1 survivors are dense in
+    [0, k-1). Returns ``(compacted, old_of_new)`` where ``old_of_new[i]``
+    is survivor i's ORIGINAL id (the slice-reuse map for the partial
+    PartitionedCSR rebuild)."""
+    asn = np.asarray(assignment, dtype=np.int32)
+    if np.any(asn == dead):
+        raise ValueError(f"assignment still references dead shard {dead}")
+    if num_parts is None:
+        num_parts = max(int(asn.max()) + 1 if asn.size else 0, dead + 1)
+    compacted = np.where(asn > dead, asn - 1, asn).astype(np.int32)
+    old_of_new = np.array([p for p in range(num_parts) if p != dead],
+                          dtype=np.int32)
+    return compacted, old_of_new
 
 
 def mpgp_partition_parallel(

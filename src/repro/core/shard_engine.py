@@ -1034,3 +1034,84 @@ def run_walk_sharded(
     if with_stats:
         return state, _shard_stats(out, pcsr, pool, cap, retries)
     return state
+
+
+def reconfigure_partitions(
+    graph: CSRGraph,
+    old_assignment: np.ndarray,
+    new_assignment: np.ndarray,
+    num_shards_new: int,
+    *,
+    old_of_new: np.ndarray,
+    key_obj: object = None,
+) -> Dict:
+    """Swap the cached partition-local store from a k-way to a k-1-way
+    layout after elastic shard reconfiguration (DESIGN.md §12).
+
+    Looks up the old ``PartitionedCSR`` in the cache; when found (the
+    steady-state case — the walk engine built it on the previous round),
+    the new store is assembled by ``reassign_partitioned_csr`` with the
+    non-gainer survivors' edge slices copied instead of re-scattered.
+    Otherwise it falls back to a fresh ``build_partitioned_csr``. The new
+    store is PRIMED into the cache under the new assignment's key so the
+    next walk round hits, and every cache entry keyed on the dead
+    assignment — partition slices and learned slot-pool sizes — is
+    evicted (the pool sizing of a k-way layout says nothing about k-1).
+
+    Returns ``{"reused_shards", "rebuilt_shards", "wall_s"}``.
+    """
+    import time
+    import weakref
+
+    from repro.graph.csr import reassign_partitioned_csr
+    from repro.graph.delta import graph_version
+
+    t0 = time.perf_counter()
+    key_obj = graph if key_obj is None else key_obj
+    old_asn = np.asarray(old_assignment)
+    new_asn = np.asarray(new_assignment)
+    gv = graph_version(key_obj)
+    k_old = num_shards_new + 1
+    h_old = hash(old_asn.tobytes())
+
+    # Find a live old entry whose feature set (weights/cm presence) matches
+    # the graph we are slicing — reuse needs like-for-like rows. The cm flag
+    # in the key tracks the SLICING graph, which run_walk_sharded may have
+    # cm-augmented, so match on the store itself rather than the flag.
+    old_pcsr = None
+    for key, (ref, pcsr) in list(_PCSR_CACHE.items()):
+        if (key[0] == id(key_obj) and key[1] == gv and key[2] == k_old
+                and key[4] == h_old and ref() is key_obj
+                and (pcsr.slices.edge_cm is not None)
+                == (graph.edge_cm is not None)
+                and (pcsr.slices.weights is not None)
+                == (graph.weights is not None)):
+            old_pcsr = pcsr
+            break
+
+    if old_pcsr is not None:
+        new_pcsr, reused = reassign_partitioned_csr(
+            graph, new_asn, num_shards_new, old=old_pcsr,
+            old_assignment=old_asn, old_of_new=np.asarray(old_of_new))
+    else:
+        new_pcsr, reused = build_partitioned_csr(
+            graph, new_asn, num_shards_new), 0
+
+    # Evict everything keyed on the dead layout, then prime the new one.
+    for key in [k for k in _PCSR_CACHE
+                if k[0] == id(key_obj) and k[4] == h_old]:
+        del _PCSR_CACHE[key]
+    for key in [k for k in _POOL_CACHE
+                if k[0] == id(key_obj) and k[-1] == h_old]:
+        del _POOL_CACHE[key]
+    new_key = (id(key_obj), gv, num_shards_new, graph.edge_cm is not None,
+               hash(new_asn.tobytes()))
+    if len(_PCSR_CACHE) >= 8:
+        _PCSR_CACHE.clear()
+    _PCSR_CACHE[new_key] = (weakref.ref(key_obj), new_pcsr)
+
+    return {
+        "reused_shards": int(reused),
+        "rebuilt_shards": int(num_shards_new - reused),
+        "wall_s": float(time.perf_counter() - t0),
+    }

@@ -391,3 +391,156 @@ def build_partitioned_csr(
         num_owned=parts["num_owned"],
         num_parts=num_parts,
     )
+
+
+def _fit_row(row: np.ndarray, width: int, fill) -> np.ndarray:
+    """Pad (with ``fill``) or truncate a 1-D slice row to ``width``. Rebuilt
+    partitions change the padded slice dims; survivor rows only ever gain or
+    lose PADDING (their real entries always fit), so fit is lossless."""
+    if row.shape[0] >= width:
+        return row[:width]
+    out = np.full(width, fill, dtype=row.dtype)
+    out[:row.shape[0]] = row
+    return out
+
+
+def reassign_partitioned_csr(
+    graph: CSRGraph,
+    new_assignment: np.ndarray,
+    num_parts: int,
+    *,
+    old: PartitionedCSR,
+    old_assignment: np.ndarray,
+    old_of_new: np.ndarray,
+) -> Tuple[PartitionedCSR, int]:
+    """Partial rebuild of a ``PartitionedCSR`` after elastic shard
+    reconfiguration (DESIGN.md §12).
+
+    ``new_assignment`` is the COMPACTED k-1-way assignment produced by
+    ``mpgp.reassign_dead_shard`` + ``compact_assignment``; ``old`` is the
+    k-way store being replaced and ``old_of_new[s]`` maps survivor s back
+    to its original shard id. The node sets of non-gainer survivors are
+    untouched by reconfiguration (orphans only ever move INTO survivors),
+    so their O(|E|/k) slice rows — indices, nbr_deg, weights, edge_cm —
+    are copied from the old device slices (refit to the new padded dims)
+    instead of re-scattered; only the gainers' rows rebuild, with the arc
+    scatter masked to their arcs. ``nbr_owner`` is recomputed for EVERY
+    shard (any edge into a moved node changes owner) straight from the
+    slice's global neighbor ids. Node-level layout (owned/local_of/indptr)
+    is O(|V|) vectorized and recomputed outright.
+
+    Returns ``(store, reused)`` where ``reused`` counts survivor shards
+    whose edge rows were copied, and the store is bit-identical to
+    ``build_partitioned_csr(graph, new_assignment, num_parts)``.
+    """
+    g = graph.to_numpy()
+    indptr = np.asarray(g.indptr, np.int64)
+    indices = np.asarray(g.indices, np.int64)
+    n = len(indptr) - 1
+    asn = np.asarray(new_assignment, np.int64)
+    old_asn = np.asarray(old_assignment, np.int64)
+    old_of_new = np.asarray(old_of_new, np.int64)
+    deg = indptr[1:] - indptr[:-1]
+
+    # -- node-level layout (cheap, recomputed) ------------------------------
+    counts = np.bincount(asn, minlength=num_parts)
+    max_nodes = max(int(counts.max()), 1) if n else 1
+    node_starts = np.zeros(num_parts + 1, np.int64)
+    np.cumsum(counts, out=node_starts[1:])
+    order = np.argsort(asn, kind="stable")
+    local_of = np.empty(max(n, 1), np.int64)
+    local_of[order] = np.arange(n) - np.repeat(node_starts[:-1], counts)
+    owned = np.full((num_parts, max_nodes), -1, np.int64)
+    if n:
+        owned[asn, local_of[:n]] = np.arange(n)
+    deg_p = np.zeros((num_parts, max_nodes), np.int64)
+    if n:
+        deg_p[asn, local_of[:n]] = deg
+    indptr_p = np.zeros((num_parts, max_nodes + 1), np.int64)
+    np.cumsum(deg_p, axis=1, out=indptr_p[:, 1:])
+
+    e_counts = np.zeros(num_parts, np.int64)
+    np.add.at(e_counts, asn, deg)
+    num_edges = int(indptr[-1])
+    max_edges = max(int(e_counts.max()), 1) if num_edges else 1
+
+    # -- gainer detection ---------------------------------------------------
+    # Orphans: nodes whose OLD shard is absent from old_of_new (the dead
+    # one). Survivors that received none of them are unchanged.
+    size = 1 + int(max(old_asn.max() if n else 0,
+                       old_of_new.max() if old_of_new.size else 0))
+    survivor_mask = np.zeros(size, dtype=bool)
+    survivor_mask[old_of_new] = True
+    orphans = ~survivor_mask[old_asn] if n else np.zeros(0, dtype=bool)
+    changed = np.zeros(num_parts, dtype=bool)
+    if n and orphans.any():
+        changed[np.unique(asn[orphans])] = True
+
+    has_w = old.slices.weights is not None
+    has_cm = old.slices.edge_cm is not None
+    indices_p = np.full((num_parts, max_edges), -1, np.int64)
+    nbr_deg = np.zeros((num_parts, max_edges), np.int64)
+    weights_p = np.zeros((num_parts, max_edges), np.float32) if has_w else None
+    edge_cm_p = np.zeros((num_parts, max_edges), np.int64) if has_cm else None
+
+    # -- survivors: copy edge rows from the old device slices ---------------
+    reused = 0
+    old_indices = np.asarray(old.slices.indices, np.int64)
+    old_nbr_deg = np.asarray(old.slices.nbr_deg, np.int64)
+    old_w = np.asarray(old.slices.weights, np.float32) if has_w else None
+    old_cm = np.asarray(old.slices.edge_cm, np.int64) if has_cm else None
+    for s in range(num_parts):
+        if changed[s]:
+            continue
+        o = int(old_of_new[s])
+        indices_p[s] = _fit_row(old_indices[o], max_edges, -1)
+        nbr_deg[s] = _fit_row(old_nbr_deg[o], max_edges, 0)
+        if has_w:
+            weights_p[s] = _fit_row(old_w[o], max_edges, 0.0)
+        if has_cm:
+            edge_cm_p[s] = _fit_row(old_cm[o], max_edges, 0)
+        reused += 1
+
+    # -- gainers: masked arc scatter (O(|E_changed|)) -----------------------
+    if n and changed.any():
+        src = np.repeat(np.arange(n), deg)
+        asn_src = asn[src]
+        sel = np.flatnonzero(changed[asn_src])
+        # Stable sort by shard keeps the ascending-src arc order within each
+        # shard — the indptr_p row layout (see _partition_slices).
+        sub = sel[np.argsort(asn_src[sel], kind="stable")]
+        sub_p = asn_src[sub]
+        sub_counts = np.bincount(sub_p, minlength=num_parts)
+        sub_starts = np.zeros(num_parts + 1, np.int64)
+        np.cumsum(sub_counts, out=sub_starts[1:])
+        sub_pos = np.arange(len(sub)) - np.repeat(sub_starts[:-1], sub_counts)
+        dst = indices[sub]
+        indices_p[sub_p, sub_pos] = dst
+        nbr_deg[sub_p, sub_pos] = deg[dst]
+        if has_w:
+            weights_p[sub_p, sub_pos] = np.asarray(g.weights,
+                                                   np.float32)[sub]
+        if has_cm:
+            edge_cm_p[sub_p, sub_pos] = np.asarray(g.edge_cm, np.int64)[sub]
+
+    # -- nbr_owner: global remap, recomputed for all shards -----------------
+    valid = indices_p >= 0
+    nbr_owner = np.where(valid, asn[np.where(valid, indices_p, 0)], -1)
+
+    slices = ShardCSR(
+        indptr=jnp.asarray(indptr_p, jnp.int32),
+        indices=jnp.asarray(indices_p, jnp.int32),
+        nbr_owner=jnp.asarray(nbr_owner, jnp.int32),
+        nbr_deg=jnp.asarray(nbr_deg, jnp.int32),
+        weights=None if weights_p is None else jnp.asarray(weights_p),
+        edge_cm=None if edge_cm_p is None else jnp.asarray(edge_cm_p,
+                                                           jnp.int32),
+    )
+    store = PartitionedCSR(
+        slices=slices,
+        local_of=jnp.asarray(local_of[:n], jnp.int32),
+        owned=owned,
+        num_owned=counts.astype(np.int64),
+        num_parts=num_parts,
+    )
+    return store, reused

@@ -119,6 +119,83 @@ class EdgeBatch:
         return np.concatenate([self.insert, self.delete], axis=0)
 
 
+def validate_edge_batch(
+    batch: EdgeBatch,
+    num_nodes: int,
+    *,
+    self_loops: str = "drop",
+    duplicates: str = "allow",
+) -> EdgeBatch:
+    """Admission control for churn batches — runs in ``IngestDriver.submit``
+    BEFORE the WAL append, so a malformed batch is rejected with a clear
+    error instead of becoming durable and poisoning every future replay of
+    the log (a WAL record that crashes ``apply`` crashes recovery forever).
+
+    Always rejected: out-of-range or negative vertex ids, non-finite
+    insert weights, a weights vector whose length disagrees with
+    ``insert``. Policy-controlled: ``self_loops`` and ``duplicates``
+    (repeated undirected pairs WITHIN the batch) are each ``"drop"``
+    (silently filtered), ``"forbid"`` (raise), or ``"allow"`` (pass
+    through; downstream CSR semantics drop self-loops and dedup arcs
+    anyway). Returns the (possibly filtered) batch.
+    """
+    if self_loops not in ("drop", "forbid", "allow"):
+        raise ValueError(f"unknown self_loops policy {self_loops!r}")
+    if duplicates not in ("drop", "forbid", "allow"):
+        raise ValueError(f"unknown duplicates policy {duplicates!r}")
+
+    for name in ("insert", "delete"):
+        arr = getattr(batch, name)
+        if arr.size and (arr.min() < 0 or arr.max() >= num_nodes):
+            bad = arr[np.any((arr < 0) | (arr >= num_nodes), axis=1)]
+            raise ValueError(
+                f"EdgeBatch.{name}: {len(bad)} edge(s) reference vertices "
+                f"outside [0, {num_nodes}), e.g. {bad[0].tolist()}")
+    w = batch.insert_weights
+    if w is not None:
+        if len(w) != len(batch.insert):
+            raise ValueError(
+                f"EdgeBatch.insert_weights has {len(w)} entries for "
+                f"{len(batch.insert)} inserted edges")
+        if not np.all(np.isfinite(w)):
+            bad = int(np.sum(~np.isfinite(w)))
+            raise ValueError(
+                f"EdgeBatch.insert_weights: {bad} non-finite value(s) "
+                "(NaN/inf weights would propagate into the alias table)")
+
+    ins, dele = batch.insert, batch.delete
+    loops_i = ins[:, 0] == ins[:, 1] if len(ins) else np.zeros(0, bool)
+    loops_d = dele[:, 0] == dele[:, 1] if len(dele) else np.zeros(0, bool)
+    if self_loops == "forbid" and (loops_i.any() or loops_d.any()):
+        raise ValueError(
+            f"EdgeBatch contains {int(loops_i.sum() + loops_d.sum())} "
+            "self-loop(s) and the ingest self-loop policy is 'forbid'")
+    if self_loops == "drop" and (loops_i.any() or loops_d.any()):
+        ins = ins[~loops_i]
+        if w is not None:
+            w = w[~loops_i]
+        dele = dele[~loops_d]
+
+    if duplicates != "allow" and len(ins):
+        und = np.sort(ins, axis=1)
+        _, first = np.unique(und[:, 0] * np.int64(max(num_nodes, 1))
+                             + und[:, 1], return_index=True)
+        if len(first) != len(ins):
+            if duplicates == "forbid":
+                raise ValueError(
+                    f"EdgeBatch.insert contains "
+                    f"{len(ins) - len(first)} duplicate undirected "
+                    "edge(s) and the ingest duplicate policy is 'forbid'")
+            keep = np.sort(first)          # keep-first, preserve order
+            ins = ins[keep]
+            if w is not None:
+                w = w[keep]
+
+    if ins is batch.insert and dele is batch.delete:
+        return batch
+    return EdgeBatch(insert=ins, delete=dele, insert_weights=w)
+
+
 def _both_directions(edges: np.ndarray,
                      w: Optional[np.ndarray] = None
                      ) -> Tuple[np.ndarray, Optional[np.ndarray]]:

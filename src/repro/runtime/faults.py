@@ -31,6 +31,22 @@ raising — the writer cooperates by truncating its own output. This models
 a crash midway through the physical write, the case the fsync-before-
 rename and WAL-checksum protocols exist for.
 
+Silent-corruption simulation: ``inject(kind)`` is the non-crashing sibling
+of ``torn`` — it reports whether the current occurrence of a *corruption
+site* should poison its data instead of raising. The pipeline's training
+loop consults ``inject("phi_nan")`` (overwrite embedding rows with NaN —
+a flipped bit / bad DMA) and ``inject("lr_spike")`` (multiply the chunk's
+learning rates — a scheduler bug / optimizer blow-up) so the health
+watchdog's divergence → rollback → backoff path can be exercised against
+*real* divergences, not mocked verdicts.
+
+Liveness simulation: ``probe_ok(shard)`` answers a liveness probe for one
+walk shard; ``down_plan`` maps shard id → probe occurrence from which the
+shard stops answering FOREVER (persistent loss — a dead machine, not a
+transient timeout). ``LivenessProbe`` turns consecutive missed probes into
+a dead-shard declaration the pipeline reacts to with elastic
+reconfiguration.
+
 ``run_with_restarts`` is the generic supervisor loop a cluster agent would
 drive: attempt → on ``SimulatedFailure`` recover from durable state →
 re-attempt, bounded.
@@ -60,17 +76,30 @@ class FaultInjector:
     torn_plan: occurrences at which the failure should additionally leave
            a torn artifact ({"ckpt": (0,), "wal": (0,)}); consumed by the
            writer via ``torn(kind)`` *before* the matching ``fire``.
+    inject_plan: occurrences at which a corruption site should poison its
+           data in place of crashing ({"phi_nan": (2,)}); consumed via
+           ``inject(kind)`` — no exception is raised, the corruption is
+           expected to be CAUGHT downstream (by the health watchdog).
+    down_plan: {shard_id: probe_occurrence} — the shard stops answering
+           liveness probes from that occurrence on (persistent loss).
     """
 
     plan: Mapping[str, Iterable[int]] = dataclasses.field(default_factory=dict)
     torn_plan: Mapping[str, Iterable[int]] = dataclasses.field(
         default_factory=dict)
+    inject_plan: Mapping[str, Iterable[int]] = dataclasses.field(
+        default_factory=dict)
+    down_plan: Mapping[int, int] = dataclasses.field(default_factory=dict)
 
     def __post_init__(self):
         self._plan = {p: set(occ) for p, occ in dict(self.plan).items()}
         self._torn = {p: set(occ) for p, occ in dict(self.torn_plan).items()}
+        self._inject = {p: set(occ)
+                        for p, occ in dict(self.inject_plan).items()}
+        self._down = {int(s): int(t) for s, t in dict(self.down_plan).items()}
         self.counts: Dict[str, int] = {}
         self.fired: list = []          # [(point, occurrence), ...]
+        self.injected: list = []       # [(kind, occurrence), ...]
 
     def fire(self, point: str, note: Any = None) -> None:
         """Count one occurrence of ``point``; raise if the plan says so."""
@@ -95,10 +124,35 @@ class FaultInjector:
             return True
         return False
 
+    def inject(self, kind: str) -> bool:
+        """Should the current occurrence of corruption site ``kind`` poison
+        its data? Counts the occurrence and consumes the planned one — like
+        ``torn``, but no exception follows: the corruption is silent and
+        must be *detected* by the layer under test."""
+        i = self.counts.get(f"inject_{kind}", 0)
+        self.counts[f"inject_{kind}"] = i + 1
+        planned = self._inject.get(kind)
+        if planned and i in planned:
+            planned.discard(i)
+            self.injected.append((kind, i))
+            return True
+        return False
+
+    def probe_ok(self, shard: int) -> bool:
+        """Answer one liveness probe for ``shard`` (ids are the ORIGINAL
+        launch-time shard names — they stay stable across elastic
+        reconfigurations). A shard planned down at occurrence t misses
+        every probe from its t-th on: persistent loss, not a transient."""
+        i = self.counts.get(f"probe_{shard}", 0)
+        self.counts[f"probe_{shard}"] = i + 1
+        t = self._down.get(int(shard))
+        return t is None or i < t
+
     @property
     def pending(self) -> int:
         return sum(len(v) for v in self._plan.values()) + sum(
-            len(v) for v in self._torn.values())
+            len(v) for v in self._torn.values()) + sum(
+            len(v) for v in self._inject.values())
 
 
 class NullInjector(FaultInjector):
@@ -113,8 +167,65 @@ class NullInjector(FaultInjector):
     def torn(self, kind: str) -> bool:                     # noqa: D102
         return False
 
+    def inject(self, kind: str) -> bool:                   # noqa: D102
+        return False
+
+    def probe_ok(self, shard: int) -> bool:                # noqa: D102
+        return True
+
 
 NULL_INJECTOR = NullInjector()
+
+
+@dataclasses.dataclass
+class LivenessProbe:
+    """Consecutive-miss liveness detector over the walk shards.
+
+    Shards are tracked by their ORIGINAL launch-time ids (``names``) so an
+    injector's ``down_plan`` stays meaningful across elastic
+    reconfigurations that compact the dispatch id space. ``poll`` probes
+    every still-tracked shard once and returns the CURRENT dispatch ids of
+    shards that just crossed ``misses_to_dead`` consecutive misses —
+    exactly the ids ``StreamingEmbedPipeline.elastic_reconfigure``
+    expects. A successful probe resets the shard's miss counter, so a
+    transient hiccup shorter than the threshold never triggers a (costly,
+    irreversible) reconfiguration. After reacting, callers MUST call
+    ``remove(dispatch_id)`` so the probe's id space tracks the compacted
+    assignment.
+    """
+
+    num_shards: int
+    misses_to_dead: int = 2
+
+    def __post_init__(self):
+        self.names = list(range(self.num_shards))   # index = dispatch id
+        self.misses = [0] * self.num_shards
+        self.dead_names: list = []
+        self.probes = 0
+
+    def poll(self, faults: "FaultInjector" = NULL_INJECTOR) -> list:
+        """One probe sweep; returns newly-dead shards as dispatch ids,
+        in descending order (safe to reconfigure + ``remove`` one by one,
+        ids below a removed one are untouched)."""
+        newly_dead = []
+        self.probes += 1
+        for i, name in enumerate(self.names):
+            if faults.probe_ok(name):
+                self.misses[i] = 0
+                continue
+            self.misses[i] += 1
+            if self.misses[i] >= self.misses_to_dead:
+                newly_dead.append(i)
+        return sorted(newly_dead, reverse=True)
+
+    def remove(self, dispatch_id: int) -> int:
+        """Stop tracking a declared-dead shard; ids above it shift down by
+        one (matching ``mpgp.compact_assignment``). Returns the shard's
+        stable launch-time name."""
+        name = self.names.pop(dispatch_id)
+        self.misses.pop(dispatch_id)
+        self.dead_names.append(name)
+        return name
 
 
 @dataclasses.dataclass

@@ -1,0 +1,181 @@
+"""Training health watchdog: detect divergence, drive rollback + backoff.
+
+PR 6 made crashes survivable; a *silent* divergence — NaN from a bad
+reduction, a loss blow-up from an optimizer spike — survives every crash
+protocol because nothing crashes: the poisoned phi just keeps training and
+the damage shows up days later as a bad AUC. This module is the detection
+half of the self-healing loop (DESIGN.md §12):
+
+* ``core.dsgl.train_chunk_checked`` computes four scalar reductions inside
+  the training dispatch itself (non-finite counts over phi and the chunk
+  losses, the update Frobenius norm, the phi norm) — one extra host pull
+  per check, no extra dispatch;
+* ``HealthMonitor`` consumes them on the host at a deterministic cadence
+  (keyed off ``global_step``, so a rolled-back replay re-checks the same
+  windows), maintains loss / update-norm EMAs, and raises
+  ``DivergenceError`` on a non-finite observation or an EMA spike;
+* ``StreamingEmbedPipeline`` catches the error, restores the last
+  consistent snapshot IN PLACE, scales the learning rate down by
+  ``lr_backoff`` (persisted — a resumed process keeps the backoff), and
+  quarantines the offending ring slots by re-walking their roots under the
+  original round keys before resuming the run loop.
+
+Detection latency is bounded by ``check_every`` training steps; the
+monitor records it (steps between the last clean check and the detection)
+for the BENCH_recovery degraded-mode rows.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+
+class DivergenceError(RuntimeError):
+    """Training diverged; carries the triggering ``HealthReport``."""
+
+    def __init__(self, report: "HealthReport"):
+        super().__init__(
+            f"training divergence ({report.kind}) at step {report.step}: "
+            f"loss={report.loss:.4g} ema={report.loss_ema:.4g} "
+            f"nonfinite={report.nonfinite}")
+        self.report = report
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthReport:
+    """One divergence verdict: what tripped, where, and which ring slots
+    the diverging chunk was trained from (the quarantine set)."""
+
+    kind: str                   # "nonfinite" | "loss_spike" | "update_spike"
+    step: int                   # global_step AFTER the offending chunk
+    loss: float
+    loss_ema: float
+    nonfinite: int
+    update_norm: float
+    slots: np.ndarray           # ring slots gathered by the offending chunk
+    detection_steps: int        # steps since the previous clean check
+
+
+@dataclasses.dataclass
+class HealthConfig:
+    """Watchdog thresholds (DESIGN.md §12 lists the tuning rationale)."""
+
+    check_every: int = 1        # check cadence in GLOBAL STEPS (lifetimes);
+                                # a chunk is checked when it crosses a
+                                # multiple, so cadence survives replay
+    ema_beta: float = 0.8       # loss / update-norm EMA decay per check
+    spike_factor: float = 4.0   # loss > factor * EMA → divergence
+    update_spike_factor: float = 0.0   # same gate on update norm (0 = off,
+                                       # the norm is still tracked/reported)
+    warmup_checks: int = 3      # EMA burn-in before the spike gates arm
+    lr_backoff: float = 0.5     # lr multiplier applied per rollback
+    max_rollbacks: int = 3      # give up (re-raise) after this many
+
+
+@dataclasses.dataclass
+class HealthMonitor:
+    """Host-side divergence detector fed by ``train_chunk_checked``.
+
+    The monitor is pure bookkeeping — it never touches device state. The
+    pipeline owns the reaction (rollback / backoff / quarantine) and calls
+    ``note_rollback`` so ``report()`` carries the full healing history for
+    benchmarks and operators.
+    """
+
+    cfg: HealthConfig = dataclasses.field(default_factory=HealthConfig)
+
+    def __post_init__(self):
+        self.loss_ema: Optional[float] = None
+        self.update_ema: Optional[float] = None
+        self.checks = 0
+        self.detections: List[HealthReport] = []
+        self.rollbacks = 0
+        self.quarantined_slots = 0
+        self._last_check_step = 0
+
+    # -- cadence -----------------------------------------------------------
+    def due(self, global_step: int, count: int) -> bool:
+        """Should the chunk covering steps [global_step, global_step+count)
+        run through the checked path? Deterministic in ``global_step`` so a
+        rolled-back replay re-checks the exact same windows."""
+        ce = max(self.cfg.check_every, 1)
+        return (global_step // ce) != ((global_step + count) // ce)
+
+    # -- observation -------------------------------------------------------
+    def observe(self, stats: Dict[str, Any], *, step: int, count: int,
+                slots: np.ndarray) -> None:
+        """Digest one checked chunk's reductions; raise ``DivergenceError``
+        on a non-finite observation or an EMA spike.
+
+        ``stats`` are the device scalars of ``train_chunk_checked``;
+        ``count`` the chunk's step count (losses are normalized per step so
+        the EMA is chunk-size invariant); ``slots`` the ring slots the
+        chunk gathered (the quarantine candidates on divergence).
+        """
+        cfg = self.cfg
+        self.checks += 1
+        nonfinite = int(stats["nonfinite"]) + int(stats["loss_nonfinite"])
+        loss = float(stats["loss_sum"]) / max(count, 1)
+        update = float(stats["update_norm"])
+        detection_steps = step - self._last_check_step
+
+        kind = None
+        if nonfinite > 0:
+            kind = "nonfinite"
+        elif (self.loss_ema is not None
+                and self.checks > cfg.warmup_checks
+                and loss > cfg.spike_factor * max(self.loss_ema, 1e-12)):
+            kind = "loss_spike"
+        elif (cfg.update_spike_factor > 0
+                and self.update_ema is not None
+                and self.checks > cfg.warmup_checks
+                and np.isfinite(update)
+                and update > cfg.update_spike_factor
+                * max(self.update_ema, 1e-12)):
+            kind = "update_spike"
+
+        if kind is not None:
+            report = HealthReport(
+                kind=kind, step=step, loss=loss,
+                loss_ema=float(self.loss_ema or 0.0),
+                nonfinite=nonfinite, update_norm=update,
+                slots=np.asarray(slots), detection_steps=detection_steps)
+            self.detections.append(report)
+            raise DivergenceError(report)
+
+        # Clean check: fold into the EMAs, advance the detection clock.
+        b = cfg.ema_beta
+        self.loss_ema = (loss if self.loss_ema is None
+                         else b * self.loss_ema + (1 - b) * loss)
+        if np.isfinite(update):
+            self.update_ema = (update if self.update_ema is None
+                               else b * self.update_ema + (1 - b) * update)
+        self._last_check_step = step
+
+    # -- healing bookkeeping (called by the pipeline) ----------------------
+    def note_rollback(self, *, restored_step: int, lr_scale: float,
+                      quarantined: int) -> None:
+        self.rollbacks += 1
+        self.quarantined_slots += int(quarantined)
+        # Replay restarts below the EMA's reference point; reset the
+        # detection clock so latency accounting stays truthful.
+        self._last_check_step = restored_step
+
+    def exhausted(self) -> bool:
+        return self.rollbacks >= self.cfg.max_rollbacks
+
+    def report(self) -> Dict[str, Any]:
+        """Operator/benchmark summary of the watchdog's run."""
+        return {
+            "checks": self.checks,
+            "detections": len(self.detections),
+            "rollbacks": self.rollbacks,
+            "quarantined_slots": self.quarantined_slots,
+            "loss_ema": self.loss_ema,
+            "update_ema": self.update_ema,
+            "detection_kinds": [d.kind for d in self.detections],
+            "detection_steps": [d.detection_steps for d in self.detections],
+        }

@@ -33,10 +33,27 @@ Bounded staleness: ``staleness()`` accounts appended-vs-applied sequence
 numbers and pending churn volume; ``IngestConfig.max_pending_edges`` turns
 the bound into backpressure (a submit that crosses it forces a refresh
 instead of letting the embedding drift arbitrarily far behind the graph).
+
+SLO-driven degradation (DESIGN.md §12): ``IngestConfig.staleness_slo_s``
+sets a wall-clock deadline per batch — submit → applied within that many
+seconds. Each drain picks the cheapest refresh mode that (predicted by a
+per-mode wall-clock EMA, with headroom) still fits the oldest pending
+batch's remaining budget: ``full`` → ``no_finetune`` (exact walks, phi
+lags) → ``detect_only`` (graph adoption + affected-set detection only;
+the affected roots accumulate as DEBT and are re-walked by the next
+non-degraded drain). Per-batch submit→applied latency percentiles, the
+chosen modes, SLO violations and outstanding debt are all surfaced
+through ``staleness()``.
+
+Admission control: ``submit`` validates batches
+(``graph.delta.validate_edge_batch``) BEFORE the WAL append — a
+malformed batch (out-of-range ids, NaN weights) must be rejected at the
+door, not become durable and crash every replay of the log.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import io
 import os
@@ -49,7 +66,7 @@ import numpy as np
 
 from repro.ckpt.checkpoint import read_meta
 from repro.common.logging import get_logger, log_context
-from repro.graph.delta import EdgeBatch
+from repro.graph.delta import EdgeBatch, validate_edge_batch
 from repro.runtime.faults import FaultInjector, NULL_INJECTOR
 
 log = get_logger("repro.runtime.ingest")
@@ -163,6 +180,14 @@ class IngestConfig:
     backoff_s: float = 0.05         # exponential: backoff_s * 2**attempt
     snapshot_dir: str = "snapshots"
     wal_name: str = "wal.log"
+    # -- admission control (validate BEFORE the WAL append) -----------------
+    validate: bool = True
+    self_loop_policy: str = "drop"        # "drop" | "forbid" | "allow"
+    duplicate_policy: str = "allow"       # same choices, within-batch dups
+    # -- staleness SLO / degrade ladder (DESIGN.md §12) ---------------------
+    staleness_slo_s: Optional[float] = None   # submit->applied deadline
+    slo_headroom: float = 1.5       # mode fits if ema * headroom <= budget
+    latency_window: int = 64        # submit->applied percentile history
 
 
 class IngestDriver:
@@ -181,6 +206,7 @@ class IngestDriver:
                  refresh_kwargs: Optional[Dict[str, Any]] = None,
                  faults: FaultInjector = NULL_INJECTOR,
                  sleep: Callable[[float], None] = time.sleep,
+                 clock: Callable[[], float] = time.monotonic,
                  _initial_snapshot: bool = True):
         from repro.core.incremental import IncrementalRefresh
 
@@ -190,6 +216,7 @@ class IngestDriver:
         self.refresh_kwargs = dict(refresh_kwargs or {})
         self.faults = faults
         self.sleep = sleep
+        self.clock = clock
         self.pipeline = pipeline
         self.refresher = IncrementalRefresh(pipeline, detect=detect)
         self.ckpt_dir = os.path.join(root, cfg.snapshot_dir)
@@ -199,6 +226,15 @@ class IngestDriver:
         self._pending: List[Tuple[int, EdgeBatch]] = []
         self.drains = 0
         self.retries = 0
+        # SLO / degrade-ladder state (DESIGN.md §12)
+        self._submit_t: Dict[int, float] = {}
+        self._latencies = collections.deque(maxlen=max(cfg.latency_window,
+                                                       1))
+        self._wall_ema: Dict[str, float] = {}
+        self.mode_counts = {"full": 0, "no_finetune": 0, "detect_only": 0}
+        self.last_mode: Optional[str] = None
+        self.slo_violations = 0
+        self._debt: Optional[np.ndarray] = None   # deferred affected roots
         if _initial_snapshot:
             # The recovery base: a driver must never hold churn the WAL
             # covers without a snapshot to replay it against.
@@ -207,11 +243,21 @@ class IngestDriver:
     # -- ingress -----------------------------------------------------------
     def submit(self, batch: EdgeBatch) -> int:
         """Durably accept one churn batch; absorb when the cadence or the
-        staleness bound says so. Returns the batch's WAL sequence number."""
+        staleness bound says so. Returns the batch's WAL sequence number.
+
+        Validation happens BEFORE the WAL append: a rejected batch raises
+        ``ValueError`` and leaves no trace — neither the log nor the seq
+        counter advances."""
+        if self.cfg.validate:
+            batch = validate_edge_batch(
+                batch, self.pipeline.graph.num_nodes,
+                self_loops=self.cfg.self_loop_policy,
+                duplicates=self.cfg.duplicate_policy)
         seq = self.appended_seq + 1
         self.wal.append(seq, batch, faults=self.faults)
         self.appended_seq = seq
         self._pending.append((seq, batch))
+        self._submit_t[seq] = self.clock()
         self.faults.fire("wal_append", seq)
         over_staleness = (
             self.cfg.max_pending_edges is not None
@@ -225,7 +271,16 @@ class IngestDriver:
 
     def staleness(self) -> Dict[str, Any]:
         """Bounded-staleness accounting: how far the served embedding lags
-        the accepted churn."""
+        the accepted churn — sequence lag, wall-clock lag (submit→applied
+        latency percentiles, oldest pending age vs the SLO), degrade-mode
+        history and outstanding detect-only debt."""
+        lat = np.asarray(self._latencies, np.float64)
+        pct = {
+            f"latency_p{q}_s": (float(np.percentile(lat, q))
+                                if lat.size else None)
+            for q in (50, 90, 99)}
+        oldest = (self._submit_t.get(self._pending[0][0])
+                  if self._pending else None)
         return {
             "appended_seq": self.appended_seq,
             "applied_seq": self.applied_seq,
@@ -235,6 +290,16 @@ class IngestDriver:
             "graph_version": self._graph_version(),
             "drains": self.drains,
             "retries": self.retries,
+            **pct,
+            "oldest_pending_age_s": (self.clock() - oldest
+                                     if oldest is not None else None),
+            "staleness_slo_s": self.cfg.staleness_slo_s,
+            "slo_violations": self.slo_violations,
+            "last_mode": self.last_mode,
+            "mode_counts": dict(self.mode_counts),
+            "debt_roots": (int(self._debt.sum())
+                           if self._debt is not None else 0),
+            "wall_ema_s": dict(self._wall_ema),
         }
 
     def _graph_version(self) -> int:
@@ -242,35 +307,85 @@ class IngestDriver:
         return int(graph_version(self.pipeline.graph))
 
     # -- absorption --------------------------------------------------------
+    def _choose_mode(self) -> str:
+        """Pick the cheapest refresh mode that still fits the oldest
+        pending batch's remaining SLO budget (predicted by the per-mode
+        wall EMA with headroom). No SLO → always full. A mode never run
+        has no EMA and is optimistically assumed to fit — the ladder needs
+        one measurement before it can shed. A blown budget sheds straight
+        to detect_only (the deadline is already lost; spend the least)."""
+        cfg = self.cfg
+        if cfg.staleness_slo_s is None or not self._pending:
+            return "full"
+        oldest = self._submit_t.get(self._pending[0][0])
+        if oldest is None:                      # recovered batch: no clock
+            return "full"
+        budget = cfg.staleness_slo_s - (self.clock() - oldest)
+        if budget <= 0:
+            return "detect_only"
+        for mode in ("full", "no_finetune", "detect_only"):
+            ema = self._wall_ema.get(mode)
+            if ema is None or ema * cfg.slo_headroom <= budget:
+                return mode
+        return "detect_only"
+
     def drain(self) -> Optional[Any]:
         """Absorb all pending batches: apply → refresh (bounded retry with
-        restore-from-snapshot between attempts) → snapshot → truncate."""
+        restore-from-snapshot between attempts) → snapshot → truncate.
+        The refresh runs at the degrade-ladder mode the SLO budget allows;
+        a detect-only drain banks its affected roots as debt, paid (as
+        ``extra_affected``) by the next non-degraded drain."""
         if not self._pending:
             return None
         batches = list(self._pending)
         last_seq = batches[-1][0]
+        mode = self._choose_mode()
         with log_context(applied_seq=self.applied_seq, target_seq=last_seq,
-                         graph_version=self._graph_version()):
-            stats = self._apply_with_retry(batches)
+                         graph_version=self._graph_version(), mode=mode):
+            stats = self._apply_with_retry(batches, mode)
             self.applied_seq = last_seq
             self._pending = []
             self._snapshot()
             self.wal.truncate_upto(self.applied_seq)
             self.drains += 1
-            log.info("drained %d batches (%d edges) in refresh: "
+            now = self.clock()
+            for seq, _ in batches:
+                t = self._submit_t.pop(seq, None)
+                if t is None:
+                    continue
+                self._latencies.append(now - t)
+                if (self.cfg.staleness_slo_s is not None
+                        and now - t > self.cfg.staleness_slo_s):
+                    self.slo_violations += 1
+            self.mode_counts[mode] += 1
+            self.last_mode = mode
+            wall = float(getattr(stats, "wall_s", 0.0))
+            prev = self._wall_ema.get(mode)
+            self._wall_ema[mode] = (wall if prev is None
+                                    else 0.5 * prev + 0.5 * wall)
+            if mode == "detect_only":
+                m = np.asarray(self.refresher.last_affected_mask, bool)
+                self._debt = m.copy() if self._debt is None \
+                    else (self._debt | m)
+            else:
+                self._debt = None        # paid via extra_affected
+            log.info("drained %d batches (%d edges) in %s refresh: "
                      "affected=%s wall=%.3fs", len(batches),
-                     sum(b.num_changes for _, b in batches),
+                     sum(b.num_changes for _, b in batches), mode,
                      getattr(stats, "affected", "?"),
                      getattr(stats, "wall_s", float("nan")))
         return stats
 
-    def _apply_with_retry(self, batches) -> Any:
+    def _apply_with_retry(self, batches, mode: str = "full") -> Any:
         cfg = self.cfg
+        extra = self._debt if mode != "detect_only" else None
         for attempt in range(cfg.max_retries + 1):
             try:
                 for _, b in batches:
                     self.refresher.apply_updates(b)
                 return self.refresher.refresh(faults=self.faults,
+                                              mode=mode,
+                                              extra_affected=extra,
                                               **self.refresh_kwargs)
             except Exception as e:
                 # A failed refresh may have spliced part of the ring /
@@ -309,7 +424,8 @@ class IngestDriver:
                 cfg: IngestConfig = IngestConfig(),
                 refresh_kwargs: Optional[Dict[str, Any]] = None,
                 faults: FaultInjector = NULL_INJECTOR,
-                sleep: Callable[[float], None] = time.sleep
+                sleep: Callable[[float], None] = time.sleep,
+                clock: Callable[[], float] = time.monotonic
                 ) -> "IngestDriver":
         """Rebuild a driver after a crash: newest valid snapshot + WAL tail.
 
@@ -329,7 +445,7 @@ class IngestDriver:
             ckpt_dir, policy, spec, dsgl_cfg, step=step)
         driver = cls(root, pipeline, detect=detect, cfg=cfg,
                      refresh_kwargs=refresh_kwargs, faults=faults,
-                     sleep=sleep, _initial_snapshot=False)
+                     sleep=sleep, clock=clock, _initial_snapshot=False)
         driver.applied_seq = int(meta.get("applied_seq", 0))
         tail, _ = driver.wal.replay(after_seq=driver.applied_seq)
         driver.appended_seq = (tail[-1][0] if tail else driver.applied_seq)

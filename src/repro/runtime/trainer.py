@@ -331,7 +331,7 @@ class StreamingEmbedPipeline:
     def __init__(self, graph, policy, spec, rounds_cfg: Dict, dsgl_cfg,
                  *, assignment: Optional[np.ndarray] = None,
                  num_shards: int = 1, walker_batch: int = 4096,
-                 overlap: bool = True):
+                 overlap: bool = True, health=None):
         from repro.core.corpus import CorpusRing
         from repro.core.dsgl import init_embeddings
         from repro.core.termination import WalkCountController
@@ -343,10 +343,23 @@ class StreamingEmbedPipeline:
         self.spec = spec
         self.cfg = dsgl_cfg
         self.num_shards = max(num_shards, 1)
+        # Walk-dispatch shard count. It starts equal to the DSGL replica
+        # count but the two are independent degrees of freedom: elastic
+        # reconfiguration drops walk_shards to k-1 when a shard dies while
+        # the (S, N, d) replica stack — a TRAINING ensemble choice baked
+        # into phi's shape — stays at S.
+        self.walk_shards = self.num_shards
         self.assignment = (None if assignment is None
                            else jnp.asarray(assignment, jnp.int32))
         self.walker_batch = walker_batch
         self.overlap = overlap
+        # Self-healing runtime state (DESIGN.md §12): the optional health
+        # watchdog, the divergence-rollback lr multiplier (persisted — a
+        # backed-off run resumes backed off), and the elastic-reconfig log.
+        self.health = health
+        self._lr_scale = 1.0
+        self._reconfigs: list = []
+        self._faults: FaultInjector = NULL_INJECTOR
         self.controller = WalkCountController(**rounds_cfg)
         self.degrees = np.asarray(graph.degrees(), dtype=np.int64)
 
@@ -406,6 +419,7 @@ class StreamingEmbedPipeline:
         self._ckpt_root: Optional[str] = None
         self._ckpt_every = 0
         self._ckpt_tick = 0
+        self._ckpt_keep: Optional[int] = None
 
     # --- walk side --------------------------------------------------------
     def _run_round(self, r: int, sources: Optional[np.ndarray] = None,
@@ -439,7 +453,7 @@ class StreamingEmbedPipeline:
             pairs.append((chunk, run_walk_batch(
                 self.graph, jnp.asarray(chunk, jnp.int32), k, self.policy,
                 self.spec, self.assignment,
-                num_shards=self.num_shards if self.assignment is not None
+                num_shards=self.walk_shards if self.assignment is not None
                 else None)))
         return pairs
 
@@ -462,16 +476,20 @@ class StreamingEmbedPipeline:
 
     # --- train side -------------------------------------------------------
     def _lrs(self, count: int) -> jnp.ndarray:
+        # _lr_scale is the divergence-rollback backoff multiplier (1.0
+        # until the watchdog ever trips; exact-1.0 multiply is bit-neutral).
         if self._ft is not None:
             start, total, lr0 = self._ft     # fine-tune mini-schedule
             fracs = (self.global_step - start + np.arange(count)) / max(
                 total, 1)
             return jnp.asarray(
-                np.maximum(lr0 * (1.0 - fracs), self.cfg.min_lr),
+                np.maximum(lr0 * self._lr_scale * (1.0 - fracs),
+                           self.cfg.min_lr),
                 jnp.float32)
         fracs = (self.global_step + np.arange(count)) / max(self.total_steps, 1)
         return jnp.asarray(
-            np.maximum(self.cfg.lr * (1.0 - fracs), self.cfg.min_lr),
+            np.maximum(self.cfg.lr * self._lr_scale * (1.0 - fracs),
+                       self.cfg.min_lr),
             jnp.float32)
 
     def _train_slots(self, base: int, pool: int, ocn_host: np.ndarray,
@@ -482,7 +500,9 @@ class StreamingEmbedPipeline:
         tail) reuse one alias-table/argsort build across calls instead of
         redoing the O(N) host work per iteration."""
         from repro.core.corpus import FrequencyOrder
-        from repro.core.dsgl import build_alias_table, train_chunk
+        from repro.core.dsgl import (
+            build_alias_table, train_chunk, train_chunk_checked,
+        )
         from repro.core.sync import sample_hotness_rows
         from repro.data.pipeline import ring_chunk_indices
 
@@ -518,17 +538,42 @@ class StreamingEmbedPipeline:
                 rows = jnp.zeros(0, jnp.int32)
             ck2 = jax.random.fold_in(self.key_train, 2 * self.total_steps
                                      + self.global_step)
-            self.phi_in, self.phi_out, _ = train_chunk(
-                self.phi_in, self.phi_out, wb, table, rows, ck2,
-                self._lrs(count), cfg.window, cfg.negatives,
-                cfg.use_kernel, sync_now)
+            lrs = self._lrs(count)
+            # Divergence corruption sites (watchdog tests/chaos sweeps):
+            # poison a few phi rows with NaN, or blow the chunk lr up —
+            # both produce REAL divergences for the watchdog to catch.
+            if self._faults.inject("phi_nan"):
+                self.phi_in = self.phi_in.at[:, :4, :].set(jnp.nan)
+            if self._faults.inject("lr_spike"):
+                lrs = lrs * 1e4
+            check = (self.health is not None
+                     and self.health.due(self.global_step, count))
+            if check:
+                self.phi_in, self.phi_out, _, hs = train_chunk_checked(
+                    self.phi_in, self.phi_out, wb, table, rows, ck2,
+                    lrs, cfg.window, cfg.negatives,
+                    cfg.use_kernel, sync_now)
+            else:
+                self.phi_in, self.phi_out, _ = train_chunk(
+                    self.phi_in, self.phi_out, wb, table, rows, ck2,
+                    lrs, cfg.window, cfg.negatives,
+                    cfg.use_kernel, sync_now)
             self.global_step += count
             done += count
+            if check:
+                # One host pull of 5 scalars; raises DivergenceError on a
+                # verdict — run()'s heal loop owns the reaction.
+                self.health.observe(
+                    {k: v for k, v in hs.items()},
+                    step=self.global_step, count=count,
+                    slots=np.unique(np.asarray(idx)))
 
     # --- driver -----------------------------------------------------------
     def run(self, *, ckpt_root: Optional[str] = None,
             ckpt_every_rounds: int = 0,
-            faults: FaultInjector = NULL_INJECTOR) -> Dict[str, Any]:
+            ckpt_keep: Optional[int] = None,
+            faults: FaultInjector = NULL_INJECTOR,
+            liveness=None) -> Dict[str, Any]:
         """Run (or CONTINUE, after ``resume``) the walk→train lifecycle.
 
         The loop is a state machine over persisted cursors (see ``save``):
@@ -543,13 +588,47 @@ class StreamingEmbedPipeline:
         remaining rounds/chunks bit-identically to the uninterrupted one.
 
         ``ckpt_root``/``ckpt_every_rounds`` enable periodic snapshots (one
-        every N round/tail iterations plus a final one); ``faults`` is the
-        injection harness (production default never fires).
+        every N round/tail iterations plus a final one); ``ckpt_keep``
+        bounds retention (older snapshots are pruned after each commit);
+        ``faults`` is the injection harness (production default never
+        fires).
+
+        Self-healing (DESIGN.md §12): when a ``HealthMonitor`` is attached
+        the training chunks run watchdog reductions at its cadence, and a
+        divergence verdict rolls the pipeline back to the last consistent
+        snapshot, backs the learning rate off, quarantines (re-walks) the
+        offending ring slots, and re-enters this state machine — bounded
+        by ``HealthConfig.max_rollbacks``. When a ``LivenessProbe`` is
+        passed, every round boundary polls shard liveness and a
+        persistently-dead walk shard triggers ``elastic_reconfigure``
+        (continue at k-1 shards) instead of stalling the round.
         """
-        from repro.core.info import relative_entropy_dpq
+        from repro.runtime.health import DivergenceError
 
         t0 = time.perf_counter()
         self._ckpt_root, self._ckpt_every = ckpt_root, ckpt_every_rounds
+        self._ckpt_keep = ckpt_keep
+        self._faults = faults
+        try:
+            if (self.health is not None and ckpt_root
+                    and latest_step(ckpt_root) is None):
+                # The watchdog needs a rollback base before the first
+                # divergence can possibly be detected.
+                self.save(ckpt_root, faults=faults)
+            while True:
+                try:
+                    result = self._run_phases(faults, liveness)
+                    break
+                except DivergenceError as err:
+                    self._heal_divergence(err, faults)
+        finally:
+            self._faults = NULL_INJECTOR
+        result["wall_s"] = time.perf_counter() - t0
+        return result
+
+    def _run_phases(self, faults: FaultInjector, liveness) -> Dict[str, Any]:
+        from repro.core.info import relative_entropy_dpq
+
         n = len(self.sources)
         if self._phase == "rounds":
             if self._rounds_walked == 0:
@@ -559,6 +638,7 @@ class StreamingEmbedPipeline:
                 r = self._trained_rounds
                 with log_context(round=r):
                     faults.fire("round", r)
+                    self._poll_liveness(liveness, faults)
                     ocn_host = np.asarray(self.ring.ocn)  # per-round sync
                     cont = self.controller.update_d(
                         relative_entropy_dpq(self.degrees, ocn_host))
@@ -605,9 +685,8 @@ class StreamingEmbedPipeline:
                 self._maybe_snapshot(faults)
             jax.block_until_ready(self.phi_in)
             self._phase = "done"
-            if ckpt_root and ckpt_every_rounds:
-                self.save(ckpt_root, faults=faults)     # final snapshot
-        wall = time.perf_counter() - t0
+            if self._ckpt_root and self._ckpt_every:
+                self.save(self._ckpt_root, faults=faults)   # final snapshot
 
         phi_in, phi_out = self.embeddings(as_numpy=False)
         stats = {k: float(v) for k, v in self._stats.items()}
@@ -618,9 +697,12 @@ class StreamingEmbedPipeline:
             "phi_in": phi_in, "phi_out": phi_out,
             "rounds": self.controller.rounds,
             "steps": self.global_step,
-            "wall_s": wall,
             "ring": self.ring,
             "stats": stats,
+            "health": (self.health.report()
+                       if self.health is not None else None),
+            "reconfigs": list(self._reconfigs),
+            "lr_scale": float(self._lr_scale),
         }
 
     # --- crash-consistent snapshots (DESIGN.md §11) ------------------------
@@ -684,6 +766,8 @@ class StreamingEmbedPipeline:
             "rounds_cfg": self._rounds_cfg,
             "total_steps": int(self.total_steps),
             "num_shards": int(self.num_shards),
+            "walk_shards": int(self.walk_shards),
+            "lr_scale": float(self._lr_scale),
             "walker_batch": int(self.walker_batch),
             "overlap": bool(self.overlap),
             "graph_version": int(graph_version(self.graph)),
@@ -702,6 +786,9 @@ class StreamingEmbedPipeline:
             log.info("snapshot %d committed at %s (phase=%s step=%d)",
                      self._ckpt_seq, path, self._phase, self.global_step)
         self._ckpt_seq += 1
+        if self._ckpt_keep:
+            from repro.ckpt.checkpoint import prune_steps
+            prune_steps(root, self._ckpt_keep)
         return path
 
     @classmethod
@@ -709,7 +796,8 @@ class StreamingEmbedPipeline:
                step: Optional[int] = None,
                rounds_cfg: Optional[Dict] = None,
                walker_batch: Optional[int] = None,
-               overlap: Optional[bool] = None) -> "StreamingEmbedPipeline":
+               overlap: Optional[bool] = None,
+               health=None) -> "StreamingEmbedPipeline":
         """Rebuild a pipeline from the newest VALID snapshot under ``root``
         (or an explicit ``step``) and re-enter its exact cursor state.
 
@@ -747,7 +835,8 @@ class StreamingEmbedPipeline:
             walker_batch=(walker_batch if walker_batch is not None
                           else int(meta["walker_batch"])),
             overlap=(overlap if overlap is not None
-                     else bool(meta["overlap"])))
+                     else bool(meta["overlap"])),
+            health=health)
         ring = ring_import({k: arrays[f"ring/{k}"] for k in
                             ("walks", "lengths", "ocn", "cursor", "total")})
         if ring.capacity != pipe.ring.capacity:
@@ -771,6 +860,9 @@ class StreamingEmbedPipeline:
         pipe._rounds_walked = int(meta["rounds_walked"])
         pipe._trained_rounds = int(meta["trained_rounds"])
         pipe._phase = meta["phase"]
+        # Self-healing cursors (absent in pre-watchdog snapshots).
+        pipe.walk_shards = int(meta.get("walk_shards", meta["num_shards"]))
+        pipe._lr_scale = float(meta.get("lr_scale", 1.0))
         pipe._ckpt_seq = step_loaded + 1
         log.info("resumed pipeline from %s snapshot %d "
                  "(phase=%s round=%d step=%d)", root, step_loaded,
@@ -888,6 +980,149 @@ class StreamingEmbedPipeline:
             "rounds_resident": int(rounds),
             "wall_s": float(time.perf_counter() - t0),
         }
+
+    # --- self-healing runtime (DESIGN.md §12) ------------------------------
+    def _heal_divergence(self, err, faults: FaultInjector) -> None:
+        """React to a watchdog verdict: roll back to the last consistent
+        snapshot, back the learning rate off, quarantine the offending ring
+        slots, and let ``run`` re-enter the state machine.
+
+        The quarantine re-walks the roots whose slots fed the diverging
+        chunk under their ORIGINAL round keys — on a clean ring this is a
+        bit-identical no-op (vertex-keyed RNG), and if the divergence was
+        seeded by corrupt walk data the regenerated slots heal it, so the
+        replay cannot deterministically re-diverge on the same poison. The
+        backoff handles the other deterministic-replay hazard (a genuine
+        optimizer blow-up at this lr). Re-raises when no snapshot root is
+        configured or ``max_rollbacks`` is exhausted — then the supervisor
+        (``run_with_restarts``) is the right layer.
+        """
+        report = err.report
+        mon = self.health
+        if not self._ckpt_root or mon is None or mon.exhausted():
+            raise err
+        # Resolve slots → roots BEFORE restoring: the snapshot's slot map
+        # may predate the rounds the diverging chunk trained on.
+        roots = self._slot_root[report.slots]
+        roots = np.unique(roots[roots >= 0])
+        self._restore_in_place()
+        self._lr_scale *= mon.cfg.lr_backoff
+        quarantined = 0
+        if self.spec.rng_mode == "vertex" and len(roots):
+            mask = np.zeros(len(self.sources), bool)
+            mask[roots] = True
+            quarantined, _ = self._rewalk_resident(mask, faults)
+        mon.note_rollback(restored_step=self.global_step,
+                          lr_scale=self._lr_scale, quarantined=quarantined)
+        log.warning(
+            "divergence (%s) at step %d: rolled back to step %d, lr scale "
+            "now %.3g, quarantined %d resident walks",
+            report.kind, report.step, self.global_step, self._lr_scale,
+            quarantined)
+
+    def _restore_in_place(self) -> int:
+        """Adopt the newest valid snapshot's state into THIS object (the
+        in-place form of ``resume`` — run-loop wiring like the watchdog,
+        checkpoint config and reconfig log survive the rollback). Returns
+        the restored global step."""
+        q = StreamingEmbedPipeline.resume(
+            self._ckpt_root, self.policy, self.spec, self.cfg)
+        keep = {k: self.__dict__[k] for k in (
+            "health", "_ckpt_root", "_ckpt_every", "_ckpt_keep",
+            "_faults", "_reconfigs")}
+        self.__dict__.update(q.__dict__)
+        self.__dict__.update(keep)
+        return self.global_step
+
+    def _poll_liveness(self, liveness, faults: FaultInjector) -> None:
+        """Round-boundary probe sweep: a persistently-dead walk shard is
+        reassigned to the survivors instead of stalling the BSP round.
+        A snapshot lands right after a reconfiguration (when checkpointing
+        is on) so a later divergence rollback can never resurrect a dead
+        shard's assignment."""
+        if liveness is None:
+            return
+        for dead in liveness.poll(faults):
+            name = liveness.names[dead]
+            log.warning(
+                "walk shard %d (launch id %d) missed %d consecutive "
+                "liveness probes — reconfiguring elastically",
+                dead, name, liveness.misses_to_dead)
+            stats = self.elastic_reconfigure(dead, faults=faults)
+            stats["launch_id"] = int(name)
+            liveness.remove(dead)
+            if self._ckpt_root and (self._ckpt_every or self.health):
+                self.save(self._ckpt_root, faults=faults)
+
+    def elastic_reconfigure(self, dead_shard: int, *,
+                            faults: FaultInjector = NULL_INJECTOR
+                            ) -> Dict[str, Any]:
+        """Continue at k-1 walk shards after a persistent shard loss.
+
+        The dead shard's vertices re-enter the MPGP stream (highest degree
+        first) and are assigned to the SURVIVING partitions by the same
+        Eq. 14/15 argmax that placed them originally; the partition-local
+        CSR store is rebuilt with the untouched survivors' slices reused
+        (``graph.csr.reassign_partitioned_csr``); and the dead shard's
+        resident walker fragments migrate by re-walking their roots under
+        the original round keys — bit-identical to what the lost shard had
+        produced, because vertex-keyed walks are invariant to the shard
+        count (the engine's k-invariance contract). Walks rooted at
+        surviving shards' vertices are never touched, so the ring — and
+        the embedding — stays on the fault-free trajectory.
+
+        The DSGL replica count (phi's leading axis) is NOT changed: it is
+        a training ensemble choice, not a walk-dispatch property.
+        """
+        from repro.core.mpgp import compact_assignment, reassign_dead_shard
+        from repro.core.shard_engine import reconfigure_partitions
+
+        if self.assignment is None:
+            raise ValueError(
+                "elastic reconfiguration needs a shard assignment")
+        if self.spec.rng_mode != "vertex":
+            raise ValueError(
+                "elastic reconfiguration requires WalkSpec.rng_mode="
+                "'vertex' (walker-fragment migration re-walks under the "
+                "original round keys)")
+        k = self.walk_shards
+        if not 0 <= dead_shard < k:
+            raise ValueError(f"dead shard {dead_shard} not in [0, {k})")
+        if k <= 1:
+            raise ValueError("cannot reconfigure away the last walk shard")
+        t0 = time.perf_counter()
+        old_asn = np.asarray(self.assignment)
+        orphan_mask = old_asn == dead_shard
+        new_full = reassign_dead_shard(self.graph, old_asn, dead_shard,
+                                       num_parts=k, tau_weight="degree")
+        compacted, old_of_new = compact_assignment(new_full, dead_shard,
+                                                   num_parts=k)
+        eng = reconfigure_partitions(
+            self.graph, old_asn, compacted, k - 1,
+            old_of_new=old_of_new, key_obj=self.graph)
+        self.assignment = jnp.asarray(compacted, jnp.int32)
+        self.walk_shards = k - 1
+        rewalk, rounds = self._rewalk_resident(orphan_mask, faults)
+        jax.block_until_ready(self.ring.walks)
+        stats = {
+            "dead_shard": int(dead_shard),
+            "walk_shards": int(self.walk_shards),
+            "moved_roots": int(orphan_mask.sum()),
+            "moved_frac": float(orphan_mask.mean()),
+            "rewalk_walks": int(rewalk),
+            "rounds_resident": int(rounds),
+            "reused_shards": int(eng["reused_shards"]),
+            "rebuilt_shards": int(eng["rebuilt_shards"]),
+            "wall_s": float(time.perf_counter() - t0),
+        }
+        self._reconfigs.append(stats)
+        with log_context(shard=dead_shard):
+            log.info(
+                "elastic reconfiguration: %d orphan roots -> %d survivors "
+                "(%d/%d slices reused), %d resident walks migrated in "
+                "%.3fs", stats["moved_roots"], self.walk_shards,
+                stats["reused_shards"], k - 1, rewalk, stats["wall_s"])
+        return stats
 
     def refresh(self, new_graph, affected_mask: np.ndarray, *,
                 fine_tune_steps: Optional[int] = None,
@@ -1008,3 +1243,20 @@ class StreamingEmbedPipeline:
             "fine_tune_steps": int(ft),
             "wall_s": float(time.perf_counter() - t0),
         }
+
+    def adopt_graph(self, new_graph) -> None:
+        """Detector-only degraded refresh (DESIGN.md §12): adopt the
+        mutated topology — so future walks, reconfigurations and snapshots
+        see the true graph — WITHOUT re-walking or fine-tuning. The ring
+        keeps its stale walks; the caller (the SLO-driven ingest ladder)
+        carries the affected-root set as debt and pays it on the next
+        non-degraded refresh."""
+        if new_graph.num_nodes != len(self.sources):
+            raise ValueError(
+                f"adopt_graph cannot change the vertex set "
+                f"({new_graph.num_nodes} != {len(self.sources)})")
+        if (getattr(self.policy, "needs_edge_cm", False)
+                and new_graph.edge_cm is None):
+            new_graph = new_graph.with_edge_cm()
+        self.graph = new_graph
+        self.degrees = np.asarray(new_graph.degrees(), dtype=np.int64)

@@ -1,0 +1,564 @@
+"""Self-healing runtime tests (DESIGN.md §12).
+
+Three healing loops under test, each with its own determinism contract:
+
+* watchdog — a divergence (injected NaN / lr spike) is DETECTED within the
+  check cadence, the pipeline rolls back to the last consistent snapshot,
+  backs the lr off and quarantines the poisoned ring slots; with
+  ``lr_backoff=1.0`` the healed run is BIT-IDENTICAL to a fault-free run
+  (replay determinism is the rollback correctness proof);
+* elastic — a permanently dead walk shard is reassigned to survivors
+  mid-run and, because walk RNG is vertex-keyed (shard-count invariant),
+  the ring and final phi stay bit-identical to the fault-free k-shard run;
+* ingest SLO — under deadline pressure the driver degrades (full →
+  no_finetune → detect_only), carries the skipped re-walk as debt, and
+  pays it on the next non-degraded drain.
+
+The chaos sweep at the end composes all three under a randomized,
+seed-logged fault schedule (CI nightly runs it with REPRO_CHAOS_SEED).
+"""
+
+import dataclasses
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.core.api import EmbedConfig, make_walk_plan
+from repro.core.dsgl import DSGLConfig
+from repro.core.mpgp import (compact_assignment, mpgp_partition,
+                             reassign_dead_shard)
+from repro.graph.csr import (build_partitioned_csr, reassign_partitioned_csr)
+from repro.graph.delta import EdgeBatch, validate_edge_batch
+from repro.graph.generators import rmat_graph
+from repro.runtime.faults import FaultInjector, LivenessProbe
+from repro.runtime.health import (DivergenceError, HealthConfig,
+                                  HealthMonitor)
+from repro.runtime.ingest import IngestConfig, IngestDriver
+from repro.runtime.trainer import StreamingEmbedPipeline
+
+
+def _plan(seed=3, dim=16):
+    cfg = dataclasses.replace(EmbedConfig(dim=dim, seed=seed),
+                              rng_mode="vertex")
+    policy, spec, rounds = make_walk_plan(cfg)
+    return policy, spec, rounds, DSGLConfig(dim=dim, seed=seed)
+
+
+def _pipeline(graph, **kw):
+    policy, spec, rounds, dsgl = _plan()
+    return StreamingEmbedPipeline(graph, policy, spec, rounds, dsgl, **kw)
+
+
+def _batches(n, seed, num_nodes=128, k=6):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        e = rng.integers(0, num_nodes, size=(k, 2))
+        out.append(EdgeBatch(insert=e[e[:, 0] != e[:, 1]]))
+    return out
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return rmat_graph(128, 7, seed=7)
+
+
+@pytest.fixture(scope="module")
+def reference(graph):
+    """Fault-free single-dispatch run: bit-identity target."""
+    p = _pipeline(graph)
+    p.run()
+    phi_in, phi_out = p.embeddings()
+    return {"pipe": p, "phi_in": phi_in, "phi_out": phi_out,
+            "walks": np.asarray(p.ring.walks).copy()}
+
+
+@pytest.fixture(scope="module")
+def part4(graph):
+    return mpgp_partition(graph, 4, tau_weight="degree").assignment
+
+
+@pytest.fixture(scope="module")
+def reference4(graph, part4):
+    """Fault-free k=4 sharded run: target for the elastic tests."""
+    p = _pipeline(graph, assignment=part4, num_shards=4)
+    p.run()
+    phi_in, phi_out = p.embeddings()
+    return {"phi_in": phi_in, "phi_out": phi_out,
+            "walks": np.asarray(p.ring.walks).copy()}
+
+
+# ---------------------------------------------------------------------------
+# HealthMonitor unit behaviour
+# ---------------------------------------------------------------------------
+
+
+class TestHealthMonitor:
+    def _stats(self, loss=1.0, nonfinite=0, loss_nonfinite=0, update=0.1):
+        return {"nonfinite": nonfinite, "loss_nonfinite": loss_nonfinite,
+                "loss_sum": loss, "update_norm": update, "phi_norm": 1.0}
+
+    def test_cadence_is_step_keyed(self):
+        mon = HealthMonitor(HealthConfig(check_every=10))
+        assert not mon.due(0, 5)          # [0,5) crosses no multiple of 10
+        assert mon.due(5, 5)              # [5,10) crosses 10
+        assert mon.due(8, 20)
+        # Replay from the same step re-checks the same window.
+        assert mon.due(5, 5) and mon.due(5, 5)
+
+    def test_nonfinite_raises_immediately(self):
+        mon = HealthMonitor(HealthConfig())
+        with pytest.raises(DivergenceError) as ei:
+            mon.observe(self._stats(nonfinite=3), step=1, count=1,
+                        slots=np.array([0, 1]))
+        assert ei.value.report.kind == "nonfinite"
+        assert ei.value.report.nonfinite == 3
+
+    def test_loss_spike_gated_by_warmup(self):
+        mon = HealthMonitor(HealthConfig(spike_factor=4.0, warmup_checks=3))
+        # During warmup a spike only inflates the EMA, never raises.
+        for s in range(3):
+            mon.observe(self._stats(loss=100.0 if s == 1 else 1.0),
+                        step=s + 1, count=1, slots=np.zeros(1, np.int64))
+        for s in range(3, 8):             # settle the EMA back down
+            mon.observe(self._stats(loss=1.0), step=s + 1, count=1,
+                        slots=np.zeros(1, np.int64))
+        with pytest.raises(DivergenceError) as ei:
+            mon.observe(self._stats(loss=1e3), step=9, count=1,
+                        slots=np.zeros(1, np.int64))
+        assert ei.value.report.kind == "loss_spike"
+        assert ei.value.report.detection_steps >= 1
+
+    def test_loss_ema_is_chunk_size_invariant(self):
+        a = HealthMonitor(HealthConfig())
+        b = HealthMonitor(HealthConfig())
+        a.observe(self._stats(loss=2.0), step=1, count=1,
+                  slots=np.zeros(1, np.int64))
+        b.observe(self._stats(loss=8.0), step=4, count=4,
+                  slots=np.zeros(1, np.int64))
+        assert a.loss_ema == pytest.approx(b.loss_ema)
+
+    def test_rollback_budget_exhausts(self):
+        mon = HealthMonitor(HealthConfig(max_rollbacks=2))
+        assert not mon.exhausted()
+        mon.note_rollback(restored_step=0, lr_scale=0.5, quarantined=4)
+        mon.note_rollback(restored_step=0, lr_scale=0.25, quarantined=4)
+        assert mon.exhausted()
+        rep = mon.report()
+        assert rep["rollbacks"] == 2 and rep["quarantined_slots"] == 8
+
+
+# ---------------------------------------------------------------------------
+# Watchdog in the training path
+# ---------------------------------------------------------------------------
+
+
+class TestWatchdogPipeline:
+    def test_checked_path_is_bit_identical(self, graph, reference):
+        """Attaching the watchdog must not perturb training math."""
+        p = _pipeline(graph, health=HealthMonitor(HealthConfig()))
+        p.run()
+        a_in, a_out = p.embeddings()
+        assert np.array_equal(a_in, reference["phi_in"])
+        assert np.array_equal(a_out, reference["phi_out"])
+        rep = p.health.report()
+        assert rep["checks"] > 0 and rep["detections"] == 0
+
+    @pytest.mark.parametrize("site,kind", [("phi_nan", "nonfinite"),
+                                           ("lr_spike", "update_spike")])
+    def test_divergence_rolls_back_and_converges(self, graph, tmp_path,
+                                                 site, kind):
+        # The lr-spike site blows the chunk update norm up ~1e6x while the
+        # (saturating) loss barely doubles — armed via update_spike_factor.
+        mon = HealthMonitor(HealthConfig(check_every=1, warmup_checks=2,
+                                         spike_factor=4.0,
+                                         update_spike_factor=50.0,
+                                         lr_backoff=0.5))
+        p = _pipeline(graph, health=mon)
+        faults = FaultInjector(inject_plan={site: [4]})
+        res = p.run(ckpt_root=str(tmp_path / site), ckpt_every_rounds=1,
+                    faults=faults)
+        rep = res["health"]
+        assert rep["detections"] == 1 and rep["rollbacks"] == 1
+        assert rep["detection_kinds"] == [kind]
+        assert res["lr_scale"] == pytest.approx(0.5)
+        assert rep["quarantined_slots"] > 0
+        phi_in, _ = p.embeddings()
+        assert np.isfinite(phi_in).all()
+
+    def test_rollback_restores_bit_identical_state(self, graph, reference,
+                                                   tmp_path):
+        """The rollback property test: with lr_backoff=1.0 the healed run
+        must land EXACTLY on the fault-free trajectory — snapshot restore,
+        quarantine re-walk and chunk replay are all deterministic."""
+        mon = HealthMonitor(HealthConfig(check_every=1, lr_backoff=1.0))
+        p = _pipeline(graph, health=mon)
+        faults = FaultInjector(inject_plan={"phi_nan": [3]})
+        res = p.run(ckpt_root=str(tmp_path / "heal"), ckpt_every_rounds=1,
+                    faults=faults)
+        assert res["health"]["rollbacks"] == 1
+        a_in, a_out = p.embeddings()
+        assert np.array_equal(a_in, reference["phi_in"])
+        assert np.array_equal(a_out, reference["phi_out"])
+        assert np.array_equal(np.asarray(p.ring.walks), reference["walks"])
+
+    def test_rollback_budget_reraises(self, graph, tmp_path):
+        mon = HealthMonitor(HealthConfig(check_every=1, max_rollbacks=1))
+        p = _pipeline(graph, health=mon)
+        # Two separate poisonings; only one rollback is budgeted.
+        faults = FaultInjector(inject_plan={"phi_nan": [3, 4]})
+        with pytest.raises(DivergenceError):
+            p.run(ckpt_root=str(tmp_path / "budget"), ckpt_every_rounds=1,
+                  faults=faults)
+
+    def test_resume_persists_lr_backoff(self, graph, tmp_path):
+        mon = HealthMonitor(HealthConfig(check_every=1, lr_backoff=0.5))
+        p = _pipeline(graph, health=mon)
+        root = str(tmp_path / "persist")
+        p.run(ckpt_root=root, ckpt_every_rounds=1,
+              faults=FaultInjector(inject_plan={"phi_nan": [3]}))
+        assert p._lr_scale == pytest.approx(0.5)
+        policy, spec, _, dsgl = _plan()
+        q = StreamingEmbedPipeline.resume(root, policy, spec, dsgl)
+        assert q._lr_scale == pytest.approx(0.5)
+
+
+# ---------------------------------------------------------------------------
+# Elastic shard reconfiguration: partition + CSR layers
+# ---------------------------------------------------------------------------
+
+
+class TestReassignment:
+    def test_reassign_dead_shard_empties_it(self, graph, part4):
+        new = reassign_dead_shard(graph, part4, 1, num_parts=4)
+        assert (new != 1).all()
+        survivors = part4 != 1
+        assert np.array_equal(new[survivors], part4[survivors])
+
+    def test_compact_assignment(self, graph, part4):
+        new = reassign_dead_shard(graph, part4, 1, num_parts=4)
+        comp, old_of_new = compact_assignment(new, 1, num_parts=4)
+        assert comp.max() <= 2 and comp.min() >= 0
+        assert np.array_equal(old_of_new, [0, 2, 3])
+        # Survivor membership is preserved under the id shift.
+        for new_id, old_id in enumerate(old_of_new):
+            assert np.array_equal(comp == new_id, new == old_id)
+
+    def test_compact_rejects_live_dead_shard(self, part4):
+        with pytest.raises(ValueError):
+            compact_assignment(part4, 1, num_parts=4)
+
+    @pytest.mark.parametrize("dead", [0, 1, 3])
+    def test_partial_rebuild_matches_fresh_build(self, graph, part4, dead):
+        new = reassign_dead_shard(graph, part4, dead, num_parts=4)
+        comp, old_of_new = compact_assignment(new, dead, num_parts=4)
+        old = build_partitioned_csr(graph, part4, 4)
+        got, reused = reassign_partitioned_csr(
+            graph, comp, 3, old=old, old_assignment=part4,
+            old_of_new=old_of_new)
+        want = build_partitioned_csr(graph, comp, 3)
+        for field in ("indptr", "indices", "nbr_owner", "nbr_deg",
+                      "weights", "edge_cm"):
+            a, b = getattr(got.slices, field), getattr(want.slices, field)
+            if a is None:
+                assert b is None
+            else:
+                assert np.array_equal(np.asarray(a), np.asarray(b)), field
+        assert np.array_equal(np.asarray(got.local_of),
+                              np.asarray(want.local_of))
+        assert np.array_equal(got.owned, want.owned)
+        assert np.array_equal(got.num_owned, want.num_owned)
+        assert 0 <= reused <= 3
+
+
+# ---------------------------------------------------------------------------
+# Elastic shard reconfiguration: mid-run, liveness driven
+# ---------------------------------------------------------------------------
+
+
+class TestElasticReconfiguration:
+    def test_liveness_probe_threshold(self):
+        live = LivenessProbe(num_shards=4, misses_to_dead=2)
+        faults = FaultInjector(down_plan={2: 0})   # down from the start
+        assert live.poll(faults) == []        # first miss: below threshold
+        assert live.poll(faults) == [2]       # second miss -> declared dead
+        assert live.remove(2) == 2            # caller reacts + removes
+        assert live.names == [0, 1, 3] and live.dead_names == [2]
+        assert live.poll(faults) == []        # survivors stay live
+        # Dispatch ids compact with the assignment: launch id 3 is now 2.
+        live2 = LivenessProbe(num_shards=4, misses_to_dead=1)
+        live2.remove(1)
+        assert live2.poll(FaultInjector(down_plan={3: 0})) == [2]
+        assert live2.remove(2) == 3
+
+    def test_shard_death_mid_run_is_bit_identical(self, graph, part4,
+                                                  reference4, tmp_path):
+        """Kill one shard permanently mid-run: the run completes at k-1
+        and — by walk-RNG shard invariance — ring and phi match the
+        fault-free k=4 run bit-for-bit."""
+        p = _pipeline(graph, assignment=part4, num_shards=4)
+        res = p.run(ckpt_root=str(tmp_path / "elastic"),
+                    ckpt_every_rounds=2,
+                    faults=FaultInjector(down_plan={2: 2}),
+                    liveness=LivenessProbe(num_shards=4, misses_to_dead=2))
+        assert p.walk_shards == 3
+        assert len(res["reconfigs"]) == 1
+        rec = res["reconfigs"][0]
+        assert rec["dead_shard"] == 2 and rec["walk_shards"] == 3
+        assert rec["wall_s"] > 0
+        assert np.array_equal(np.asarray(p.ring.walks), reference4["walks"])
+        a_in, a_out = p.embeddings()
+        assert np.array_equal(a_in, reference4["phi_in"])
+        assert np.array_equal(a_out, reference4["phi_out"])
+
+    def test_double_shard_death(self, graph, part4, reference4, tmp_path):
+        p = _pipeline(graph, assignment=part4, num_shards=4)
+        res = p.run(ckpt_root=str(tmp_path / "double"),
+                    ckpt_every_rounds=2,
+                    faults=FaultInjector(down_plan={1: 2, 3: 4}),
+                    liveness=LivenessProbe(num_shards=4, misses_to_dead=2))
+        assert p.walk_shards == 2 and len(res["reconfigs"]) == 2
+        a_in, _ = p.embeddings()
+        assert np.array_equal(a_in, reference4["phi_in"])
+
+    def test_elastic_auc_parity(self, graph, part4, reference, tmp_path):
+        """End-to-end quality: the degraded (k=4 -> 3) run's AUC is within
+        0.02 of the unsharded fault-free run."""
+        from benchmarks.common import link_prediction_auc
+        p = _pipeline(graph, assignment=part4, num_shards=4)
+        p.run(ckpt_root=str(tmp_path / "auc"), ckpt_every_rounds=2,
+              faults=FaultInjector(down_plan={2: 2}),
+              liveness=LivenessProbe(num_shards=4, misses_to_dead=2))
+        phi_now, _ = p.embeddings()
+        auc_ref = link_prediction_auc(graph, reference["phi_in"],
+                                      np.random.default_rng(7))
+        auc_now = link_prediction_auc(graph, phi_now,
+                                      np.random.default_rng(7))
+        assert abs(auc_now - auc_ref) <= 0.02, (auc_now, auc_ref)
+
+    def test_resume_after_reconfig_stays_elastic(self, graph, part4,
+                                                 tmp_path):
+        """A post-reconfig snapshot must not resurrect the dead shard."""
+        p = _pipeline(graph, assignment=part4, num_shards=4)
+        root = str(tmp_path / "resume")
+        p.run(ckpt_root=root, ckpt_every_rounds=1,
+              faults=FaultInjector(down_plan={2: 2}),
+              liveness=LivenessProbe(num_shards=4, misses_to_dead=2))
+        policy, spec, _, dsgl = _plan()
+        q = StreamingEmbedPipeline.resume(root, policy, spec, dsgl)
+        assert q.walk_shards == 3
+        a_in, _ = p.embeddings()
+        b_in, _ = q.embeddings()
+        assert np.array_equal(a_in, b_in)
+
+
+# ---------------------------------------------------------------------------
+# Admission control: batch validation before the WAL
+# ---------------------------------------------------------------------------
+
+
+class TestBatchValidation:
+    def test_out_of_range_rejected(self):
+        with pytest.raises(ValueError, match="outside"):
+            validate_edge_batch(EdgeBatch(insert=np.array([[0, 999]])), 128)
+        with pytest.raises(ValueError, match="outside"):
+            validate_edge_batch(EdgeBatch(delete=np.array([[-1, 3]])), 128)
+
+    def test_nonfinite_weights_rejected(self):
+        b = EdgeBatch(insert=np.array([[1, 2]]),
+                      insert_weights=np.array([np.nan], np.float32))
+        with pytest.raises(ValueError, match="non-finite"):
+            validate_edge_batch(b, 128)
+
+    def test_self_loop_policies(self):
+        b = EdgeBatch(insert=np.array([[1, 2], [3, 3]]))
+        out = validate_edge_batch(b, 128, self_loops="drop")
+        assert np.array_equal(out.insert, [[1, 2]])
+        with pytest.raises(ValueError, match="self-loop"):
+            validate_edge_batch(b, 128, self_loops="forbid")
+
+    def test_duplicate_policies(self):
+        b = EdgeBatch(insert=np.array([[1, 2], [2, 1], [3, 4]]))
+        assert validate_edge_batch(b, 128, duplicates="allow") is b
+        out = validate_edge_batch(b, 128, duplicates="drop")
+        assert np.array_equal(out.insert, [[1, 2], [3, 4]])
+        with pytest.raises(ValueError, match="duplicate"):
+            validate_edge_batch(b, 128, duplicates="forbid")
+
+    def test_clean_batch_passes_through(self):
+        b = EdgeBatch(insert=np.array([[1, 2], [5, 9]]))
+        assert validate_edge_batch(b, 128) is b
+
+    def test_driver_rejects_before_wal(self, graph, tmp_path):
+        p = _pipeline(graph)
+        p.run()
+        drv = IngestDriver(str(tmp_path / "ing"), p,
+                           cfg=IngestConfig(apply_every=10))
+        with pytest.raises(ValueError):
+            drv.submit(EdgeBatch(insert=np.array([[0, 999]])))
+        # The malformed batch never became durable.
+        assert drv.staleness()["pending_batches"] == 0
+        records, _ = drv.wal.replay()
+        assert records == []
+
+
+# ---------------------------------------------------------------------------
+# Ingest SLO: latency accounting + degrade ladder
+# ---------------------------------------------------------------------------
+
+
+class TestIngestSLO:
+    def _driver(self, graph, tmp_path, clock, **cfg_kw):
+        p = _pipeline(graph)
+        p.run()
+        cfg = IngestConfig(apply_every=10, **cfg_kw)
+        return IngestDriver(str(tmp_path / "slo"), p, cfg=cfg, clock=clock)
+
+    def test_latency_percentiles(self, graph, tmp_path):
+        t = [100.0]
+        drv = self._driver(graph, tmp_path, lambda: t[0])
+        for i, b in enumerate(_batches(3, seed=21)):
+            drv.submit(b)
+            t[0] += float(i + 1)
+            drv.drain()
+        s = drv.staleness()
+        assert s["latency_p50_s"] == pytest.approx(2.0)
+        assert s["latency_p99_s"] == pytest.approx(3.0, abs=0.1)
+        assert s["oldest_pending_age_s"] is None
+
+    def test_degrade_ladder_and_debt_payment(self, graph, tmp_path):
+        t = [100.0]
+        drv = self._driver(graph, tmp_path, lambda: t[0],
+                           staleness_slo_s=5.0, slo_headroom=1.5)
+        b1, b2, b3 = _batches(3, seed=22)
+
+        drv.submit(b1); t[0] += 1.0
+        st = drv.drain()
+        assert st.mode == "full" and drv.last_mode == "full"
+
+        # Predicted cost of full/no_finetune exceeds the remaining budget:
+        # the drain degrades to detect_only and records the debt.
+        drv._wall_ema = {"full": 10.0, "no_finetune": 10.0}
+        drv.submit(b2); t[0] += 1.0
+        st = drv.drain()
+        assert st.mode == "detect_only"
+        assert st.rewalk_walks == 0 and st.fine_tune_steps == 0
+        assert drv._debt is not None and drv._debt.sum() > 0
+        assert drv.staleness()["debt_roots"] > 0
+
+        # Fast again: the next full drain pays the debt.
+        drv._wall_ema = {}
+        debt = int(drv._debt.sum())
+        drv.submit(b3); t[0] += 1.0
+        st = drv.drain()
+        assert st.mode == "full" and drv._debt is None
+        assert st.affected >= debt          # debt OR-ed into detection
+        assert drv.staleness()["debt_roots"] == 0
+
+    def test_blown_budget_goes_detect_only(self, graph, tmp_path):
+        t = [100.0]
+        drv = self._driver(graph, tmp_path, lambda: t[0],
+                           staleness_slo_s=2.0)
+        (b,) = _batches(1, seed=23)
+        drv.submit(b)
+        t[0] += 10.0                         # already past the deadline
+        st = drv.drain()
+        assert st.mode == "detect_only"
+        assert drv.staleness()["slo_violations"] == 1
+
+    def test_middle_rung_when_it_fits(self, graph, tmp_path):
+        t = [100.0]
+        drv = self._driver(graph, tmp_path, lambda: t[0],
+                           staleness_slo_s=5.0, slo_headroom=1.0)
+        (b,) = _batches(1, seed=24)
+        drv._wall_ema = {"full": 100.0, "no_finetune": 0.1}
+        drv.submit(b); t[0] += 1.0
+        st = drv.drain()
+        assert st.mode == "no_finetune"
+        assert st.fine_tune_steps == 0 and st.extra_rounds == 0
+
+    def test_no_slo_always_full(self, graph, tmp_path):
+        drv = self._driver(graph, tmp_path, lambda: 0.0)
+        drv._wall_ema = {"full": 1e9}
+        (b,) = _batches(1, seed=25)
+        drv.submit(b)
+        st = drv.drain()
+        assert st.mode == "full"
+        assert drv.staleness()["staleness_slo_s"] is None
+
+    def test_detect_only_snapshot_is_recoverable(self, graph, tmp_path):
+        """detect_only adopts the new graph and snapshots: a crash right
+        after must recover onto the adopted graph with the debt known."""
+        t = [100.0]
+        root = str(tmp_path / "slo")
+        drv = self._driver(graph, tmp_path, lambda: t[0],
+                           staleness_slo_s=5.0)
+        (b,) = _batches(1, seed=26)
+        drv._wall_ema = {"full": 10.0, "no_finetune": 10.0}
+        drv.submit(b); t[0] += 1.0
+        st = drv.drain()
+        assert st.mode == "detect_only"
+        n_new = drv.pipeline.graph.num_edges
+        rec = IngestDriver.recover(root, drv.pipeline.policy,
+                                   drv.pipeline.spec, drv.pipeline.cfg)
+        assert rec.pipeline.graph.num_edges == n_new
+        assert rec.staleness()["pending_batches"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Chaos sweep: all three healing loops under one randomized schedule
+# ---------------------------------------------------------------------------
+
+
+class TestChaosSweep:
+    def test_chaos_schedule(self, graph, part4, reference4, tmp_path):
+        """Randomized (seed-logged) composition: shard death x divergence
+        injection, then ingest under deadline pressure. Degraded completion
+        with bit-identical walks and finite phi is the pass condition."""
+        seed = int(os.environ.get("REPRO_CHAOS_SEED", "0"))
+        rng = np.random.default_rng(seed)
+        print(f"REPRO_CHAOS_SEED={seed}")
+
+        dead = int(rng.integers(0, 4))
+        down_at = int(rng.integers(2, 5))
+        site = ["phi_nan", "lr_spike"][int(rng.integers(0, 2))]
+        inject_at = int(rng.integers(3, 6))
+
+        mon = HealthMonitor(HealthConfig(check_every=1, warmup_checks=2,
+                                         update_spike_factor=50.0,
+                                         lr_backoff=1.0, max_rollbacks=4))
+        p = _pipeline(graph, assignment=part4, num_shards=4, health=mon)
+        faults = FaultInjector(down_plan={dead: down_at},
+                               inject_plan={site: [inject_at]})
+        res = p.run(ckpt_root=str(tmp_path / "chaos"), ckpt_every_rounds=1,
+                    faults=faults,
+                    liveness=LivenessProbe(num_shards=4, misses_to_dead=2))
+
+        assert p.walk_shards == 3 and len(res["reconfigs"]) == 1
+        assert res["health"]["detections"] >= 1
+        # Walk layer is deterministic under BOTH fault classes at once.
+        assert np.array_equal(np.asarray(p.ring.walks), reference4["walks"])
+        phi_in, _ = p.embeddings()
+        # Detection fires AT the offending chunk, so the rollback discards
+        # it entirely and the lr_backoff=1.0 replay heals exactly.
+        assert np.array_equal(phi_in, reference4["phi_in"])
+
+        # Ingest pressure on the degraded pipeline: force one detect_only
+        # drain, then a full drain that pays the debt.
+        t = [100.0]
+        drv = IngestDriver(str(tmp_path / "chaos-ing"), p,
+                           cfg=IngestConfig(apply_every=10,
+                                            staleness_slo_s=5.0),
+                           clock=lambda: t[0])
+        b1, b2 = _batches(2, seed=seed + 1)
+        drv._wall_ema = {"full": 10.0, "no_finetune": 10.0}
+        drv.submit(b1); t[0] += 1.0
+        assert drv.drain().mode == "detect_only"
+        drv._wall_ema = {}
+        drv.submit(b2); t[0] += 1.0
+        st = drv.drain()
+        assert st.mode == "full" and drv._debt is None
+        phi_in, _ = drv.pipeline.embeddings()
+        assert np.isfinite(phi_in).all()
