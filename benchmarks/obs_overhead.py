@@ -1,0 +1,102 @@
+"""Telemetry overhead benchmark (DESIGN.md §13).
+
+The observability substrate promises two things: zero NUMERICAL footprint
+(property-tested in tests/test_obs.py — phi and the ring are bit-identical
+with telemetry on vs off) and near-zero WALL footprint (<3% on the hot
+loops, budgeted in §13). This benchmark measures the second promise:
+
+* end-to-end — the full streaming walk→train pipeline, best-of-reps wall
+  with telemetry fully on vs fully off (same process, same compiled
+  kernels, so the delta is pure host-side bookkeeping);
+* micro — ns/call of the gated no-op path (`obs.inc` with telemetry
+  off), the cost every hot-loop site pays when the switch is thrown.
+
+It also produces the per-run RUN_TELEMETRY.json artifact from the
+telemetry-on run — the same export CI uploads — so the schema stays
+exercised by a real pipeline, not just unit fixtures.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+from repro import obs
+
+
+def _build(nodes: int, degree: int, dim: int):
+    from repro.core.api import EmbedConfig, make_walk_plan
+    from repro.core.dsgl import DSGLConfig
+    from repro.graph.generators import rmat_graph
+
+    graph = rmat_graph(nodes, degree, seed=7)
+    cfg = dataclasses.replace(EmbedConfig(dim=dim, seed=3),
+                              rng_mode="vertex")
+    policy, spec, rounds = make_walk_plan(cfg)
+    return graph, policy, spec, rounds, DSGLConfig(dim=dim, seed=3)
+
+
+def _noop_ns_per_call(calls: int = 200_000) -> float:
+    """Cost of one gated telemetry call with the switch off — what every
+    instrumented hot-loop site pays in production when telemetry is
+    disabled."""
+    with obs.override(enabled=False):
+        t0 = time.perf_counter()
+        for _ in range(calls):
+            obs.inc("bench.noop")
+        dt = time.perf_counter() - t0
+    return dt / calls * 1e9
+
+
+def run(quick: bool = True, telemetry_path: Optional[str] = None) -> dict:
+    import jax
+
+    nodes, degree, dim = (256, 7, 16) if quick else (2048, 10, 64)
+    reps = 3 if quick else 5
+    graph, policy, spec, rounds, dsgl = _build(nodes, degree, dim)
+
+    from repro.runtime.trainer import StreamingEmbedPipeline
+
+    def one_run(enabled: bool) -> float:
+        with obs.override(enabled=enabled):
+            p = StreamingEmbedPipeline(graph, policy, spec, rounds, dsgl)
+            t0 = time.perf_counter()
+            p.run()
+            return time.perf_counter() - t0
+
+    one_run(True)                                 # compile + warm caches
+    best_on = min(one_run(True) for _ in range(reps))
+    best_off = min(one_run(False) for _ in range(reps))
+    overhead_pct = 100.0 * (best_on - best_off) / best_off
+
+    # The RUN_TELEMETRY artifact: a fresh registry, one telemetry-on run,
+    # exported through the same writer CI consumes.
+    obs.reset()
+    with obs.override(enabled=True):
+        p = StreamingEmbedPipeline(graph, policy, spec, rounds, dsgl)
+        t0 = time.perf_counter()
+        res = p.run()
+        wall = time.perf_counter() - t0
+        telemetry = obs.run_telemetry(run={
+            "bench": "obs_overhead",
+            "nodes": int(nodes), "degree": int(degree), "dim": int(dim),
+            "wall_s": float(wall),
+            "rounds": int(res.get("rounds", 0)),
+            "global_step": int(res.get("steps", 0)),
+            "jax_backend": jax.default_backend(),
+        })
+    if telemetry_path:
+        obs.write_run_telemetry(telemetry_path, run=telemetry["run"])
+
+    return {
+        "nodes": nodes,
+        "dim": dim,
+        "reps": reps,
+        "wall_on_s": best_on,
+        "wall_off_s": best_off,
+        "overhead_pct": overhead_pct,
+        "noop_ns_per_call": _noop_ns_per_call(),
+        "spans_recorded": len(obs.recent()),
+        "telemetry": telemetry,
+    }

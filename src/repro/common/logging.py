@@ -1,11 +1,21 @@
 """Tiny structured logger (stdlib logging, one-line setup).
 
 ``REPRO_LOG_LEVEL`` (DEBUG/INFO/WARNING/ERROR, or a number) sets the level
-at first use. ``log_context(round=3, shard=1)`` pushes structured fields
-that every log line emitted inside the ``with`` block carries as trailing
-``key=value`` pairs — the pipeline/ingest drivers wrap their phases in it
-so postmortems can grep a crash down to the exact round/shard/
-graph_version without the call sites threading those fields by hand.
+and is re-read on every ``get_logger`` call, so a test or operator can
+flip verbosity mid-process. ``log_context(round=3, shard=1)`` pushes
+structured fields that every log line emitted inside the ``with`` block
+carries as trailing ``key=value`` pairs — the pipeline/ingest drivers
+wrap their phases in it so postmortems can grep a crash down to the
+exact round/shard/graph_version without the call sites threading those
+fields by hand. ``obs.trace_span`` pushes its span fields through the
+same contextvar and emits its close lines through the same handler, so
+spans and log lines share one format.
+
+Handler install is idempotent by inspection, not by module flag: the
+handler we install is tagged, and ``get_logger`` only adds one when no
+tagged handler is present. A pytest run that re-imports this module (or
+anything else that resets module globals) can no longer stack duplicate
+handlers.
 """
 
 from __future__ import annotations
@@ -16,9 +26,14 @@ import logging
 import os
 import sys
 
-_CONFIGURED = False
 _CONTEXT: contextvars.ContextVar[tuple] = contextvars.ContextVar(
     "repro_log_context", default=())
+
+#: Attribute used to mark the handler this module installs; idempotency
+#: is "a tagged handler exists", which survives module re-imports.
+_HANDLER_TAG = "_repro_handler"
+
+_FORMAT = "%(asctime)s %(name)s %(levelname)s %(message)s%(ctx)s"
 
 
 class _ContextFilter(logging.Filter):
@@ -43,19 +58,43 @@ def _env_level(default: int = logging.INFO) -> int:
     return getattr(logging, raw.upper(), default)
 
 
+def _installed_handler(root: logging.Logger) -> logging.Handler | None:
+    for h in root.handlers:
+        if getattr(h, _HANDLER_TAG, False):
+            return h
+    return None
+
+
+def refresh_log_level() -> int:
+    """Re-read ``REPRO_LOG_LEVEL`` and apply it to the repro root logger;
+    returns the applied level."""
+    level = _env_level()
+    logging.getLogger("repro").setLevel(level)
+    return level
+
+
 def get_logger(name: str = "repro") -> logging.Logger:
-    global _CONFIGURED
-    if not _CONFIGURED:
+    root = logging.getLogger("repro")
+    if _installed_handler(root) is None:
         handler = logging.StreamHandler(sys.stderr)
-        handler.setFormatter(logging.Formatter(
-            "%(asctime)s %(name)s %(levelname)s %(message)s%(ctx)s"))
+        handler.setFormatter(logging.Formatter(_FORMAT))
         handler.addFilter(_ContextFilter())
-        root = logging.getLogger("repro")
+        setattr(handler, _HANDLER_TAG, True)
         root.addHandler(handler)
-        root.setLevel(_env_level())
         root.propagate = False
-        _CONFIGURED = True
+    refresh_log_level()
     return logging.getLogger(name)
+
+
+def current_context_fields() -> dict:
+    """The merged ``log_context`` fields active in this thread/context
+    (outer→inner, inner wins). ``obs`` stamps these onto point events and
+    flight-recorder dumps so a postmortem carries the same
+    round/shard/graph_version the log lines do."""
+    fields = {}
+    for frame in _CONTEXT.get():
+        fields.update(frame)
+    return fields
 
 
 @contextlib.contextmanager

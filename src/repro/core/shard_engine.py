@@ -72,6 +72,7 @@ them (DESIGN.md §9).
 from __future__ import annotations
 
 import functools
+import time
 from typing import Dict, Optional
 
 import jax
@@ -81,6 +82,7 @@ from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import incom
+from repro import obs
 from repro.core import walker as wk
 from repro.core.transition import Policy
 from repro.graph.csr import CSRGraph, PartitionedCSR, ShardCSR, \
@@ -858,6 +860,17 @@ def _shard_stats(out, pcsr: Optional[PartitionedCSR], pool: Optional[int],
         stats["owned_nodes"] = pcsr.num_owned.astype(int).tolist()
         stats["csr_bytes_per_shard"] = pcsr.shard_csr_nbytes().astype(
             int).tolist()
+    # Everything above was already pulled to host for the stats dict;
+    # exporting it to the registry adds no device syncs.
+    if obs.enabled():
+        obs.inc("walk.supersteps", float(np.sum(stats["supersteps"])))
+        obs.inc("walk.msg_count", float(np.sum(stats["msg_count"])))
+        if "peak_lane_occupancy" in stats:
+            obs.set_gauges("walk.peak_occ", stats["peak_lane_occupancy"])
+            obs.set_gauge("walk.pool_slots", stats["pool_slots"])
+            obs.inc("walk.pool_retries", stats["pool_retries"])
+        if "csr_bytes_per_shard" in stats:
+            obs.set_gauges("walk.csr_bytes", stats["csr_bytes_per_shard"])
     return stats
 
 
@@ -1009,6 +1022,7 @@ def run_walk_sharded(
         raise ValueError(f"unknown transport {transport!r}")
 
     retries = 0
+    t0 = time.perf_counter() if obs.enabled() else 0.0
     while True:
         if use_mesh:
             out = _run_spmd_local(
@@ -1030,6 +1044,13 @@ def run_walk_sharded(
         if len(_POOL_CACHE) >= 64:
             _POOL_CACHE.clear()
         _POOL_CACHE[pool_key] = (weakref.ref(graph_key), pool)
+    if obs.enabled():
+        # The overflow check above already synced the dispatch; the wall
+        # measured here is real device time, not just enqueue latency.
+        obs.observe("walk.batch_dispatch.s", time.perf_counter() - t0)
+        obs.inc("walk.engine_batches")
+        obs.inc("walk.spill_retries", retries)
+        obs.set_gauge("walk.pool_slots", pool)
     state = _merge_local(out, spec, key)
     if with_stats:
         return state, _shard_stats(out, pcsr, pool, cap, retries)

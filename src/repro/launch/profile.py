@@ -14,6 +14,17 @@ from typing import Dict, Optional, Tuple
 from repro.launch.hlo_cost import HloCostModel
 
 REGIONS = (
+    # Embedding-pipeline regions first — their op names are the most
+    # specific and several shadow later keywords ("train_chunk_checked"
+    # contains "train_chunk"; "update_norm" contains "norm"), so order is
+    # load-bearing: checked-train before dsgl_train before norm.
+    ("train_checked", ("train_chunk_checked", "update_norm", "nonfinite",
+                       "health_check")),
+    ("dsgl_train", ("train_chunk", "skipgram", "dsgl", "chunk_scan",
+                    "neg_sample")),
+    ("refresh", ("refresh", "ring_replace", "splice", "rewalk")),
+    ("walk_engine", ("walk", "incom", "superstep", "exchange_step",
+                     "transition")),
     ("attention", ("attention", "dot_product", "mha", "flash")),
     ("ssd_scan", ("ssd", "mamba", "mixer", "mlstm", "slstm")),
     ("moe", ("moe", "router", "expert")),

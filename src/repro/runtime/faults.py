@@ -57,6 +57,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable, Dict, Iterable, Mapping, Optional, Tuple
 
+from repro import obs
+
 
 class SimulatedFailure(RuntimeError):
     """Stands in for a node crash / preemption."""
@@ -109,6 +111,13 @@ class FaultInjector:
         if planned and i in planned:
             planned.discard(i)         # fire at most once per occurrence
             self.fired.append((point, i))
+            # Postmortem first, crash second: the dump carries the open
+            # spans (round/shard/graph_version) of the site that died.
+            obs.span_event("fault.fire", point=point, occurrence=i,
+                           note=note)
+            obs.inc(f"faults.fired.{point}")
+            obs.dump_flight_record(f"fault_{point}", point=point,
+                                   occurrence=i, note=note)
             raise SimulatedFailure(
                 f"injected failure at {point}[{i}]"
                 + (f" ({note})" if note is not None else ""))
@@ -121,6 +130,8 @@ class FaultInjector:
         planned = self._torn.get(kind)
         if planned and i in planned:
             planned.discard(i)
+            obs.span_event("fault.torn", kind=kind, occurrence=i)
+            obs.inc(f"faults.torn.{kind}")
             return True
         return False
 
@@ -135,6 +146,8 @@ class FaultInjector:
         if planned and i in planned:
             planned.discard(i)
             self.injected.append((kind, i))
+            obs.span_event("fault.inject", kind=kind, occurrence=i)
+            obs.inc(f"faults.injected.{kind}")
             return True
         return False
 
@@ -259,9 +272,14 @@ def run_with_restarts(
     while True:
         try:
             return attempt(restarts), restarts
-        except SimulatedFailure:
+        except SimulatedFailure as e:
             restarts += 1
+            obs.span_event("supervisor.restart", restart=restarts,
+                           error=str(e))
+            obs.inc("supervisor.restarts")
             if restarts > max_restarts:
+                obs.dump_flight_record("restarts_exhausted",
+                                       restarts=restarts, error=str(e))
                 raise
             if recover is not None:
                 recover(restarts)

@@ -32,6 +32,8 @@ from typing import Any, Dict, List, Optional
 
 import numpy as np
 
+from repro import obs
+
 
 class DivergenceError(RuntimeError):
     """Training diverged; carries the triggering ``HealthReport``."""
@@ -122,6 +124,14 @@ class HealthMonitor:
         update = float(stats["update_norm"])
         detection_steps = step - self._last_check_step
 
+        # Telemetry piggybacks on the scalars already pulled to host for
+        # the verdict — no additional device syncs.
+        obs.inc("health.checks")
+        obs.set_gauge("health.loss", loss)
+        obs.set_gauge("health.update_norm", update)
+        obs.set_gauge("health.phi_norm", float(stats.get("phi_norm", 0.0)))
+        obs.set_gauge("health.nonfinite", nonfinite)
+
         kind = None
         if nonfinite > 0:
             kind = "nonfinite"
@@ -144,6 +154,13 @@ class HealthMonitor:
                 nonfinite=nonfinite, update_norm=update,
                 slots=np.asarray(slots), detection_steps=detection_steps)
             self.detections.append(report)
+            obs.span_event("health.divergence", kind=kind, step=step,
+                           loss=loss, nonfinite=nonfinite,
+                           detection_steps=detection_steps)
+            obs.inc(f"health.divergence.{kind}")
+            obs.dump_flight_record(f"divergence_{kind}", kind=kind,
+                                   step=step, loss=loss,
+                                   nonfinite=nonfinite)
             raise DivergenceError(report)
 
         # Clean check: fold into the EMAs, advance the detection clock.
@@ -160,6 +177,9 @@ class HealthMonitor:
                       quarantined: int) -> None:
         self.rollbacks += 1
         self.quarantined_slots += int(quarantined)
+        obs.span_event("health.rollback", restored_step=restored_step,
+                       lr_scale=lr_scale, quarantined=int(quarantined))
+        obs.inc("health.rollbacks")
         # Replay restarts below the EMA's reference point; reset the
         # detection clock so latency accounting stays truthful.
         self._last_check_step = restored_step

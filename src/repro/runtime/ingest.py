@@ -53,7 +53,6 @@ door, not become durable and crash every replay of the log.
 
 from __future__ import annotations
 
-import collections
 import dataclasses
 import io
 import os
@@ -64,6 +63,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.ckpt.checkpoint import read_meta
 from repro.common.logging import get_logger, log_context
 from repro.graph.delta import EdgeBatch, validate_edge_batch
@@ -120,10 +120,13 @@ class WriteAheadLog:
                 os.fsync(f.fileno())
             from repro.runtime.faults import SimulatedFailure
             raise SimulatedFailure(f"torn WAL append at seq {seq}")
-        with open(self.path, "ab") as f:
-            f.write(record)
-            f.flush()
-            os.fsync(f.fileno())
+        with obs.trace_span("ingest.wal_append", seq=seq,
+                            bytes=len(record)):
+            with open(self.path, "ab") as f:
+                f.write(record)
+                f.flush()
+                os.fsync(f.fileno())
+        obs.inc("ingest.wal_bytes", len(record))
         return seq
 
     # -- read side ---------------------------------------------------------
@@ -226,10 +229,15 @@ class IngestDriver:
         self._pending: List[Tuple[int, EdgeBatch]] = []
         self.drains = 0
         self.retries = 0
-        # SLO / degrade-ladder state (DESIGN.md §12)
+        # SLO / degrade-ladder state (DESIGN.md §12). The latency history
+        # is an obs.Histogram: one bounded reservoir serves both the
+        # staleness() percentiles and the exported ingest.latency_s
+        # metric. The driver owns the object (its window follows
+        # cfg.latency_window and a fresh driver starts empty); attach()
+        # makes the registry export it.
         self._submit_t: Dict[int, float] = {}
-        self._latencies = collections.deque(maxlen=max(cfg.latency_window,
-                                                       1))
+        self._latency = obs.Histogram(window=max(cfg.latency_window, 1))
+        obs.REGISTRY.attach("ingest.latency_s", self._latency)
         self._wall_ema: Dict[str, float] = {}
         self.mode_counts = {"full": 0, "no_finetune": 0, "detect_only": 0}
         self.last_mode: Optional[str] = None
@@ -254,11 +262,13 @@ class IngestDriver:
                 self_loops=self.cfg.self_loop_policy,
                 duplicates=self.cfg.duplicate_policy)
         seq = self.appended_seq + 1
-        self.wal.append(seq, batch, faults=self.faults)
-        self.appended_seq = seq
-        self._pending.append((seq, batch))
-        self._submit_t[seq] = self.clock()
-        self.faults.fire("wal_append", seq)
+        with obs.trace_span("ingest.submit", seq=seq,
+                            graph_version=self._graph_version()):
+            self.wal.append(seq, batch, faults=self.faults)
+            self.appended_seq = seq
+            self._pending.append((seq, batch))
+            self._submit_t[seq] = self.clock()
+            self.faults.fire("wal_append", seq)
         over_staleness = (
             self.cfg.max_pending_edges is not None
             and self.pending_edges() > self.cfg.max_pending_edges)
@@ -274,11 +284,8 @@ class IngestDriver:
         the accepted churn — sequence lag, wall-clock lag (submit→applied
         latency percentiles, oldest pending age vs the SLO), degrade-mode
         history and outstanding detect-only debt."""
-        lat = np.asarray(self._latencies, np.float64)
-        pct = {
-            f"latency_p{q}_s": (float(np.percentile(lat, q))
-                                if lat.size else None)
-            for q in (50, 90, 99)}
+        pct = {f"latency_p{q}_s": self._latency.percentile(q)
+               for q in (50, 90, 99)}
         oldest = (self._submit_t.get(self._pending[0][0])
                   if self._pending else None)
         return {
@@ -340,8 +347,13 @@ class IngestDriver:
         batches = list(self._pending)
         last_seq = batches[-1][0]
         mode = self._choose_mode()
+        # log_context stays unconditional (log fields must not depend on
+        # telemetry being enabled); the span nests inside with the same
+        # fields.
         with log_context(applied_seq=self.applied_seq, target_seq=last_seq,
-                         graph_version=self._graph_version(), mode=mode):
+                         graph_version=self._graph_version(), mode=mode), \
+                obs.trace_span("ingest.drain", applied_seq=self.applied_seq,
+                               target_seq=last_seq, mode=mode):
             stats = self._apply_with_retry(batches, mode)
             self.applied_seq = last_seq
             self._pending = []
@@ -353,13 +365,19 @@ class IngestDriver:
                 t = self._submit_t.pop(seq, None)
                 if t is None:
                     continue
-                self._latencies.append(now - t)
+                self._latency.observe(now - t)
                 if (self.cfg.staleness_slo_s is not None
                         and now - t > self.cfg.staleness_slo_s):
                     self.slo_violations += 1
+                    obs.inc("ingest.slo_violations")
             self.mode_counts[mode] += 1
             self.last_mode = mode
+            obs.inc("ingest.drains")
+            obs.inc(f"ingest.mode.{mode}")
+            obs.set_gauge("ingest.applied_seq", self.applied_seq)
+            obs.set_gauge("ingest.graph_version", self._graph_version())
             wall = float(getattr(stats, "wall_s", 0.0))
+            obs.observe("ingest.refresh.s", wall)
             prev = self._wall_ema.get(mode)
             self._wall_ema[mode] = (wall if prev is None
                                     else 0.5 * prev + 0.5 * wall)
@@ -392,10 +410,16 @@ class IngestDriver:
                 # mutated the overlay: restore the pre-churn snapshot
                 # before any retry so the batch is never applied on top
                 # of its own wreckage.
+                obs.span_event("ingest.retry", attempt=attempt,
+                               error=type(e).__name__)
                 self._restore_last_snapshot()
                 if attempt >= cfg.max_retries:
+                    obs.dump_flight_record(
+                        "ingest_retries_exhausted", attempt=attempt,
+                        error=type(e).__name__, mode=mode)
                     raise
                 self.retries += 1
+                obs.inc("ingest.retries")
                 delay = cfg.backoff_s * (2 ** attempt)
                 log.warning("refresh attempt %d failed (%s: %s); restored "
                             "snapshot, backing off %.3fs", attempt,

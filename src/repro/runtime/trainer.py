@@ -39,6 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.ckpt.checkpoint import (
     latest_step, load_checkpoint, restore_into, save_checkpoint,
 )
@@ -254,8 +255,12 @@ class DSGLTrainer:
         t0 = time.perf_counter()
         sync_bytes = 0.0
         do_sync = self.num_shards > 1
+        # Hot loop: telemetry is a flag check when off, two clock reads +
+        # a histogram add when on (the obs_overhead bench measures this).
+        tele = obs.enabled()
         try:
             for c, (epoch, step0, count) in enumerate(schedule):
+                t_c = time.perf_counter() if tele else 0.0
                 _, chunk_np = prefetcher.next()
                 wb = jnp.asarray(chunk_np)
                 rows = (jnp.asarray(self._sync.sample_hotness_rows(
@@ -270,11 +275,18 @@ class DSGLTrainer:
                 if do_sync:
                     sync_bytes += float(
                         rows.size * cfg.dim * 4 * self.num_shards * 2)
+                if tele:
+                    obs.observe("train.chunk_dispatch.s",
+                                time.perf_counter() - t_c)
+                    obs.inc("train.steps", count)
         finally:
             prefetcher.close()
         jax.block_until_ready(self.phi_in)
         wall = time.perf_counter() - t0
         steps = total
+        if tele:
+            obs.set_gauge("train.steps_per_s", steps / max(wall, 1e-9))
+            obs.set_gauge("train.sync_bytes", sync_bytes)
         return {
             "steps": steps,
             "steps_per_s": steps / max(wall, 1e-9),
@@ -445,16 +457,19 @@ class StreamingEmbedPipeline:
         by_vertex = self.spec.rng_mode == "vertex"
         round_key = jax.random.fold_in(self.key_walk, r)
         pairs = []
-        for start in range(0, len(sources), self.walker_batch):
-            faults.fire("superstep", f"round {r} chunk @{start}")
-            chunk = np.asarray(sources[start:start + self.walker_batch])
-            k = (round_key if by_vertex
-                 else jax.random.fold_in(round_key, start))
-            pairs.append((chunk, run_walk_batch(
-                self.graph, jnp.asarray(chunk, jnp.int32), k, self.policy,
-                self.spec, self.assignment,
-                num_shards=self.walk_shards if self.assignment is not None
-                else None)))
+        with obs.trace_span("walk.round", round=r, walks=len(sources)):
+            for start in range(0, len(sources), self.walker_batch):
+                faults.fire("superstep", f"round {r} chunk @{start}")
+                chunk = np.asarray(sources[start:start + self.walker_batch])
+                k = (round_key if by_vertex
+                     else jax.random.fold_in(round_key, start))
+                pairs.append((chunk, run_walk_batch(
+                    self.graph, jnp.asarray(chunk, jnp.int32), k,
+                    self.policy, self.spec, self.assignment,
+                    num_shards=self.walk_shards
+                    if self.assignment is not None else None)))
+                obs.inc("walk.batches")
+            obs.inc("walk.dispatched", len(sources))
         return pairs
 
     def _append(self, pairs, round_idx: int):
@@ -515,7 +530,9 @@ class StreamingEmbedPipeline:
             order = FrequencyOrder.from_ocn(ocn_host) if replicated else None
         chunk = max(min(cfg.sync_period, steps), 1)
         done = 0
+        tele = obs.enabled()
         while done < steps:
+            t_c = time.perf_counter() if tele else 0.0
             count = min(chunk, steps - done)
             # Improvement-III cadence: one hotness exchange per sync_period
             # LIFETIMES (global steps), not per dispatched chunk — rounds
@@ -560,6 +577,10 @@ class StreamingEmbedPipeline:
                     cfg.use_kernel, sync_now)
             self.global_step += count
             done += count
+            if tele:
+                obs.observe("train.chunk_dispatch.s",
+                            time.perf_counter() - t_c)
+                obs.inc("train.steps", count)
             if check:
                 # One host pull of 5 scalars; raises DivergenceError on a
                 # verdict — run()'s heal loop owns the reaction.
@@ -658,6 +679,9 @@ class StreamingEmbedPipeline:
                     self._rounds_walked = r + 2
                     self._maybe_snapshot(faults)
             self._phase = "tail"
+            obs.span_event("pipeline.phase", phase="tail",
+                           round=self._trained_rounds,
+                           step=self.global_step)
             self._maybe_snapshot(faults)
 
         if self._phase == "tail":
@@ -685,6 +709,8 @@ class StreamingEmbedPipeline:
                 self._maybe_snapshot(faults)
             jax.block_until_ready(self.phi_in)
             self._phase = "done"
+            obs.span_event("pipeline.phase", phase="done",
+                           step=self.global_step)
             if self._ckpt_root and self._ckpt_every:
                 self.save(self._ckpt_root, faults=faults)   # final snapshot
 
@@ -693,6 +719,14 @@ class StreamingEmbedPipeline:
         stats["mean_len"] = (float(np.asarray(self.ring.lengths).sum())
                              / max(self.ring.num_filled, 1))
         stats["d_history"] = list(self.controller.history)
+        # Export the walk-engine accumulators exactly where the run loop
+        # already pulled them to host — no extra device syncs.
+        if obs.enabled():
+            for k in self._stats:
+                obs.set_gauge(f"walk.{k}", stats[k])
+            obs.set_gauge("walk.mean_len", stats["mean_len"])
+            obs.set_gauge("walk.rounds", self.controller.rounds)
+            obs.set_gauge("train.global_step", self.global_step)
         return {
             "phi_in": phi_in, "phi_out": phi_out,
             "rounds": self.controller.rounds,
@@ -753,6 +787,13 @@ class StreamingEmbedPipeline:
         """
         from repro.graph.delta import graph_version
 
+        with obs.trace_span("ckpt.write", seq=self._ckpt_seq,
+                            round=self._trained_rounds,
+                            step=self.global_step, phase=self._phase):
+            return self._save_inner(root, faults, meta_extra,
+                                    graph_version)
+
+    def _save_inner(self, root, faults, meta_extra, graph_version) -> str:
         faults.fire("ckpt_write", self._ckpt_seq)
         torn = faults.torn("ckpt")
         meta = {
@@ -785,6 +826,8 @@ class StreamingEmbedPipeline:
                          graph_version=meta["graph_version"]):
             log.info("snapshot %d committed at %s (phase=%s step=%d)",
                      self._ckpt_seq, path, self._phase, self.global_step)
+        obs.inc("ckpt.writes")
+        obs.set_gauge("ckpt.last_seq", self._ckpt_seq)
         self._ckpt_seq += 1
         if self._ckpt_keep:
             from repro.ckpt.checkpoint import prune_steps
@@ -867,6 +910,10 @@ class StreamingEmbedPipeline:
         log.info("resumed pipeline from %s snapshot %d "
                  "(phase=%s round=%d step=%d)", root, step_loaded,
                  pipe._phase, pipe._trained_rounds, pipe.global_step)
+        obs.span_event("ckpt.resume", snapshot=step_loaded,
+                       phase=pipe._phase, round=pipe._trained_rounds,
+                       step=pipe.global_step)
+        obs.inc("ckpt.resumes")
         return pipe
 
     def corpus(self):
@@ -922,6 +969,7 @@ class StreamingEmbedPipeline:
         that intermediate state. Returns (rewalk_walks, rounds_resident).
         """
         from repro.core.corpus import ring_replace_donated
+        from repro.graph.delta import graph_version
 
         n = len(self.sources)
         slot_ids = np.arange(self.ring.capacity)
@@ -929,21 +977,29 @@ class StreamingEmbedPipeline:
             np.maximum(self._slot_root, 0)]
         rounds_resident = np.unique(self._slot_round[aff_slot])
         rewalk_walks = 0
+        gv = int(graph_version(self.graph)) if obs.enabled() else None
         for r in rounds_resident:
-            faults.fire("refresh_splice", int(r))
-            sel = aff_slot & (self._slot_round == r)
-            roots_r = self._slot_root[sel]
-            slot_of = np.full(n, -1, np.int64)
-            slot_of[roots_r] = slot_ids[sel]
-            for chunk, st in self._run_round(int(r), sources=roots_r,
-                                             faults=faults):
-                slots = slot_of[chunk]
-                self.ring = ring_replace_donated(
-                    self.ring, jnp.asarray(slots, jnp.int32), st.path,
-                    st.info.L.astype(jnp.int32))
-                for k in self._stats:
-                    self._stats[k] = self._stats[k] + getattr(st, k)
-                rewalk_walks += len(chunk)
+            # The refresh_splice injection point fires INSIDE the span so
+            # a chaos crash dumps a flight record whose faulting span
+            # carries the round/graph_version (and, via log_context, the
+            # shard) it died in.
+            with obs.trace_span("refresh.splice", round=int(r),
+                                graph_version=gv):
+                faults.fire("refresh_splice", int(r))
+                sel = aff_slot & (self._slot_round == r)
+                roots_r = self._slot_root[sel]
+                slot_of = np.full(n, -1, np.int64)
+                slot_of[roots_r] = slot_ids[sel]
+                for chunk, st in self._run_round(int(r), sources=roots_r,
+                                                 faults=faults):
+                    slots = slot_of[chunk]
+                    self.ring = ring_replace_donated(
+                        self.ring, jnp.asarray(slots, jnp.int32), st.path,
+                        st.info.L.astype(jnp.int32))
+                    for k in self._stats:
+                        self._stats[k] = self._stats[k] + getattr(st, k)
+                    rewalk_walks += len(chunk)
+                obs.inc("refresh.rewalk_walks", int(len(roots_r)))
         return rewalk_walks, int(len(rounds_resident))
 
     def recover_shard_loss(self, shard_id: int, *,
@@ -1014,6 +1070,11 @@ class StreamingEmbedPipeline:
             quarantined, _ = self._rewalk_resident(mask, faults)
         mon.note_rollback(restored_step=self.global_step,
                           lr_scale=self._lr_scale, quarantined=quarantined)
+        obs.span_event("pipeline.heal", kind=report.kind,
+                       detected_step=report.step,
+                       restored_step=self.global_step,
+                       lr_scale=self._lr_scale, quarantined=quarantined)
+        obs.inc("pipeline.heals")
         log.warning(
             "divergence (%s) at step %d: rolled back to step %d, lr scale "
             "now %.3g, quarantined %d resident walks",
@@ -1116,6 +1177,12 @@ class StreamingEmbedPipeline:
             "wall_s": float(time.perf_counter() - t0),
         }
         self._reconfigs.append(stats)
+        obs.span_event("pipeline.reconfig", dead_shard=int(dead_shard),
+                       walk_shards=int(self.walk_shards),
+                       moved_roots=stats["moved_roots"],
+                       rewalk_walks=stats["rewalk_walks"])
+        obs.inc("pipeline.reconfigs")
+        obs.set_gauge("walk.shards", self.walk_shards)
         with log_context(shard=dead_shard):
             log.info(
                 "elastic reconfiguration: %d orphan roots -> %d survivors "
@@ -1163,7 +1230,9 @@ class StreamingEmbedPipeline:
                 and new_graph.edge_cm is None):
             new_graph = new_graph.with_edge_cm()
         t0 = time.perf_counter()
-        faults.fire("refresh", graph_version(new_graph))
+        gv = int(graph_version(new_graph))
+        with obs.trace_span("refresh.enter", graph_version=gv):
+            faults.fire("refresh", gv)
         self.graph = new_graph
         self.degrees = np.asarray(new_graph.degrees(), dtype=np.int64)
 
@@ -1233,6 +1302,10 @@ class StreamingEmbedPipeline:
         jax.block_until_ready(self.phi_in)
 
         sup1 = int(jnp.sum(self._stats["supersteps"]))
+        obs.inc("refresh.count")
+        obs.observe("refresh.s", time.perf_counter() - t0)
+        obs.set_gauge("refresh.affected", int(len(affected)))
+        obs.set_gauge("refresh.graph_version", gv)
         return {
             "affected": int(len(affected)),
             "affected_frac": float(len(affected) / max(n, 1)),

@@ -100,3 +100,48 @@ def test_collective_bytes_empty_on_single_device():
     txt = _compile_text(f, jax.ShapeDtypeStruct((8,), jnp.float32))
     c = HloCostModel(txt).entry_cost()
     assert c.coll_bytes == 0.0
+
+
+# --- region attribution (launch.profile) -----------------------------------
+
+
+def test_region_map_embedding_pipeline():
+    """The walk/refresh/checked-train regions exist and the precedence
+    hazards are pinned: train_chunk_checked must NOT fall into dsgl_train,
+    and update_norm must NOT fall into norm."""
+    from repro.launch.profile import _region_of
+
+    assert _region_of("jit(train_chunk)/chunk_scan/dot") == "dsgl_train"
+    assert _region_of(
+        "jit(train_chunk_checked)/reduce") == "train_checked"
+    assert _region_of("train_chunk_checked/update_norm") == "train_checked"
+    assert _region_of("update_norm/reduce_sum") == "train_checked"
+    assert _region_of("jit(run_walk_batch)/while") == "walk_engine"
+    assert _region_of("incom/exchange_step/all_to_all") == "walk_engine"
+    assert _region_of("refresh/ring_replace/scatter") == "refresh"
+    assert _region_of("transformer/rmsnorm/mul") == "norm"
+    assert _region_of("something_unrelated") == "other"
+
+
+def test_region_attribution_named_scopes():
+    """End to end: named_scope op names survive into optimized HLO and
+    attribute() books each scope's flops to its region."""
+    from repro.launch.profile import attribute
+
+    m = 32
+
+    def f(a, b):
+        with jax.named_scope("train_chunk"):
+            x = a @ b
+        with jax.named_scope("walk_transition"):
+            y = x @ b
+        return y
+
+    txt = _compile_text(
+        f, jax.ShapeDtypeStruct((m, m), jnp.float32),
+        jax.ShapeDtypeStruct((m, m), jnp.float32))
+    prof = attribute(txt)
+    assert prof.get("dsgl_train", {}).get("flops", 0) == pytest.approx(
+        2 * m ** 3, rel=0.05)
+    assert prof.get("walk_engine", {}).get("flops", 0) == pytest.approx(
+        2 * m ** 3, rel=0.05)

@@ -488,14 +488,20 @@ class TestLogging:
         from repro.common import logging as rlog
         monkeypatch.setenv("REPRO_LOG_LEVEL", "WARNING")
         root = logging.getLogger("repro")
-        saved = (rlog._CONFIGURED, root.handlers[:], root.level)
-        root.handlers, rlog._CONFIGURED = [], False
+        saved = (root.handlers[:], root.level)
+        root.handlers = []
         try:
             rlog.get_logger("repro.test.envlvl")
             assert root.level == logging.WARNING
+            # Handler install is idempotent by tag, not by module flag.
+            n = len(root.handlers)
+            rlog.get_logger("repro.test.envlvl2")
+            assert len(root.handlers) == n
         finally:
-            rlog._CONFIGURED, root.handlers = saved[0], saved[1]
-            root.setLevel(saved[2])
+            root.handlers = saved[0]
+            root.setLevel(saved[1])
+        monkeypatch.delenv("REPRO_LOG_LEVEL")
+        rlog.refresh_log_level()
 
     def _captured(self):
         """(handler, buffer, old_stream) of the configured repro handler."""
