@@ -18,7 +18,7 @@ import traceback
 
 from benchmarks import (
     classification, e2e, generality, incom_bench, incremental, obs_overhead,
-    partitioning, recovery, scaling, sync_bytes, train_efficiency,
+    partitioning, recovery, scaling, serve, sync_bytes, train_efficiency,
     walk_efficiency,
 )
 
@@ -35,6 +35,7 @@ BENCHES = {
     "incremental": incremental.run,           # dynamic-graph refresh (PR 4)
     "recovery": recovery.run,                 # fault-tolerance MTTR (PR 6)
     "obs_overhead": obs_overhead.run,         # telemetry tax (DESIGN.md §13)
+    "serve": serve.run,                       # embedding read path (PR 10)
 }
 
 REPO_ROOT = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
@@ -337,6 +338,64 @@ def _emit_bench_obs(rec: dict) -> None:
         print(f"wrote {tpath}", flush=True)
 
 
+def _emit_bench_serve(rec: dict) -> None:
+    """Repo-root BENCH_serve.json: the embedding read path under chaos —
+    queries/s + tail latency of the slot-pool wave scheduler, and the
+    availability / served-version / freshness mix across a churn run with
+    snapshot swaps, a refresh retry storm, one torn candidate step, and a
+    swap-window fault drill (DESIGN.md §14)."""
+    bench = {
+        "workload": {
+            "num_nodes": rec.get("num_nodes"),
+            "dim": rec.get("dim"),
+            "churn_rounds": rec.get("churn_rounds"),
+        },
+        "throughput": {
+            "queries_per_s": rec.get("queries_per_s"),
+            "latency_p50_s": rec.get("latency_p50_s"),
+            "latency_p99_s": rec.get("latency_p99_s"),
+        },
+        "availability": {
+            "offered": rec.get("queries_offered"),
+            "admitted": rec.get("queries_admitted"),
+            "served": rec.get("queries_served"),
+            "availability": rec.get("availability"),
+            "shed": rec.get("shed"),
+        },
+        "versioning": {
+            "swaps": rec.get("swaps"),
+            "served_by_version": rec.get("served_by_version"),
+            "served_by_freshness": rec.get("served_by_freshness"),
+        },
+        "chaos": {
+            "ingest_retries": rec.get("ingest_retries"),
+            "refresh_deaths": rec.get("refresh_deaths"),
+            "refresh_faults_fired": rec.get("refresh_faults_fired"),
+            "swap_faults_fired": rec.get("swap_faults_fired"),
+        },
+        "oracle": {
+            "mismatches": rec.get("oracle_mismatches"),
+            "topk_checked": rec.get("oracle_topk_checked"),
+            "topk_mismatches": rec.get("oracle_topk_mismatches"),
+            "bit_identical": rec.get("oracle_bit_identical"),
+        },
+        # ISSUE 10 acceptance tracker: >= 99% of admitted queries answered
+        # across >= 3 swaps under the chaos schedule, and every response
+        # bit-identical to the NumPy oracle of its stamped version.
+        "acceptance": {
+            "availability_ge_99pct": bool(
+                rec.get("availability", 0.0) >= 0.99),
+            "swaps_ge_3": bool(rec.get("swaps", 0) >= 3),
+            "oracle_bit_identical": bool(
+                rec.get("oracle_bit_identical", False)),
+        },
+    }
+    path = os.path.join(REPO_ROOT, "BENCH_serve.json")
+    with open(path, "w") as f:
+        json.dump(bench, f, indent=1, default=float)
+    print(f"wrote {path}", flush=True)
+
+
 def main() -> int:
     p = argparse.ArgumentParser()
     p.add_argument("--full", action="store_true",
@@ -366,6 +425,8 @@ def main() -> int:
                 _emit_bench_recovery(rec)
             if name == "obs_overhead" and args.only == name:
                 _emit_bench_obs(rec)
+            if name == "serve" and args.only == name:
+                _emit_bench_serve(rec)
         except Exception as e:
             failures += 1
             print(f"    FAILED: {type(e).__name__}: {e}", flush=True)

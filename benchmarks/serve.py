@@ -1,0 +1,208 @@
+"""Fault-tolerant serving benchmark: throughput, tail latency,
+availability under churn + swaps + injected faults (DESIGN.md §14).
+
+The numbers a read path must put on the table:
+
+1. **Throughput / latency** — queries/s and p50/p99 response latency of
+   the slot-pool wave scheduler on a steady query stream (mixed pair
+   scoring and top-K), against the version the ingest loop keeps
+   refreshing.
+
+2. **Availability under chaos** — the full lifecycle under a scripted
+   fault schedule: continuous churn through ``IngestDriver`` (each drain
+   publishes a new snapshot → atomic swap), a refresh retry storm (the
+   server rides it out on the stale version), one torn candidate step
+   directory (invisible to the loader — the newest VALID snapshot
+   swaps), and one swap-window fault drill (the offer dies; the active
+   version keeps serving). Reported: availability (served / admitted —
+   the ISSUE 10 floor is >= 99%), the served-version mix, the
+   fresh/stale mix, and shed accounting per reason.
+
+3. **Oracle bit-identity** — after the run, EVERY response is re-scored
+   by the NumPy oracle of the exact version it was stamped with; one
+   mismatched bit fails the benchmark. This is the swap-atomicity proof
+   at the fleet level: no response ever mixes two versions.
+
+Repo-root ``BENCH_serve.json`` is emitted by
+``benchmarks.run --only serve``.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import numpy as np
+
+from benchmarks.common import save
+from repro.graph.generators import churn_batch, rmat_graph
+from repro.runtime.faults import FaultInjector
+from repro.runtime.ingest import IngestConfig, IngestDriver
+from repro.runtime.serve import (EmbedServer, ServeConfig, oracle_scores,
+                                 oracle_topk)
+from repro.runtime.trainer import StreamingEmbedPipeline
+
+
+def _plan(dim: int, seed: int = 3):
+    import dataclasses
+
+    from repro.core.api import EmbedConfig, make_walk_plan
+    from repro.core.dsgl import DSGLConfig
+
+    cfg = dataclasses.replace(
+        EmbedConfig(dim=dim, epochs=1, lr=0.05, delta=1e-3, max_len=40,
+                    min_len=10, window=6, negatives=4, seed=seed),
+        rng_mode="vertex")
+    policy, spec, rounds = make_walk_plan(cfg)
+    dsgl = DSGLConfig(dim=dim, epochs=1, lr=0.05, window=6, negatives=4,
+                      seed=seed)
+    return policy, spec, rounds, dsgl
+
+
+def run(quick: bool = True) -> Dict:
+    import os
+    import tempfile
+
+    n = 512 if quick else 2048
+    dim = 32
+    churn_rounds = 4 if quick else 8
+    queries_per_round = 64 if quick else 256
+
+    g = rmat_graph(n, 10, seed=3)
+    policy, spec, rounds, dsgl = _plan(dim)
+    pipe = StreamingEmbedPipeline(g, policy, spec, rounds, dsgl)
+    pipe.run()
+
+    rng = np.random.default_rng(11)
+
+    with tempfile.TemporaryDirectory() as root:
+        # Chaos schedule: a refresh retry storm on the third drain (two
+        # failed attempts, then success inside max_retries), a refresh
+        # DEATH on the fourth (all four attempts fail -> drain raises,
+        # the server moves to refresh_state="failed" and serves stale
+        # until the operator-retry drain succeeds), and one swap-window
+        # fault drill on the server's third offer.
+        ingest_faults = FaultInjector(
+            plan={"refresh": (2, 3, 5, 6, 7, 8)})
+        serve_faults = FaultInjector(plan={"swap": (2,)})
+        srv = EmbedServer(ServeConfig(batch_slots=32),
+                          faults=serve_faults)
+        drv = IngestDriver(os.path.join(root, "ing"), pipe,
+                           cfg=IngestConfig(apply_every=1, max_retries=3,
+                                            backoff_s=0.0),
+                           faults=ingest_faults, server=srv)
+
+        # One torn candidate: a step directory with garbage and no
+        # manifest, numerically newer than anything committed yet. The
+        # loader must never surface it; committed steps keep swapping.
+        torn = os.path.join(drv.ckpt_dir, "step_00000099")
+        os.makedirs(torn)
+        with open(os.path.join(torn, "phi_in.npy"), "wb") as f:
+            f.write(b"\x93NUMPY torn candidate")
+
+        # phi of every version actually swapped in, for the post-hoc
+        # oracle audit of each response.
+        phis = {srv.active_version(): srv.active_phi()}
+        qids = []
+        topk_qids = set()
+        t0 = time.perf_counter()
+        refresh_deaths = 0
+        for r in range(churn_rounds):
+            try:
+                # apply_every=1: submit absorbs (drain + publish)
+                # inline; publish swallows serve-side drill failures.
+                drv.submit(churn_batch(drv.pipeline.graph, frac=0.02,
+                                       seed=100 + r))
+            except Exception:
+                # Refresh death (retries exhausted): the batch stays
+                # durable in the WAL, the server serves the last good
+                # version STALE, and the operator-retry drain below
+                # absorbs it. Queries issued in between are the stale-ok
+                # rung of the ladder, stamped as such.
+                refresh_deaths += 1
+                for _ in range(queries_per_round // 4):
+                    qid = srv.submit(int(rng.integers(0, n)), k=8)
+                    if qid is not None:
+                        topk_qids.add(qid)
+                        qids.append(qid)
+                srv.drain()
+                drv.drain()
+            v = srv.active_version()
+            if v not in phis:
+                phis[v] = srv.active_phi()
+            for _ in range(queries_per_round):
+                u = int(rng.integers(0, n))
+                if rng.random() < 0.5:
+                    cand = rng.integers(0, n, size=int(rng.integers(1, 9)))
+                    qid = srv.submit(u, candidates=cand)
+                else:
+                    qid = srv.submit(u, k=8)
+                    if qid is not None:
+                        topk_qids.add(qid)
+                if qid is not None:
+                    qids.append(qid)
+                if len(qids) % 16 == 0:
+                    srv.tick()
+            srv.drain()
+        wall = time.perf_counter() - t0
+
+        stats = srv.stats()
+        # --- oracle audit: every response vs its stamped version --------
+        mismatches = 0
+        for qid in qids:
+            resp = srv.responses[qid]
+            phi = phis.get(resp.served_version)
+            if phi is None or (resp.ids.size
+                               and resp.ids.max() >= phi.shape[0]):
+                mismatches += 1      # unknown version / foreign id space
+                continue
+            want = oracle_scores(phi, resp.u, resp.ids)
+            if not np.array_equal(resp.scores, want):
+                mismatches += 1
+        # Top-K responses additionally must BE the oracle's top-K set.
+        topk_checked = topk_mismatches = 0
+        for qid in sorted(topk_qids)[: 128]:
+            resp = srv.responses[qid]
+            phi = phis.get(resp.served_version)
+            if phi is None:
+                topk_mismatches += 1
+                continue
+            vals, ids = oracle_topk(phi, resp.u, 8)
+            topk_checked += 1
+            if not (np.array_equal(resp.ids, ids)
+                    and np.array_equal(resp.scores, vals)):
+                topk_mismatches += 1
+
+        rec = {
+            "num_nodes": n,
+            "dim": dim,
+            "churn_rounds": churn_rounds,
+            "queries_offered": stats["offered_total"],
+            "queries_admitted": stats["admitted"],
+            "queries_served": stats["served"],
+            "availability": stats["availability"],
+            "queries_per_s": stats["served"] / max(wall, 1e-9),
+            "latency_p50_s": stats["latency_p50_s"],
+            "latency_p99_s": stats["latency_p99_s"],
+            "swaps": stats["swaps"],
+            "shed": stats["shed"],
+            "served_by_version": {str(k): v for k, v in
+                                  stats["served_by_version"].items()},
+            "served_by_freshness": stats["served_by_freshness"],
+            "ingest_retries": drv.retries,
+            "refresh_deaths": refresh_deaths,
+            "swap_faults_fired": len(serve_faults.fired),
+            "refresh_faults_fired": len(ingest_faults.fired),
+            "oracle_mismatches": mismatches,
+            "oracle_topk_mismatches": topk_mismatches,
+            "oracle_topk_checked": topk_checked,
+            "oracle_bit_identical": bool(mismatches == 0
+                                         and topk_mismatches == 0),
+            "wall_s": wall,
+        }
+    save("serve", rec)
+    print(f"serve: {rec['queries_per_s']:.0f} q/s p99="
+          f"{rec['latency_p99_s'] * 1e3:.2f}ms availability="
+          f"{rec['availability']:.4f} swaps={rec['swaps']} "
+          f"bit_identical={rec['oracle_bit_identical']}", flush=True)
+    return rec

@@ -32,7 +32,7 @@ from __future__ import annotations
 import json
 import os
 import shutil
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Iterable, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -196,7 +196,8 @@ def read_meta(root: str, step: Optional[int] = None
     return manifest["step"], manifest["meta"]
 
 
-def load_checkpoint(root: str, step: Optional[int] = None
+def load_checkpoint(root: str, step: Optional[int] = None,
+                    only: Optional[Iterable[str]] = None,
                     ) -> Tuple[int, Dict[str, np.ndarray], Dict[str, Any]]:
     """Returns (step, {path: array}, meta).
 
@@ -205,6 +206,11 @@ def load_checkpoint(root: str, step: Optional[int] = None
     invisible and the next-newest valid one is used instead. An explicitly
     requested step that is torn still raises (the caller asked for *that*
     state; silently substituting another would be worse than failing).
+
+    ``only`` restricts loading to leaves whose tree path equals one of the
+    given prefixes or lives under it (``"phi_in"`` matches ``phi_in`` and
+    ``phi_in/..."``). A serving process that just needs the embedding
+    tables must not pay for the corpus ring.
     """
     if step is None:
         step = latest_step(root)
@@ -213,9 +219,15 @@ def load_checkpoint(root: str, step: Optional[int] = None
     d = os.path.join(root, f"step_{step:08d}")
     with open(os.path.join(d, "manifest.json")) as f:
         manifest = json.load(f)
+
+    def wanted(path: str) -> bool:
+        if only is None:
+            return True
+        return any(path == p or path.startswith(p + "/") for p in only)
+
     arrays = {
         path: np.load(os.path.join(d, info["file"]))
-        for path, info in manifest["leaves"].items()
+        for path, info in manifest["leaves"].items() if wanted(path)
     }
     return manifest["step"], arrays, manifest["meta"]
 

@@ -309,6 +309,90 @@ def compact_assignment(
     return compacted, old_of_new
 
 
+def rejoin_shard(
+    graph: CSRGraph,
+    assignment: np.ndarray,
+    *,
+    num_parts: Optional[int] = None,
+    gamma: float = 2.0,
+    tau_weight: str = "degree",
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Elastic re-JOIN (the inverse of ``reassign_dead_shard``): grow a
+    k-way assignment to k+1 when a lost machine returns. The re-opened
+    shard gets id ``num_parts`` (appended — survivor ids never move, so
+    dispatch-keyed host state stays valid; ``compact_assignment`` is the
+    death-direction counterpart of this id layout).
+
+    Donor selection keeps the new shard LOCAL instead of a random
+    skim: BFS out of the most-loaded survivor's highest-degree hub,
+    donating nodes whose current shard still has surplus over the k+1-way
+    degree-mass target, until the returned shard reaches target mass (the
+    total surplus equals exactly one target share, so a connected graph
+    fills it). The donors then re-enter ``_assign_stream`` restricted to
+    the returned shard — the same Eq. 15 capacity bookkeeping as the
+    death direction, with the ``allowed`` mask inverted (orphans → the
+    survivors there, donors → the returned shard here; PS2 is skipped
+    because a single allowed partition makes the proximity argmax
+    degenerate).
+
+    Returns ``(new_assignment, moved_mask)`` over k+1 ids.
+    """
+    from collections import deque
+
+    asn = np.asarray(assignment, dtype=np.int32)
+    if num_parts is None:
+        num_parts = int(asn.max()) + 1
+    if np.any(asn < 0) or np.any(asn >= num_parts):
+        raise ValueError("assignment must be dense in [0, num_parts)")
+    k_new = num_parts + 1
+    g = graph.to_numpy()
+    deg = (g.indptr[1:] - g.indptr[:-1]).astype(np.int64)
+    load_of = (deg + 1) if tau_weight == "degree" else \
+        np.ones(asn.size, dtype=np.int64)
+
+    counts = np.zeros(k_new, dtype=np.int64)
+    np.add.at(counts, asn, load_of)
+    target = counts.sum() / k_new
+    surplus = counts[:num_parts].astype(np.float64) - target
+
+    heavy = int(np.argmax(counts[:num_parts]))
+    members = np.flatnonzero(asn == heavy)
+    seed = int(members[np.argmax(deg[members])])
+
+    donors = []
+    donated = 0.0
+    visited = np.zeros(asn.size, dtype=bool)
+    visited[seed] = True
+    frontier = deque([seed])
+    while frontier and donated < target:
+        v = frontier.popleft()
+        if surplus[asn[v]] > 0:
+            donors.append(v)
+            donated += float(load_of[v])
+            surplus[asn[v]] -= float(load_of[v])
+        for u in g.indices[g.indptr[v]:g.indptr[v + 1]]:
+            if not visited[u]:
+                visited[u] = True
+                frontier.append(u)
+    if not donors:
+        donors = [seed]       # degenerate balance: never re-open empty
+
+    new_asn = asn.copy()
+    donor_ids = np.asarray(donors, dtype=np.int64)
+    new_asn[donor_ids] = -1
+    counts2 = np.zeros(k_new, dtype=np.int64)
+    placed = np.flatnonzero(new_asn >= 0)
+    np.add.at(counts2, new_asn[placed], load_of[placed])
+    order = donor_ids[np.argsort(-deg[donor_ids], kind="stable")]
+    allowed = np.zeros(k_new, dtype=bool)
+    allowed[num_parts] = True
+    _assign_stream(g, order, new_asn, counts2, k_new, gamma,
+                   use_ps2=False, tau_weight=tau_weight, allowed=allowed)
+    assert not np.any(new_asn < 0)
+    assert np.any(new_asn == num_parts)
+    return new_asn, new_asn != asn
+
+
 def mpgp_partition_parallel(
     graph: CSRGraph,
     num_parts: int,

@@ -1064,20 +1064,24 @@ def reconfigure_partitions(
     num_shards_new: int,
     *,
     old_of_new: np.ndarray,
+    num_shards_old: Optional[int] = None,
     key_obj: object = None,
 ) -> Dict:
-    """Swap the cached partition-local store from a k-way to a k-1-way
-    layout after elastic shard reconfiguration (DESIGN.md §12).
+    """Swap the cached partition-local store to a new shard layout after
+    an elastic reconfiguration (DESIGN.md §12) — a k → k-1 shard death
+    (the default: ``num_shards_old`` falls back to ``num_shards_new + 1``)
+    or a k → k+1 re-JOIN (pass ``num_shards_old`` explicitly, with a
+    ``-1`` entry in ``old_of_new`` for the returned shard).
 
     Looks up the old ``PartitionedCSR`` in the cache; when found (the
     steady-state case — the walk engine built it on the previous round),
     the new store is assembled by ``reassign_partitioned_csr`` with the
-    non-gainer survivors' edge slices copied instead of re-scattered.
+    untouched shards' edge slices copied instead of re-scattered.
     Otherwise it falls back to a fresh ``build_partitioned_csr``. The new
     store is PRIMED into the cache under the new assignment's key so the
-    next walk round hits, and every cache entry keyed on the dead
+    next walk round hits, and every cache entry keyed on the replaced
     assignment — partition slices and learned slot-pool sizes — is
-    evicted (the pool sizing of a k-way layout says nothing about k-1).
+    evicted (the pool sizing of a k-way layout says nothing about k±1).
 
     Returns ``{"reused_shards", "rebuilt_shards", "wall_s"}``.
     """
@@ -1092,7 +1096,8 @@ def reconfigure_partitions(
     old_asn = np.asarray(old_assignment)
     new_asn = np.asarray(new_assignment)
     gv = graph_version(key_obj)
-    k_old = num_shards_new + 1
+    k_old = (num_shards_new + 1 if num_shards_old is None
+             else int(num_shards_old))
     h_old = hash(old_asn.tobytes())
 
     # Find a live old entry whose feature set (weights/cm presence) matches

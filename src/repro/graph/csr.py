@@ -416,18 +416,21 @@ def reassign_partitioned_csr(
     """Partial rebuild of a ``PartitionedCSR`` after elastic shard
     reconfiguration (DESIGN.md §12).
 
-    ``new_assignment`` is the COMPACTED k-1-way assignment produced by
-    ``mpgp.reassign_dead_shard`` + ``compact_assignment``; ``old`` is the
-    k-way store being replaced and ``old_of_new[s]`` maps survivor s back
-    to its original shard id. The node sets of non-gainer survivors are
-    untouched by reconfiguration (orphans only ever move INTO survivors),
-    so their O(|E|/k) slice rows — indices, nbr_deg, weights, edge_cm —
-    are copied from the old device slices (refit to the new padded dims)
-    instead of re-scattered; only the gainers' rows rebuild, with the arc
-    scatter masked to their arcs. ``nbr_owner`` is recomputed for EVERY
-    shard (any edge into a moved node changes owner) straight from the
-    slice's global neighbor ids. Node-level layout (owned/local_of/indptr)
-    is O(|V|) vectorized and recomputed outright.
+    Direction-agnostic: ``new_assignment`` is either the COMPACTED
+    k-1-way assignment of a shard death (``mpgp.reassign_dead_shard`` +
+    ``compact_assignment``) or the k+1-way assignment of a re-JOIN/split
+    (``mpgp.rejoin_shard``). ``old`` is the store being replaced and
+    ``old_of_new[s]`` maps new shard s back to its original shard id,
+    with ``-1`` marking a brand-new shard (re-join). Shards whose node
+    set is untouched — neither gained nodes nor (in the split direction)
+    donated any — keep their O(|E|/k) slice rows (indices, nbr_deg,
+    weights, edge_cm) copied from the old device slices (refit to the
+    new padded dims) instead of re-scattered; only changed shards'
+    rows rebuild, with the arc scatter masked to their arcs.
+    ``nbr_owner`` is recomputed for EVERY shard (any edge into a moved
+    node changes owner) straight from the slice's global neighbor ids.
+    Node-level layout (owned/local_of/indptr) is O(|V|) vectorized and
+    recomputed outright.
 
     Returns ``(store, reused)`` where ``reused`` counts survivor shards
     whose edge rows were copied, and the store is bit-identical to
@@ -464,17 +467,29 @@ def reassign_partitioned_csr(
     num_edges = int(indptr[-1])
     max_edges = max(int(e_counts.max()), 1) if num_edges else 1
 
-    # -- gainer detection ---------------------------------------------------
-    # Orphans: nodes whose OLD shard is absent from old_of_new (the dead
-    # one). Survivors that received none of them are unchanged.
-    size = 1 + int(max(old_asn.max() if n else 0,
-                       old_of_new.max() if old_of_new.size else 0))
-    survivor_mask = np.zeros(size, dtype=bool)
-    survivor_mask[old_of_new] = True
-    orphans = ~survivor_mask[old_asn] if n else np.zeros(0, dtype=bool)
+    # -- changed-shard detection (direction-agnostic) -----------------------
+    # A node "moved" iff its old shard is not the old counterpart of its
+    # new shard (a brand-new shard's -1 counterpart never matches, so all
+    # its nodes are moved). A shard rebuilds iff it gained moved nodes
+    # (the shard-death direction: orphans stream into survivors) OR, as a
+    # surviving shard, lost some (the re-join/split direction: donors
+    # stream out). Both reduce to the same two scatters.
     changed = np.zeros(num_parts, dtype=bool)
-    if n and orphans.any():
-        changed[np.unique(asn[orphans])] = True
+    if old_of_new.size:
+        changed[old_of_new < 0] = True
+    if n:
+        moved = old_of_new[asn] != old_asn
+        if moved.any():
+            changed[np.unique(asn[moved])] = True            # gainers
+            size = 1 + int(max(old_asn.max(),
+                               old_of_new.max() if old_of_new.size else -1))
+            new_of_old = np.full(size, -1, np.int64)
+            keep = old_of_new >= 0
+            new_of_old[old_of_new[keep]] = np.flatnonzero(keep)
+            donors = new_of_old[old_asn[moved]]
+            donors = donors[donors >= 0]                     # dead → gone
+            if donors.size:
+                changed[np.unique(donors)] = True            # losers
 
     has_w = old.slices.weights is not None
     has_cm = old.slices.edge_cm is not None

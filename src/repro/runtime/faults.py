@@ -67,6 +67,12 @@ class SimulatedFailure(RuntimeError):
 #: Canonical pipeline injection points (tests sweep these).
 PIPELINE_POINTS = ("superstep", "round", "tail", "ckpt_write")
 INGEST_POINTS = ("wal_append", "refresh", "refresh_splice")
+#: Serve-side injection points (DESIGN.md §14): ``swap`` fires inside the
+#: snapshot-swap window (before the commit — the active version must stay
+#: serving), ``serve_wave`` between admission and wave scoring. The
+#: ``queue_overflow`` corruption site (via ``inject``) forces admission to
+#: behave as if the queue were full — a shed drill without real load.
+SERVE_POINTS = ("swap", "serve_wave")
 
 
 @dataclasses.dataclass
@@ -83,7 +89,10 @@ class FaultInjector:
            ``inject(kind)`` — no exception is raised, the corruption is
            expected to be CAUGHT downstream (by the health watchdog).
     down_plan: {shard_id: probe_occurrence} — the shard stops answering
-           liveness probes from that occurrence on (persistent loss).
+           liveness probes from that occurrence on (persistent loss). A
+           ``(start, stop)`` tuple value makes the outage TRANSIENT: the
+           shard misses probes for occurrences ``start <= i < stop`` and
+           answers again afterwards (capacity returns — the re-JOIN drill).
     """
 
     plan: Mapping[str, Iterable[int]] = dataclasses.field(default_factory=dict)
@@ -91,14 +100,20 @@ class FaultInjector:
         default_factory=dict)
     inject_plan: Mapping[str, Iterable[int]] = dataclasses.field(
         default_factory=dict)
-    down_plan: Mapping[int, int] = dataclasses.field(default_factory=dict)
+    down_plan: Mapping[int, Any] = dataclasses.field(default_factory=dict)
 
     def __post_init__(self):
         self._plan = {p: set(occ) for p, occ in dict(self.plan).items()}
         self._torn = {p: set(occ) for p, occ in dict(self.torn_plan).items()}
         self._inject = {p: set(occ)
                         for p, occ in dict(self.inject_plan).items()}
-        self._down = {int(s): int(t) for s, t in dict(self.down_plan).items()}
+        self._down = {}
+        for s, t in dict(self.down_plan).items():
+            if isinstance(t, (tuple, list)):
+                start, stop = t
+                self._down[int(s)] = (int(start), int(stop))
+            else:
+                self._down[int(s)] = int(t)
         self.counts: Dict[str, int] = {}
         self.fired: list = []          # [(point, occurrence), ...]
         self.injected: list = []       # [(kind, occurrence), ...]
@@ -155,11 +170,18 @@ class FaultInjector:
         """Answer one liveness probe for ``shard`` (ids are the ORIGINAL
         launch-time shard names — they stay stable across elastic
         reconfigurations). A shard planned down at occurrence t misses
-        every probe from its t-th on: persistent loss, not a transient."""
+        every probe from its t-th on (persistent loss); a ``(start, stop)``
+        plan misses only inside that occurrence window (transient outage —
+        the machine comes back and may re-JOIN)."""
         i = self.counts.get(f"probe_{shard}", 0)
         self.counts[f"probe_{shard}"] = i + 1
         t = self._down.get(int(shard))
-        return t is None or i < t
+        if t is None:
+            return True
+        if isinstance(t, tuple):
+            start, stop = t
+            return not (start <= i < stop)
+        return i < t
 
     @property
     def pending(self) -> int:
@@ -205,21 +227,32 @@ class LivenessProbe:
     irreversible) reconfiguration. After reacting, callers MUST call
     ``remove(dispatch_id)`` so the probe's id space tracks the compacted
     assignment.
+
+    Removed shards keep being probed: ``hits_to_live`` consecutive
+    *successful* probes of a dead name mark it rejoin-eligible
+    (``rejoinable()``) — the symmetric hysteresis to ``misses_to_dead``,
+    so one lucky probe of a flapping machine never triggers a (costly)
+    k → k+1 re-JOIN. After growing back, callers MUST call
+    ``rejoin(name)``; the shard re-enters the dispatch space at the END
+    (matching ``mpgp.rejoin_shard``, which appends the returned shard).
     """
 
     num_shards: int
     misses_to_dead: int = 2
+    hits_to_live: int = 2
 
     def __post_init__(self):
         self.names = list(range(self.num_shards))   # index = dispatch id
         self.misses = [0] * self.num_shards
         self.dead_names: list = []
+        self.dead_hits: Dict[int, int] = {}         # name -> consecutive oks
         self.probes = 0
 
     def poll(self, faults: "FaultInjector" = NULL_INJECTOR) -> list:
         """One probe sweep; returns newly-dead shards as dispatch ids,
         in descending order (safe to reconfigure + ``remove`` one by one,
-        ids below a removed one are untouched)."""
+        ids below a removed one are untouched). Dead names are probed in
+        the same sweep so rejoin eligibility accrues."""
         newly_dead = []
         self.probes += 1
         for i, name in enumerate(self.names):
@@ -229,6 +262,11 @@ class LivenessProbe:
             self.misses[i] += 1
             if self.misses[i] >= self.misses_to_dead:
                 newly_dead.append(i)
+        for name in self.dead_names:
+            if faults.probe_ok(name):
+                self.dead_hits[name] = self.dead_hits.get(name, 0) + 1
+            else:
+                self.dead_hits[name] = 0
         return sorted(newly_dead, reverse=True)
 
     def remove(self, dispatch_id: int) -> int:
@@ -238,7 +276,24 @@ class LivenessProbe:
         name = self.names.pop(dispatch_id)
         self.misses.pop(dispatch_id)
         self.dead_names.append(name)
+        self.dead_hits[name] = 0
         return name
+
+    def rejoinable(self) -> list:
+        """Dead names that answered ``hits_to_live`` consecutive probes —
+        capacity is back and the pipeline may grow k → k+1."""
+        return [n for n in self.dead_names
+                if self.dead_hits.get(n, 0) >= self.hits_to_live]
+
+    def rejoin(self, name: int) -> int:
+        """Re-track a returned shard. It gets the HIGHEST dispatch id
+        (appended), mirroring ``mpgp.rejoin_shard``'s id layout. Returns
+        the new dispatch id."""
+        self.dead_names.remove(name)
+        self.dead_hits.pop(name, None)
+        self.names.append(name)
+        self.misses.append(0)
+        return len(self.names) - 1
 
 
 @dataclasses.dataclass

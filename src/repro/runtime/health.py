@@ -199,3 +199,95 @@ class HealthMonitor:
             "detection_kinds": [d.kind for d in self.detections],
             "detection_steps": [d.detection_steps for d in self.detections],
         }
+
+
+# ---------------------------------------------------------------------------
+# Snapshot admission gate (serve-side health, DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SnapshotGateConfig:
+    """Admission thresholds for candidate serving snapshots.
+
+    The serve-side sibling of ``HealthConfig``: instead of watching
+    per-chunk training reductions, the gate judges a whole candidate
+    embedding table before it can reach readers. The norm-spike gate uses
+    the same EMA-vs-factor shape as ``HealthMonitor`` so the two halves of
+    the health story tune the same way.
+    """
+
+    min_mean_norm: float = 1e-8     # below → degenerate (all-zero) table
+    spike_factor: float = 8.0       # mean norm > factor * EMA → reject;
+                                    # < EMA / factor → reject (collapse)
+    ema_beta: float = 0.8           # EMA decay over ADMITTED snapshots
+    warmup_admits: int = 1          # admitted snapshots before spike arms
+
+
+@dataclasses.dataclass
+class SnapshotGate:
+    """Health-gate a candidate embedding snapshot before a serve swap.
+
+    Checks, in order: every phi entry finite; embedding version strictly
+    monotonic (a re-published or rolled-back step must not regress
+    readers); graph_version monotonic (serving must never step back to a
+    pre-churn graph); mean row norm above ``min_mean_norm`` and within
+    ``spike_factor`` of the EMA over previously-admitted snapshots. A
+    divergent refresh that escaped the training watchdog is stopped here —
+    the last line of defense before readers.
+
+    ``admit`` returns ``(ok, reason)`` and never raises: the server owns
+    the reaction (keep serving the active version, count the rejection).
+    """
+
+    cfg: SnapshotGateConfig = dataclasses.field(
+        default_factory=SnapshotGateConfig)
+
+    def __post_init__(self):
+        self.norm_ema: Optional[float] = None
+        self.admits = 0
+        self.last_version: Optional[int] = None
+        self.last_graph_version: Optional[int] = None
+        self.rejections: List[Dict[str, Any]] = []
+
+    def admit(self, phi: np.ndarray, *, version: int,
+              graph_version: int = 0) -> tuple:
+        cfg = self.cfg
+        phi = np.asarray(phi)
+        reason = None
+        mean_norm = 0.0
+        if not np.all(np.isfinite(phi)):
+            reason = "nonfinite_phi"
+        elif self.last_version is not None and version <= self.last_version:
+            reason = "version_regression"
+        elif (self.last_graph_version is not None
+                and graph_version < self.last_graph_version):
+            reason = "graph_version_regression"
+        else:
+            mean_norm = float(
+                np.linalg.norm(phi.reshape(phi.shape[0], -1), axis=1).mean())
+            if mean_norm < cfg.min_mean_norm:
+                reason = "degenerate_norm"
+            elif (self.norm_ema is not None
+                    and self.admits >= cfg.warmup_admits
+                    and not (self.norm_ema / cfg.spike_factor
+                             <= mean_norm
+                             <= self.norm_ema * cfg.spike_factor)):
+                reason = "norm_spike"
+
+        if reason is not None:
+            rec = {"reason": reason, "version": int(version),
+                   "graph_version": int(graph_version),
+                   "mean_norm": mean_norm}
+            self.rejections.append(rec)
+            obs.span_event("serve.gate.reject", **rec)
+            obs.inc(f"serve.gate.rejected.{reason}")
+            return False, reason
+
+        b = cfg.ema_beta
+        self.norm_ema = (mean_norm if self.norm_ema is None
+                         else b * self.norm_ema + (1 - b) * mean_norm)
+        self.admits += 1
+        self.last_version = int(version)
+        self.last_graph_version = int(graph_version)
+        obs.inc("serve.gate.admitted")
+        return True, None

@@ -210,6 +210,7 @@ class IngestDriver:
                  faults: FaultInjector = NULL_INJECTOR,
                  sleep: Callable[[float], None] = time.sleep,
                  clock: Callable[[], float] = time.monotonic,
+                 server: Optional[Any] = None,
                  _initial_snapshot: bool = True):
         from repro.core.incremental import IncrementalRefresh
 
@@ -220,6 +221,7 @@ class IngestDriver:
         self.faults = faults
         self.sleep = sleep
         self.clock = clock
+        self.server = server            # optional EmbedServer to publish to
         self.pipeline = pipeline
         self.refresher = IncrementalRefresh(pipeline, detect=detect)
         self.ckpt_dir = os.path.join(root, cfg.snapshot_dir)
@@ -247,6 +249,7 @@ class IngestDriver:
             # The recovery base: a driver must never hold churn the WAL
             # covers without a snapshot to replay it against.
             self._snapshot()
+            self._publish()
 
     # -- ingress -----------------------------------------------------------
     def submit(self, batch: EdgeBatch) -> int:
@@ -359,6 +362,9 @@ class IngestDriver:
             self._pending = []
             self._snapshot()
             self.wal.truncate_upto(self.applied_seq)
+            if self.server is not None:
+                self.server.note_refresh("ok")
+            self._publish()
             self.drains += 1
             now = self.clock()
             for seq, _ in batches:
@@ -409,11 +415,17 @@ class IngestDriver:
                 # A failed refresh may have spliced part of the ring /
                 # mutated the overlay: restore the pre-churn snapshot
                 # before any retry so the batch is never applied on top
-                # of its own wreckage.
+                # of its own wreckage. An attached server moves to the
+                # stale-ok rung immediately — readers keep the last good
+                # version while the retry loop runs.
                 obs.span_event("ingest.retry", attempt=attempt,
                                error=type(e).__name__)
+                if self.server is not None:
+                    self.server.note_refresh("degraded")
                 self._restore_last_snapshot()
                 if attempt >= cfg.max_retries:
+                    if self.server is not None:
+                        self.server.note_refresh("failed")
                     obs.dump_flight_record(
                         "ingest_retries_exhausted", attempt=attempt,
                         error=type(e).__name__, mode=mode)
@@ -430,6 +442,22 @@ class IngestDriver:
         self.pipeline.save(self.ckpt_dir, faults=self.faults,
                            meta_extra={"applied_seq": int(self.applied_seq),
                                        "ingest": True})
+
+    def _publish(self) -> None:
+        """Offer the newest snapshot to the attached ``EmbedServer``.
+
+        Serve-side failures — a torn candidate, a gate rejection, a
+        swap-window fault drill — must never take down ingest: the server
+        keeps its active version (flight-recording terminal cases
+        itself), and the NEXT snapshot is simply offered again."""
+        if self.server is None:
+            return
+        try:
+            self.server.offer_snapshot(self.ckpt_dir)
+        except Exception as e:
+            obs.inc("ingest.publish_failed")
+            log.warning("snapshot publish failed (%s: %s); server keeps "
+                        "its active version", type(e).__name__, e)
 
     def _restore_last_snapshot(self) -> None:
         from repro.core.incremental import IncrementalRefresh
@@ -449,7 +477,8 @@ class IngestDriver:
                 refresh_kwargs: Optional[Dict[str, Any]] = None,
                 faults: FaultInjector = NULL_INJECTOR,
                 sleep: Callable[[float], None] = time.sleep,
-                clock: Callable[[], float] = time.monotonic
+                clock: Callable[[], float] = time.monotonic,
+                server: Optional[Any] = None,
                 ) -> "IngestDriver":
         """Rebuild a driver after a crash: newest valid snapshot + WAL tail.
 
@@ -469,7 +498,8 @@ class IngestDriver:
             ckpt_dir, policy, spec, dsgl_cfg, step=step)
         driver = cls(root, pipeline, detect=detect, cfg=cfg,
                      refresh_kwargs=refresh_kwargs, faults=faults,
-                     sleep=sleep, clock=clock, _initial_snapshot=False)
+                     sleep=sleep, clock=clock, server=server,
+                     _initial_snapshot=False)
         driver.applied_seq = int(meta.get("applied_seq", 0))
         tail, _ = driver.wal.replay(after_seq=driver.applied_seq)
         driver.appended_seq = (tail[-1][0] if tail else driver.applied_seq)
@@ -483,6 +513,7 @@ class IngestDriver:
         else:
             # Nothing to replay; still drop any torn tail bytes.
             driver.wal.truncate_upto(driver.applied_seq)
+            driver._publish()
         return driver
 
     def embeddings(self):

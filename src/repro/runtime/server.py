@@ -1,8 +1,12 @@
-"""Batched serving runtime: prefill + decode with continuous slot reuse.
+"""LM serving adapter: prefill + decode over the shared slot pool.
 
-A fixed pool of B slots holds in-flight requests; finished slots are
-refilled from the queue each decode tick (continuous batching). The decode
-step is the same ``serve_step`` the dry-run lowers for the decode_* cells.
+The generic slot-pool/wave machinery (continuous batching, admission,
+versioned state) lives in ``repro.runtime.serve`` — the embedding
+``EmbedServer`` is the primary consumer. This module keeps the original
+LM ``Server`` as a thin adapter over the same ``wave_batches`` refill
+order: a fixed pool of B slots holds in-flight requests; finished slots
+are refilled from the queue each decode tick. The decode step is the
+same ``serve_step`` the dry-run lowers for the decode_* cells.
 """
 
 from __future__ import annotations
@@ -16,6 +20,7 @@ import numpy as np
 
 from repro.models import zoo
 from repro.models.config import ModelConfig
+from repro.runtime.serve import wave_batches
 
 
 @dataclasses.dataclass
@@ -53,9 +58,7 @@ class Server:
         Requests inside one batch share a prompt length (padded); decode
         runs to the max requested new tokens with per-slot early stop."""
         out: List[Request] = []
-        q = list(requests)
-        while q:
-            wave, q = q[:self.scfg.batch_slots], q[self.scfg.batch_slots:]
+        for wave in wave_batches(list(requests), self.scfg.batch_slots):
             out.extend(self._serve_wave(wave))
         return out
 

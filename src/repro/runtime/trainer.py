@@ -372,6 +372,11 @@ class StreamingEmbedPipeline:
         self._lr_scale = 1.0
         self._reconfigs: list = []
         self._faults: FaultInjector = NULL_INJECTOR
+        # Snapshot hand-off hooks (DESIGN.md §14): called with
+        # (path, seq, meta) after every COMMITTED snapshot — the serving
+        # side subscribes here to learn that a new candidate version
+        # exists. Never called for torn/crashed writes.
+        self._snapshot_hooks: list = []
         self.controller = WalkCountController(**rounds_cfg)
         self.degrees = np.asarray(graph.degrees(), dtype=np.int64)
 
@@ -828,11 +833,21 @@ class StreamingEmbedPipeline:
                      self._ckpt_seq, path, self._phase, self.global_step)
         obs.inc("ckpt.writes")
         obs.set_gauge("ckpt.last_seq", self._ckpt_seq)
+        seq = self._ckpt_seq
         self._ckpt_seq += 1
         if self._ckpt_keep:
             from repro.ckpt.checkpoint import prune_steps
             prune_steps(root, self._ckpt_keep)
+        for hook in self._snapshot_hooks:
+            hook(path, seq, meta)
         return path
+
+    def add_snapshot_hook(self, hook) -> None:
+        """Subscribe ``hook(path, seq, meta)`` to committed snapshots —
+        the serve-side hand-off (an ``EmbedServer`` offer, a replication
+        push). Hooks run AFTER the atomic commit and after retention
+        pruning, so the path they see is durable."""
+        self._snapshot_hooks.append(hook)
 
     @classmethod
     def resume(cls, root: str, policy, spec, dsgl_cfg, *,
@@ -1090,7 +1105,7 @@ class StreamingEmbedPipeline:
             self._ckpt_root, self.policy, self.spec, self.cfg)
         keep = {k: self.__dict__[k] for k in (
             "health", "_ckpt_root", "_ckpt_every", "_ckpt_keep",
-            "_faults", "_reconfigs")}
+            "_faults", "_reconfigs", "_snapshot_hooks")}
         self.__dict__.update(q.__dict__)
         self.__dict__.update(keep)
         return self.global_step
@@ -1112,6 +1127,16 @@ class StreamingEmbedPipeline:
             stats = self.elastic_reconfigure(dead, faults=faults)
             stats["launch_id"] = int(name)
             liveness.remove(dead)
+            if self._ckpt_root and (self._ckpt_every or self.health):
+                self.save(self._ckpt_root, faults=faults)
+        for name in liveness.rejoinable():
+            log.info(
+                "walk shard (launch id %d) answered %d consecutive "
+                "liveness probes — growing back elastically",
+                name, liveness.hits_to_live)
+            stats = self.elastic_rejoin(faults=faults)
+            stats["launch_id"] = int(name)
+            liveness.rejoin(name)
             if self._ckpt_root and (self._ckpt_every or self.health):
                 self.save(self._ckpt_root, faults=faults)
 
@@ -1189,6 +1214,66 @@ class StreamingEmbedPipeline:
                 "(%d/%d slices reused), %d resident walks migrated in "
                 "%.3fs", stats["moved_roots"], self.walk_shards,
                 stats["reused_shards"], k - 1, rewalk, stats["wall_s"])
+        return stats
+
+    def elastic_rejoin(self, *, faults: FaultInjector = NULL_INJECTOR
+                       ) -> Dict[str, Any]:
+        """Grow back k → k+1 walk shards after capacity returns.
+
+        The returned shard re-enters the dispatch space with the HIGHEST
+        id (appended — survivors' ids never move, so in-flight host state
+        keyed by dispatch id stays valid). ``mpgp.rejoin_shard`` carves a
+        donor region out of the overloaded survivors (BFS around the most
+        loaded survivor's hub, Eq. 15 capacity bookkeeping) and the
+        partition-local CSR store rebuilds with every NON-donor slice
+        reused (``reassign_partitioned_csr``, split direction).
+
+        Unlike a shard death, NO walk data is lost or invalidated:
+        vertex-keyed walks are invariant to the shard count AND the
+        assignment (the engine's k-invariance contract), so the ring — and
+        the embedding trajectory — is untouched. Re-join is pure dispatch
+        topology: the next round simply fans out over k+1 shards.
+        """
+        from repro.core.mpgp import rejoin_shard
+        from repro.core.shard_engine import reconfigure_partitions
+
+        if self.assignment is None:
+            raise ValueError("elastic re-join needs a shard assignment")
+        if self.spec.rng_mode != "vertex":
+            raise ValueError(
+                "elastic re-join requires WalkSpec.rng_mode='vertex' "
+                "(walk dispatch must be assignment-invariant)")
+        k = self.walk_shards
+        t0 = time.perf_counter()
+        old_asn = np.asarray(self.assignment)
+        new_asn, moved = rejoin_shard(self.graph, old_asn, num_parts=k,
+                                      tau_weight="degree")
+        old_of_new = np.concatenate(
+            [np.arange(k, dtype=np.int64), [-1]])
+        eng = reconfigure_partitions(
+            self.graph, old_asn, new_asn, k + 1,
+            old_of_new=old_of_new, num_shards_old=k, key_obj=self.graph)
+        self.assignment = jnp.asarray(new_asn, jnp.int32)
+        self.walk_shards = k + 1
+        stats = {
+            "kind": "rejoin",
+            "walk_shards": int(self.walk_shards),
+            "moved_roots": int(moved.sum()),
+            "moved_frac": float(moved.mean()),
+            "reused_shards": int(eng["reused_shards"]),
+            "rebuilt_shards": int(eng["rebuilt_shards"]),
+            "wall_s": float(time.perf_counter() - t0),
+        }
+        self._reconfigs.append(stats)
+        obs.span_event("pipeline.rejoin",
+                       walk_shards=int(self.walk_shards),
+                       moved_roots=stats["moved_roots"])
+        obs.inc("pipeline.rejoins")
+        obs.set_gauge("walk.shards", self.walk_shards)
+        log.info(
+            "elastic re-join: %d donor roots -> returned shard %d "
+            "(%d/%d slices reused) in %.3fs", stats["moved_roots"], k,
+            stats["reused_shards"], k + 1, stats["wall_s"])
         return stats
 
     def refresh(self, new_graph, affected_mask: np.ndarray, *,

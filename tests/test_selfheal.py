@@ -28,7 +28,7 @@ import pytest
 from repro.core.api import EmbedConfig, make_walk_plan
 from repro.core.dsgl import DSGLConfig
 from repro.core.mpgp import (compact_assignment, mpgp_partition,
-                             reassign_dead_shard)
+                             reassign_dead_shard, rejoin_shard)
 from repro.graph.csr import (build_partitioned_csr, reassign_partitioned_csr)
 from repro.graph.delta import EdgeBatch, validate_edge_batch
 from repro.graph.generators import rmat_graph
@@ -352,6 +352,129 @@ class TestElasticReconfiguration:
         a_in, _ = p.embeddings()
         b_in, _ = q.embeddings()
         assert np.array_equal(a_in, b_in)
+
+
+# ---------------------------------------------------------------------------
+# Elastic re-JOIN: grow k-1 -> k back when capacity returns
+# ---------------------------------------------------------------------------
+
+
+class TestElasticRejoin:
+    def test_rejoin_shard_appends_nonempty_shard(self, graph, part4):
+        """Death to k=3 then re-JOIN back to 4-way: the returned shard is
+        appended (survivor placements untouched outside the donor set)."""
+        asn3, _ = compact_assignment(
+            reassign_dead_shard(graph, part4, 3, num_parts=4), 3,
+            num_parts=4)
+        asn4, moved = rejoin_shard(graph, asn3, num_parts=3)
+        assert asn4.max() == 3 and (asn4 == 3).sum() > 0
+        assert moved.any()
+        assert np.array_equal(asn4[~moved], asn3[~moved])
+        # Donated nodes all land on the returned shard.
+        assert (asn4[moved] == 3).all()
+
+    def test_rejoin_partial_rebuild_matches_fresh_build(self, graph,
+                                                        part4):
+        """Split-direction CSR rebuild (old_of_new carries a -1 for the
+        brand-new shard) equals a from-scratch build."""
+        asn3, _ = compact_assignment(
+            reassign_dead_shard(graph, part4, 3, num_parts=4), 3,
+            num_parts=4)
+        asn4, _ = rejoin_shard(graph, asn3, num_parts=3)
+        old = build_partitioned_csr(graph, asn3, 3)
+        got, reused = reassign_partitioned_csr(
+            graph, asn4, 4, old=old, old_assignment=asn3,
+            old_of_new=np.array([0, 1, 2, -1]))
+        want = build_partitioned_csr(graph, asn4, 4)
+        for field in ("indptr", "indices", "nbr_owner", "nbr_deg",
+                      "weights", "edge_cm"):
+            a, b = getattr(got.slices, field), getattr(want.slices, field)
+            if a is None:
+                assert b is None
+            else:
+                assert np.array_equal(np.asarray(a), np.asarray(b)), field
+        assert np.array_equal(np.asarray(got.local_of),
+                              np.asarray(want.local_of))
+        assert np.array_equal(got.owned, want.owned)
+        assert 0 <= reused <= 3     # donor + new shards always rebuild
+
+    def test_liveness_rejoin_hysteresis(self):
+        """A dead name needs hits_to_live consecutive OK probes; one
+        blip resets the count (a flapping machine never re-JOINs)."""
+        live = LivenessProbe(num_shards=3, misses_to_dead=1,
+                             hits_to_live=2)
+        flap = FaultInjector(down_plan={2: (0, 1)})
+        down = FaultInjector(down_plan={2: 0})
+        assert live.poll(down) == [2]
+        assert live.remove(2) == 2
+        assert live.rejoinable() == []
+        live.poll(down)                      # still down: hits reset
+        assert live.rejoinable() == []
+        live2 = LivenessProbe(num_shards=3, misses_to_dead=1,
+                              hits_to_live=2)
+        assert live2.poll(flap) == [2]       # occurrence 0: down
+        live2.remove(2)
+        live2.poll(flap)                     # occ 1: back -> 1 hit
+        assert live2.rejoinable() == []
+        live2.poll(flap)                     # occ 2: back -> 2 hits
+        assert live2.rejoinable() == [2]
+        assert live2.rejoin(2) == 2          # appended at the end
+        assert live2.names == [0, 1, 2] and live2.dead_names == []
+
+    def test_transient_outage_rejoin_is_bit_identical(self, graph, part4,
+                                                      reference4,
+                                                      tmp_path):
+        """Shard 2 goes down for a probe window mid-run, comes back, and
+        re-JOINs: the run ends at k=4 again and — by walk-RNG assignment
+        invariance — ring and phi match the fault-free k=4 run
+        bit-for-bit (re-JOIN moves NO walk data, only dispatch)."""
+        p = _pipeline(graph, assignment=part4, num_shards=4)
+        res = p.run(ckpt_root=str(tmp_path / "rejoin"),
+                    ckpt_every_rounds=2,
+                    faults=FaultInjector(down_plan={2: (1, 3)}),
+                    liveness=LivenessProbe(num_shards=4, misses_to_dead=1,
+                                           hits_to_live=1))
+        kinds = [r.get("kind", "death") for r in res["reconfigs"]]
+        assert p.walk_shards == 4
+        assert kinds.count("rejoin") == 1 and len(res["reconfigs"]) == 2
+        rejoin = [r for r in res["reconfigs"] if r.get("kind") == "rejoin"][0]
+        assert rejoin["walk_shards"] == 4 and rejoin["moved_roots"] > 0
+        assert np.array_equal(np.asarray(p.ring.walks),
+                              reference4["walks"])
+        a_in, a_out = p.embeddings()
+        assert np.array_equal(a_in, reference4["phi_in"])
+        assert np.array_equal(a_out, reference4["phi_out"])
+
+    def test_resume_after_rejoin_stays_grown(self, graph, part4,
+                                             tmp_path):
+        """The post-re-JOIN snapshot restores at k=4 — a rollback can
+        never shrink the dispatch space back to the outage layout."""
+        p = _pipeline(graph, assignment=part4, num_shards=4)
+        root = str(tmp_path / "resume_rejoin")
+        p.run(ckpt_root=root, ckpt_every_rounds=1,
+              faults=FaultInjector(down_plan={2: (1, 3)}),
+              liveness=LivenessProbe(num_shards=4, misses_to_dead=1,
+                                     hits_to_live=1))
+        assert p.walk_shards == 4
+        policy, spec, _, dsgl = _plan()
+        q = StreamingEmbedPipeline.resume(root, policy, spec, dsgl)
+        assert q.walk_shards == 4
+        a_in, _ = p.embeddings()
+        b_in, _ = q.embeddings()
+        assert np.array_equal(a_in, b_in)
+
+    def test_direct_rejoin_then_run(self, graph, part4, reference4):
+        """Explicit reconfigure -> rejoin on a fresh pipeline, then run:
+        same bits as the fault-free k=4 run."""
+        p = _pipeline(graph, assignment=part4, num_shards=4)
+        p.elastic_reconfigure(2)
+        assert p.walk_shards == 3
+        stats = p.elastic_rejoin()
+        assert stats["kind"] == "rejoin" and p.walk_shards == 4
+        assert stats["reused_shards"] + stats["rebuilt_shards"] == 4
+        p.run()
+        a_in, _ = p.embeddings()
+        assert np.array_equal(a_in, reference4["phi_in"])
 
 
 # ---------------------------------------------------------------------------
